@@ -1,0 +1,50 @@
+"""Shared benchmark utilities: datasets, timers, CSV emission."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import ANY_OVERLAP, MSTGIndex
+from repro.data import make_range_dataset
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+N = 1200 if QUICK else 3000
+D = 32
+Q = 16 if QUICK else 32
+K = 10
+
+_cache = {}
+
+
+def bench_dataset(dist: str = "uniform", n: int = None, seed: int = 0):
+    key = (dist, n or N, seed)
+    if key not in _cache:
+        _cache[key] = make_range_dataset(n=n or N, d=D, n_queries=Q,
+                                         quantize=128, dist=dist, seed=seed)
+    return _cache[key]
+
+
+def bench_index(ds=None, variants=("T", "Tp", "Tpp"), m=12, ef_con=64):
+    ds = ds or bench_dataset()
+    key = ("idx", id(ds), variants, m, ef_con)
+    if key not in _cache:
+        _cache[key] = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=variants,
+                                m=m, ef_con=ef_con)
+    return _cache[key]
+
+
+def time_call(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeats, out
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,47 @@
+"""Exp. 1 (Fig. 3/4): RRANN QPS vs recall — MSTG engines vs baselines."""
+import numpy as np
+
+from repro.core import ANY_OVERLAP, MSTGSearcher, FlatSearcher
+from repro.core.baselines import Prefiltering, Postfiltering, AcornLike
+from repro.data import (make_queries, brute_force_topk, recall_at_k,
+                        relative_distance_error)
+
+from .common import Q, K, bench_dataset, bench_index, emit, time_call
+
+
+def run():
+    ds = bench_dataset()
+    idx = bench_index(ds)
+    for sel in (0.05, 0.10):
+        qlo, qhi = make_queries(ds, ANY_OVERLAP, sel, seed=11)
+        tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                     qlo, qhi, ANY_OVERLAP, K)
+        gs = MSTGSearcher(idx)
+        fs = FlatSearcher(idx)
+        rows = [
+            ("mstg_graph", lambda: gs.search(ds.queries, qlo, qhi, ANY_OVERLAP,
+                                             k=K, ef=64)),
+            ("mstg_flat", lambda: fs.search(ds.queries, qlo, qhi, ANY_OVERLAP,
+                                            k=K)),
+            ("mstg_pruned", lambda: fs.search_pruned(ds.queries, qlo, qhi,
+                                                     ANY_OVERLAP, k=K)),
+        ]
+        base = [
+            ("prefilter", Prefiltering(ds.vectors, ds.lo, ds.hi), {}),
+            ("postfilter", Postfiltering(ds.vectors, ds.lo, ds.hi, m=12,
+                                         ef_con=64), dict(ef=64)),
+            ("acorn", AcornLike(ds.vectors, ds.lo, ds.hi, m=12, ef_con=64),
+             dict(ef=64)),
+        ]
+        for name, fn in rows:
+            dt, (ids, dd) = time_call(fn)
+            r = recall_at_k(np.asarray(ids), tids)
+            rde = relative_distance_error(np.asarray(dd), tds)
+            emit(f"exp1/{name}/sel{int(sel*100)}", dt / Q * 1e6,
+                 f"recall@10={r:.3f};qps={Q/dt:.1f};rde={rde:.4f}")
+        for name, b, kw in base:
+            dt, (ids, _) = time_call(
+                lambda: b.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=K, **kw))
+            r = recall_at_k(ids, tids)
+            emit(f"exp1/{name}/sel{int(sel*100)}", dt / Q * 1e6,
+                 f"recall@10={r:.3f};qps={Q/dt:.1f}")

@@ -1,0 +1,34 @@
+"""Exp. 2 (Fig. 5): index construction time and size."""
+import time
+
+import numpy as np
+
+from repro.core import MSTGIndex
+from repro.core.baselines import Postfiltering, AcornLike
+
+from .common import bench_dataset, bench_index, emit
+
+
+def run():
+    ds = bench_dataset()
+    idx = bench_index(ds)  # cached build
+    total_s = sum(idx.build_seconds.values())
+    emit("exp2/mstg_build", total_s * 1e6,
+         f"bytes={idx.index_bytes()};variants={len(idx.variants)}")
+    t0 = time.time()
+    post = Postfiltering(ds.vectors, ds.lo, ds.hi, m=12, ef_con=64)
+    emit("exp2/postfilter_build", (time.time() - t0) * 1e6,
+         f"bytes={post.index_bytes()}")
+    t0 = time.time()
+    ac = AcornLike(ds.vectors, ds.lo, ds.hi, m=12, ef_con=64)
+    emit("exp2/acorn_build", (time.time() - t0) * 1e6,
+         f"bytes={ac.index_bytes()}")
+    # labeled-compression effectiveness: edges vs naive multi-tree bound
+    fv = idx.variants["T"]
+    naive_edges = 0
+    for lvl in range(fv.Lv):
+        live = (fv.nbr[lvl] >= 0).sum()
+        naive_edges += live
+    emit("exp2/labels", 0.0,
+         f"stored_edges={int(naive_edges)};"
+         f"naive_pervers_bound={int(naive_edges) * fv.K}")

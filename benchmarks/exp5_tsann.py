@@ -1,0 +1,27 @@
+"""Exp. 5 (Fig. 9): TSANN — MSTG vs a TS-Graph-style per-bucket index."""
+import numpy as np
+
+from repro.core import MSTGSearcher, intervals as iv
+from repro.core.baselines import TSGraphLike
+from repro.data import brute_force_topk, recall_at_k
+
+from .common import Q, K, bench_dataset, bench_index, emit, time_call
+
+
+def run():
+    ds = bench_dataset()
+    idx = bench_index(ds)
+    t = float(np.median((ds.lo + ds.hi) / 2))
+    qlo = np.full(Q, t)
+    qhi = np.full(Q, t)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi,
+                               iv.TSANN_MASK, K)
+    gs = MSTGSearcher(idx)
+    dt, (ids, _) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
+                                               iv.TSANN_MASK, k=K, ef=64))
+    emit("exp5/mstg", dt / Q * 1e6,
+         f"recall@10={recall_at_k(np.asarray(ids), tids):.3f};qps={Q/dt:.1f}")
+    tsg = TSGraphLike(ds.vectors, ds.lo, ds.hi, n_buckets=16, m=12, ef_con=48)
+    dt, (ids, _) = time_call(lambda: tsg.search(ds.queries, qlo, qhi, k=K, ef=64))
+    emit("exp5/tsgraph", dt / Q * 1e6,
+         f"recall@10={recall_at_k(ids, tids):.3f};qps={Q/dt:.1f}")

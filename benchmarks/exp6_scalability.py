@@ -1,0 +1,24 @@
+"""Exp. 6 (Fig. 10): scalability in n (build cost + search latency)."""
+import numpy as np
+
+from repro.core import ANY_OVERLAP, MSTGIndex, MSTGSearcher
+from repro.data import make_queries, brute_force_topk, recall_at_k
+
+from .common import Q, K, QUICK, bench_dataset, emit, time_call
+
+
+def run():
+    for n in ((800, 1600) if QUICK else (1000, 2000, 4000)):
+        ds = bench_dataset(n=n, seed=5)
+        idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
+                        m=12, ef_con=64)
+        qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.1, seed=6)
+        gs = MSTGSearcher(idx)
+        dt, (ids, _) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
+                                                   ANY_OVERLAP, k=K, ef=64))
+        tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                   qlo, qhi, ANY_OVERLAP, K)
+        emit(f"exp6/n{n}", dt / Q * 1e6,
+             f"recall@10={recall_at_k(np.asarray(ids), tids):.3f};"
+             f"build_s={sum(idx.build_seconds.values()):.1f};"
+             f"bytes={idx.index_bytes()}")

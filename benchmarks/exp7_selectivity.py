@@ -1,0 +1,21 @@
+"""Exp. 7 (Fig. 12): query selectivity sweep."""
+import numpy as np
+
+from repro.core import ANY_OVERLAP, MSTGSearcher
+from repro.data import make_queries, brute_force_topk, recall_at_k
+
+from .common import Q, K, bench_dataset, bench_index, emit, time_call
+
+
+def run():
+    ds = bench_dataset()
+    idx = bench_index(ds)
+    gs = MSTGSearcher(idx)
+    for sel in (0.05, 0.1, 0.2, 0.4):
+        qlo, qhi = make_queries(ds, ANY_OVERLAP, sel, seed=17)
+        tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                   qlo, qhi, ANY_OVERLAP, K)
+        dt, (ids, _) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
+                                                   ANY_OVERLAP, k=K, ef=64))
+        emit(f"exp7/sel{int(sel*100)}", dt / Q * 1e6,
+             f"recall@10={recall_at_k(np.asarray(ids), tids):.3f};qps={Q/dt:.1f}")

@@ -1,0 +1,32 @@
+"""Kernel microbenchmarks: fused-predicate pairwise L2 (interpret mode on CPU
+— structural validation; wall-time roofline numbers come from the TPU
+dry-run artifacts, see EXPERIMENTS.md §Roofline)."""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import ANY_OVERLAP
+from repro.kernels import ops
+from repro.kernels.ref import pairwise_l2_masked_ref
+
+from .common import emit, time_call
+
+
+def run():
+    rng = np.random.default_rng(0)
+    Qn, Nn, d = 16, 2048, 64
+    q = rng.normal(0, 1, (Qn, d)).astype(np.float32)
+    c = rng.normal(0, 1, (Nn, d)).astype(np.float32)
+    lo = rng.uniform(0, 100, Nn).astype(np.float32)
+    hi = lo + 10
+    ql = np.full(Qn, 20, np.float32)
+    qh = np.full(Qn, 60, np.float32)
+    dt, _ = time_call(lambda: np.asarray(pairwise_l2_masked_ref(
+        jnp.asarray(q), jnp.asarray(c), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(ql), jnp.asarray(qh), ANY_OVERLAP)))
+    flops = 2 * Qn * Nn * d
+    emit("kernel/pairwise_ref_jnp", dt * 1e6, f"gflops={flops/dt/1e9:.2f}")
+    dt, _ = time_call(lambda: np.asarray(ops.pairwise_l2_masked(
+        q, c, lo, hi, ql, qh, ANY_OVERLAP)))
+    emit("kernel/pairwise_pallas_interpret", dt * 1e6,
+         "correctness-path; TPU perf in dry-run")

@@ -1,0 +1,28 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV. BENCH_QUICK=1 shrinks sizes."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (exp1_rrann, exp2_index_cost, exp3_rfann, exp4_ifann,
+                   exp5_tsann, exp6_scalability, exp7_selectivity,
+                   exp8_distributions, exp9_oracle, exp10_params, kernel_bench)
+    mods = [exp1_rrann, exp2_index_cost, exp3_rfann, exp4_ifann, exp5_tsann,
+            exp6_scalability, exp7_selectivity, exp8_distributions,
+            exp9_oracle, exp10_params, kernel_bench]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in mods:
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{mod.__name__},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,227 @@
+"""Exact predicate-filtered search engines (TPU-native MSTG execution).
+
+Two engines (DESIGN.md §2 "flat path"):
+
+* ``flat_search`` — fused predicate + brute-force distances over the whole
+  corpus (the MXU-roofline path; also the test/benchmark ground truth).
+* ``flat_search_pruned`` — uses the MSTG segment-tree decomposition to touch
+  only qualifying *member slices*: every decomposition node stores its members
+  grouped contiguously in insertion (=version) order, so the valid candidates
+  of a node at version x are a PREFIX of its slice. Work scales with
+  selectivity instead of n — the paper's pruning argument, executed as blocked
+  gathers + matmuls instead of graph traversal. Exact (recall 1.0) by
+  construction.
+
+Both return squared-L2 top-k.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import intervals as iv
+from . import segment_tree as st
+from .hnsw import NO_EDGE
+from .mstg import MSTGIndex
+
+INF = jnp.inf
+
+
+def _pairwise_l2(queries: jnp.ndarray, corpus: jnp.ndarray) -> jnp.ndarray:
+    """(Q, d) x (N, d) -> (Q, N) squared L2 via the MXU-friendly expansion."""
+    qn = jnp.sum(queries * queries, axis=1, keepdims=True)
+    cn = jnp.sum(corpus * corpus, axis=1)
+    return qn - 2.0 * (queries @ corpus.T) + cn[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("mask", "k", "use_kernel"))
+def flat_search(corpus: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                queries: jnp.ndarray, ql: jnp.ndarray, qh: jnp.ndarray,
+                *, mask: int, k: int, use_kernel: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact filtered k-NN: (Q, k) ids + squared distances (+inf / NO_EDGE pad
+    when fewer than k objects qualify)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        d = kops.pairwise_l2_masked(queries, corpus, lo, hi, ql, qh, mask)
+    else:
+        sel = iv.eval_predicate(mask, lo[None, :], hi[None, :],
+                                ql[:, None], qh[:, None])       # (Q, N)
+        d = jnp.where(sel, _pairwise_l2(queries, corpus), INF)
+    neg, idx = jax.lax.top_k(-d, k)
+    ids = jnp.where(jnp.isfinite(neg), idx, NO_EDGE).astype(jnp.int32)
+    return ids, -neg
+
+
+@functools.partial(jax.jit, static_argnames=("mask", "k", "block"))
+def flat_search_blocked(corpus, lo, hi, queries, ql, qh, *, mask: int, k: int,
+                        block: int = 4096):
+    """Exact filtered k-NN with a scanned running top-k: the (Q, N) distance
+    matrix never materializes in HBM — per block it lives in VMEM and only the
+    (Q, k) running winners persist. This is what makes the distributed serve
+    step compute-bound (EXPERIMENTS.md §Perf iteration 6)."""
+    N, d = corpus.shape
+    Q = queries.shape[0]
+    block = min(block, N)
+    Np = -(-N // block) * block
+    pad = Np - N
+    if pad:
+        corpus = jnp.pad(corpus, ((0, pad), (0, 0)))
+        lo = jnp.pad(lo, (0, pad), constant_values=jnp.nan)  # NaN fails all
+        hi = jnp.pad(hi, (0, pad), constant_values=jnp.nan)  # RR comparisons
+    qn = jnp.sum(queries * queries, axis=1, keepdims=True)
+
+    def body(carry, i):
+        top_d, top_i = carry
+        c = jax.lax.dynamic_slice_in_dim(corpus, i * block, block, 0)
+        l = jax.lax.dynamic_slice_in_dim(lo, i * block, block, 0)
+        h = jax.lax.dynamic_slice_in_dim(hi, i * block, block, 0)
+        cn = jnp.sum(c * c, axis=1)
+        dist = qn - 2.0 * (queries @ c.T) + cn[None, :]
+        sel = iv.eval_predicate(mask, l[None, :], h[None, :],
+                                ql[:, None], qh[:, None])
+        dist = jnp.where(sel, dist, INF)
+        ids = i * block + jnp.arange(block)
+        cat_d = jnp.concatenate([top_d, dist], axis=1)
+        cat_i = jnp.concatenate([top_i, jnp.broadcast_to(ids[None], (Q, block))
+                                 .astype(jnp.int32)], axis=1)
+        neg, pos = jax.lax.top_k(-cat_d, k)
+        return (-neg, jnp.take_along_axis(cat_i, pos, 1)), None
+
+    top0 = (jnp.full((Q, k), INF, jnp.float32),
+            jnp.full((Q, k), NO_EDGE, jnp.int32))
+    (top_d, top_i), _ = jax.lax.scan(body, top0, jnp.arange(Np // block))
+    top_i = jnp.where(jnp.isfinite(top_d), top_i, NO_EDGE)
+    return top_i, top_d
+
+
+@functools.partial(jax.jit, static_argnames=("pred_mask_bits", "k", "Kpad",
+                                              "block", "max_blocks"))
+def _pruned_search_variant(arrays: dict, lo_attr, hi_attr, queries, ql, qh,
+                           version, key_lo, key_hi, *, pred_mask_bits: int,
+                           k: int, Kpad: int, block: int, max_blocks: int):
+    """One variant's pruned scan: decomposition -> member prefixes -> blocked
+    fused distance + running top-k. ``pred_mask_bits`` re-checks the exact
+    predicate on gathered candidates (cheap; guards rank-boundary ties and
+    lets one variant serve any sub-mask of its plan)."""
+    vectors = arrays["vectors"]
+    members, member_ver = arrays["members"], arrays["member_ver"]
+    node_off = arrays["node_off"]
+    Q, d = queries.shape
+    levels, idxs, valid = jax.vmap(lambda a, b: st.decompose_jax(a, b, Kpad))(key_lo, key_hi)
+    P = levels.shape[1]
+
+    off = node_off[levels, idxs]                                  # (Q, P) slice starts
+    cnt = node_off[levels, idxs + 1] - off                        # (Q, P) member counts
+    cnt = jnp.where(valid, cnt, 0)
+
+    # valid prefix length per node at this version: member versions ascend
+    # within a slice -> binary search, vectorized over (Q, P).
+    def prefix_len(lvl, o, c, ver):
+        def bs(state, _):
+            lo_i, hi_i = state
+            mid = (lo_i + hi_i) // 2
+            v = member_ver[lvl, jnp.clip(o + mid, 0, members.shape[1] - 1)]
+            go_right = (mid < c) & (v <= ver)
+            return (jnp.where(go_right, mid + 1, lo_i),
+                    jnp.where(go_right, hi_i, mid)), None
+        iters = int(np.ceil(np.log2(max(int(members.shape[1]), 2)))) + 1
+        (lo_i, _), _ = jax.lax.scan(bs, (jnp.zeros((), jnp.int32), c), None, length=iters)
+        return lo_i
+
+    plen = jax.vmap(jax.vmap(prefix_len))(
+        levels, off, cnt.astype(jnp.int32),
+        jnp.broadcast_to(version[:, None], (Q, P)).astype(jnp.int32))
+    plen = jnp.where(valid, plen, 0)                              # (Q, P)
+
+    # blocked scan over candidate prefixes
+    cum = jnp.cumsum(plen, axis=1)
+    starts = cum - plen                                           # (Q, P) in candidate space
+    total = cum[:, -1]
+
+    top_d = jnp.full((Q, k), INF, jnp.float32)
+    top_i = jnp.full((Q, k), NO_EDGE, jnp.int32)
+
+    def body(carry, blk):
+        top_d, top_i = carry
+        pos = blk * block + jnp.arange(block)                     # (B,) candidate positions
+        # map candidate position -> (node slot, offset within prefix)
+        slot = jnp.sum(pos[None, :, None] >= cum[:, None, :], axis=2)   # (Q, B)
+        slot = jnp.clip(slot, 0, P - 1)
+        inner = pos[None, :] - jnp.take_along_axis(starts, slot, 1)
+        ok = pos[None, :] < total[:, None]
+        lvl_b = jnp.take_along_axis(levels, slot, 1)
+        off_b = jnp.take_along_axis(off, slot, 1)
+        midx = jnp.clip(off_b + inner, 0, members.shape[1] - 1)
+        cand = members[jnp.clip(lvl_b, 0, members.shape[0] - 1), midx]  # (Q, B)
+        cand_safe = jnp.where(ok, cand, 0)
+        # exact predicate re-check on raw endpoints
+        sel = iv.eval_predicate(pred_mask_bits, lo_attr[cand_safe], hi_attr[cand_safe],
+                                ql[:, None], qh[:, None]) & ok
+        diff = vectors[cand_safe] - queries[:, None, :]
+        dist = jnp.einsum("qbd,qbd->qb", diff, diff)
+        dist = jnp.where(sel, dist, INF)
+        cat_d = jnp.concatenate([top_d, dist], axis=1)
+        cat_i = jnp.concatenate([top_i, jnp.where(sel, cand, NO_EDGE)], axis=1)
+        neg, pos_k = jax.lax.top_k(-cat_d, k)
+        return (( -neg, jnp.take_along_axis(cat_i, pos_k, 1))), None
+
+    (top_d, top_i), _ = jax.lax.scan(body, (top_d, top_i), jnp.arange(max_blocks))
+    return top_i, top_d
+
+
+class FlatSearcher:
+    """Exact engines over a built MSTGIndex."""
+
+    def __init__(self, index: MSTGIndex, use_kernel: bool = False):
+        self.index = index
+        self.use_kernel = use_kernel
+        self.corpus = jnp.asarray(index.vectors)
+        self.lo = jnp.asarray(index.lo, jnp.float32)
+        self.hi = jnp.asarray(index.hi, jnp.float32)
+        self.dev = {}
+        for name, fv in index.variants.items():
+            self.dev[name] = dict(
+                vectors=self.corpus,
+                members=jnp.asarray(fv.members),
+                member_ver=jnp.asarray(fv.member_ver),
+                node_off=jnp.asarray(fv.node_off))
+
+    def search(self, queries, qlo, qhi, mask: int, k: int = 10):
+        """Full-corpus fused brute force (ground-truth grade)."""
+        ids, d = flat_search(self.corpus, self.lo, self.hi,
+                             jnp.asarray(queries, jnp.float32),
+                             jnp.asarray(qlo, jnp.float32),
+                             jnp.asarray(qhi, jnp.float32),
+                             mask=mask, k=k, use_kernel=self.use_kernel)
+        return np.asarray(ids), np.asarray(d)
+
+    def search_pruned(self, queries, qlo, qhi, mask: int, k: int = 10,
+                      block: int = 256, max_candidates: int | None = None):
+        """Tree-pruned exact search: work ∝ selectivity."""
+        queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
+        qlo_j = jnp.asarray(qlo, jnp.float32)
+        qhi_j = jnp.asarray(qhi, jnp.float32)
+        plans = self.index.plan_batch(mask, qlo, qhi)
+        n = self.index.vectors.shape[0]
+        cap = max_candidates or n
+        max_blocks = int(np.ceil(cap / block))
+        res = None
+        from .search import merge_topk
+        for variant, versions, klo, khi in plans:
+            fv = self.index.variants[variant]
+            ids, d = _pruned_search_variant(
+                self.dev[variant], self.lo, self.hi, queries, qlo_j, qhi_j,
+                jnp.asarray(versions, jnp.int32), jnp.asarray(klo, jnp.int32),
+                jnp.asarray(khi, jnp.int32), pred_mask_bits=mask,
+                k=k, Kpad=fv.Kpad, block=block, max_blocks=max_blocks)
+            res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
+        if res is None:
+            Q = queries.shape[0]
+            return (np.full((Q, k), NO_EDGE, np.int32), np.full((Q, k), np.inf, np.float32))
+        return np.asarray(res[0]), np.asarray(res[1])

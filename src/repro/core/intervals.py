@@ -1,0 +1,251 @@
+"""Range-range (RR) predicates and the MSTG query planner (paper §2, §4.4, Thm 4.1).
+
+Four atomic predicates between an object range ``[lo, hi]`` and a query range
+``[ql, qh]`` (paper Fig. 1), encoded as a bitmask so arbitrary disjunctions are a
+single int:
+
+    ① LEFT_OVERLAP     lo <= ql <= hi <= qh          (query left-overlap)
+    ② QUERY_CONTAINED  lo <= ql <= qh <= hi          (object covers query)
+    ③ RIGHT_OVERLAP    ql <= lo <= qh <= hi          (query right-overlap)
+    ④ QUERY_CONTAINING ql <= lo <= hi <= qh          (query covers object)
+
+plus the two disjoint Allen relations (Appendix A), supported standalone:
+
+    BEFORE  qh <  lo        AFTER  hi <  ql
+
+Attribute values live in a finite ordered domain ``A`` (paper's a_1 < ... < a_|A|).
+All index structures work on integer *ranks* into A; float query endpoints are
+mapped with searchsorted so predicate evaluation is exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+LEFT_OVERLAP = 1        # case ①
+QUERY_CONTAINED = 2     # case ②
+RIGHT_OVERLAP = 4       # case ③
+QUERY_CONTAINING = 8    # case ④
+BEFORE = 16             # Allen <  : whole object strictly after query
+AFTER = 32              # Allen >  : whole object strictly before query
+
+ANY_OVERLAP = LEFT_OVERLAP | QUERY_CONTAINED | RIGHT_OVERLAP | QUERY_CONTAINING
+
+_ATOMIC = (LEFT_OVERLAP, QUERY_CONTAINED, RIGHT_OVERLAP, QUERY_CONTAINING)
+
+# Problem-variant shorthands (paper Table 1).
+RFANN_MASK = QUERY_CONTAINING   # point object attr, a_i in [ql, qh]
+IFANN_MASK = QUERY_CONTAINING   # [l_i, r_i] subset of [ql, qh]
+TSANN_MASK = QUERY_CONTAINED    # ql = qh = t_q in [l_i, r_i]
+
+
+def mask_name(mask: int) -> str:
+    parts = []
+    for bit, nm in ((1, "1"), (2, "2"), (4, "3"), (8, "4"), (16, "<"), (32, ">")):
+        if mask & bit:
+            parts.append(nm)
+    return "|".join(parts) if parts else "none"
+
+
+def eval_predicate(mask, lo, hi, ql, qh):
+    """Vectorized truth of the RR predicate. Works for numpy or jax arrays.
+
+    ``lo/hi`` are object endpoints, ``ql/qh`` query endpoints; any mix of floats
+    and integer ranks is fine as long as the two sides share one coordinate
+    system.
+    """
+    out = (lo <= ql) & False  # typed all-false of broadcast shape (numpy or jax)
+    if mask & LEFT_OVERLAP:
+        out = out | ((lo <= ql) & (ql <= hi) & (hi <= qh))
+    if mask & QUERY_CONTAINED:
+        out = out | ((lo <= ql) & (qh <= hi))
+    if mask & RIGHT_OVERLAP:
+        out = out | ((ql <= lo) & (lo <= qh) & (qh <= hi))
+    if mask & QUERY_CONTAINING:
+        out = out | ((ql <= lo) & (hi <= qh))
+    if mask & BEFORE:
+        out = out | (qh < lo)
+    if mask & AFTER:
+        out = out | (hi < ql)
+    return out
+
+
+class AttributeDomain:
+    """The finite ordered attribute domain A with exact float<->rank mapping."""
+
+    def __init__(self, values: np.ndarray):
+        vals = np.unique(np.asarray(values))
+        if vals.size == 0:
+            raise ValueError("empty attribute domain")
+        self.values = vals.astype(np.float64)
+        self.K = int(vals.size)
+
+    @classmethod
+    def from_ranges(cls, lo: np.ndarray, hi: np.ndarray) -> "AttributeDomain":
+        return cls(np.concatenate([np.asarray(lo).ravel(), np.asarray(hi).ravel()]))
+
+    def rank(self, x) -> np.ndarray:
+        """Exact rank of values known to be in A."""
+        r = np.searchsorted(self.values, x, side="left")
+        return r.astype(np.int32)
+
+    # Query endpoints may fall between domain values.
+    def floor_rank(self, x) -> np.ndarray:
+        """Largest rank i with A[i] <= x, or -1."""
+        return (np.searchsorted(self.values, x, side="right") - 1).astype(np.int64)
+
+    def ceil_rank(self, x) -> np.ndarray:
+        """Smallest rank i with A[i] >= x, or K."""
+        return np.searchsorted(self.values, x, side="left").astype(np.int64)
+
+
+# MSTG index variants (paper §4.4).
+VARIANT_T = "T"       # versions: ascending l   (objects with l_i <= a_x); tree key r_i
+VARIANT_TP = "Tp"     # versions: descending r  (objects with r_i >= a_x); tree key l_i
+VARIANT_TPP = "Tpp"   # versions: descending l  (objects with l_i >= a_x); tree key r_i
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchTask:
+    """One beam search on one MSTG variant.
+
+    version   : max transformed sort-rank that is valid (objects with
+                sort_rank <= version participate); version < 0 means empty.
+    key_lo/hi : inclusive tree-key rank range (raw rank space, 0..K-1);
+                key_lo > key_hi means empty.
+    """
+
+    variant: str
+    version: int
+    key_lo: int
+    key_hi: int
+
+    def is_empty(self, K: int) -> bool:
+        return self.version < 0 or self.key_lo > self.key_hi or self.key_lo >= K
+
+
+def variants_required(mask: int) -> List[str]:
+    """Which MSTG variants a deployment must build to serve ``mask``."""
+    return sorted({t.variant for t in plan_searches_ranked(mask, 0, 0, 1, 1, 4)},
+                  reverse=True)
+
+
+def plan_searches(domain: AttributeDomain, mask: int, ql: float, qh: float) -> List[SearchTask]:
+    """Theorem 4.1 planner: any RR disjunction -> at most two SearchTasks.
+
+    (The Allen BEFORE/AFTER bits each add one more task; they reduce to RFANN
+    threshold filters, Appendix A.)
+    """
+    if ql > qh:
+        raise ValueError("query range must have ql <= qh")
+    fl = int(domain.floor_rank(ql))   # max rank with A[rank] <= ql  (or -1)
+    cl = int(domain.ceil_rank(ql))    # min rank with A[rank] >= ql  (or K)
+    fr = int(domain.floor_rank(qh))
+    cr = int(domain.ceil_rank(qh))
+    return [t for t in plan_searches_ranked(mask, fl, cl, fr, cr, domain.K)
+            if not t.is_empty(domain.K)]
+
+
+def plan_searches_ranked(mask: int, fl: int, cl: int, fr: int, cr: int, K: int) -> List[SearchTask]:
+    """Planner on pre-computed rank bounds (see ``plan_searches``).
+
+    Returns the UNFILTERED task list — the task sequence depends only on
+    ``mask``, so batched planning can align per-query parameters slot by slot;
+    per-query-empty tasks keep their slot (version < 0 or key_lo > key_hi)."""
+    tasks: List[SearchTask] = []
+    top = K - 1
+    atomic = mask & ANY_OVERLAP
+
+    def T(version, key_lo, key_hi):
+        tasks.append(SearchTask(VARIANT_T, version, key_lo, key_hi))
+
+    def Tp(version, key_lo, key_hi):
+        tasks.append(SearchTask(VARIANT_TP, version, key_lo, key_hi))
+
+    def Tpp(version, key_lo, key_hi):
+        tasks.append(SearchTask(VARIANT_TPP, version, key_lo, key_hi))
+
+    # -- the 15 non-empty atomic combinations, each <= 2 searches (Thm 4.1) --
+    if atomic == QUERY_CONTAINED:                       # {2}: l<=ql, r>=qh
+        T(fl, cr, top)
+    elif atomic == LEFT_OVERLAP:                        # {1}: l<=ql, ql<=r<=qh
+        T(fl, cl, fr)
+    elif atomic == RIGHT_OVERLAP:                       # {3}: ql<=l<=qh, r>=qh
+        Tp(top - cr, cl, fr)
+    elif atomic == QUERY_CONTAINING:                    # {4}: l>=ql, r<=qh
+        Tpp(top - cl, 0, fr)
+    elif atomic == LEFT_OVERLAP | QUERY_CONTAINED:      # {1,2}: l<=ql, r>=ql
+        T(fl, cl, top)
+    elif atomic == QUERY_CONTAINED | RIGHT_OVERLAP:     # {2,3}: l<=qh, r>=qh
+        T(fr, cr, top)
+    elif atomic == RIGHT_OVERLAP | QUERY_CONTAINING:    # {3,4}: ql<=l<=qh (r>=l free'd to r>=ql)
+        Tp(top - cl, cl, fr)
+    elif atomic == LEFT_OVERLAP | RIGHT_OVERLAP:        # {1,3}
+        T(fl, cl, fr)
+        Tp(top - cr, cl, fr)
+    elif atomic == LEFT_OVERLAP | QUERY_CONTAINING:     # {1,4}
+        T(fl, cl, fr)
+        Tpp(top - cl, 0, fr)
+    elif atomic == QUERY_CONTAINED | QUERY_CONTAINING:  # {2,4}
+        T(fl, cr, top)
+        Tpp(top - cl, 0, fr)
+    elif atomic == LEFT_OVERLAP | QUERY_CONTAINED | RIGHT_OVERLAP:      # {1,2,3}
+        T(fl, cl, top)
+        Tp(top - cr, cl, fr)
+    elif atomic == LEFT_OVERLAP | QUERY_CONTAINED | QUERY_CONTAINING:   # {1,2,4}
+        T(fl, cl, top)
+        Tpp(top - cl, 0, fr)
+    elif atomic == LEFT_OVERLAP | RIGHT_OVERLAP | QUERY_CONTAINING:     # {1,3,4}
+        T(fl, cl, fr)
+        Tp(top - cl, cl, fr)
+    elif atomic == QUERY_CONTAINED | RIGHT_OVERLAP | QUERY_CONTAINING:  # {2,3,4}
+        T(fr, cr, top)
+        Tpp(top - cl, 0, fr)
+    elif atomic == ANY_OVERLAP:                         # {1,2,3,4}: any intersection
+        T(fl, cl, top)
+        Tp(top - cl, cl, fr)
+    elif atomic != 0:
+        raise AssertionError(f"unhandled atomic mask {atomic}")
+
+    # -- Allen disjoint relations (Appendix A): RFANN threshold filters --
+    if mask & BEFORE:   # object strictly after query: l_i > qh
+        # l_i >= A[rank] where rank = first rank with value > qh
+        lo_rank = fr + 1 if cr == fr else cr  # first rank with A[rank] > qh
+        Tpp(top - lo_rank, 0, top)
+    if mask & AFTER:    # object strictly before query: r_i < ql
+        hi_rank = cl - 1 if cl == fl else fl  # last rank with A[rank] < ql
+        T(top, 0, hi_rank)
+
+    return tasks
+
+
+def check_plan_cover(mask: int, tasks: Sequence[SearchTask], rl: np.ndarray,
+                     rr: np.ndarray, fl: int, cl: int, fr: int, cr: int, K: int) -> bool:
+    """Test helper: does the union of task-candidate sets equal the predicate set?
+
+    ``rl``/``rr`` are the objects' endpoint ranks. Membership of a task is
+    evaluated on the variant's (sort_rank, tree_key) encoding.
+    """
+    top = K - 1
+    sel = np.zeros(rl.shape[0], dtype=bool)
+    for t in tasks:
+        if t.variant == VARIANT_T:
+            s, k = rl, rr
+        elif t.variant == VARIANT_TP:
+            s, k = top - rr, rl
+        else:
+            s, k = top - rl, rr
+        sel |= (s <= t.version) & (k >= t.key_lo) & (k <= t.key_hi)
+    want = eval_predicate(mask, rl, rr,
+                          np.float64(_rank_interp(fl, cl)), np.float64(_rank_interp(fr, cr)))
+    return bool(np.array_equal(sel, want))
+
+
+def _rank_interp(floor_r: int, ceil_r: int) -> float:
+    """A synthetic query coordinate in rank space: exact rank if floor==ceil,
+    else halfway between the two surrounding ranks."""
+    if floor_r == ceil_r:
+        return float(floor_r)
+    return (floor_r + ceil_r) / 2.0

@@ -1,0 +1,209 @@
+"""MSTG — multi-segment tree graph index (paper §4, Algorithms 1–3).
+
+Build is host-side and incremental, exactly the paper's recipe: objects are
+inserted in ascending order of the variant's sort key; each insertion touches
+the O(log|A|) segment-tree nodes on the root->leaf path of its tree key
+(Algorithm 1), each touched node's labeled HNSW absorbs the vector
+(Algorithm 3). Path-copying/persistence (§4.2) and label compression (§4.3)
+collapse into the per-level labeled graphs of :mod:`repro.core.hnsw` — nothing
+is ever duplicated, labels recover any version (Theorem D.1).
+
+The frozen index is a set of dense arrays per variant (DESIGN.md §2):
+
+    nbr/lab_b/lab_e : (Lv, n, S)   per-level labeled adjacency
+    sort_rank       : (n,)         version rank of each object (variant space)
+    tkey            : (n,)         tree-key rank of each object
+    entry_ids/ver   : (Lv, Kpad, E) per-(level,node) entry points
+    members/mem_ver : (Lv, n)      per-level ids grouped by node, insertion order
+    node_off        : (Lv, Kpad+1) member offsets per (level, node)
+
+Three variants (§4.4): T (asc-l, tree on r), Tp (desc-r, tree on l),
+Tpp (desc-l, tree on r). ``MSTGIndex`` builds the variants a predicate mask
+needs and plans queries via Theorem 4.1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import intervals as iv
+from . import segment_tree as st
+from .hnsw import OPEN, NO_EDGE, LabeledLevelGraph
+
+
+@dataclasses.dataclass
+class FrozenVariant:
+    variant: str
+    K: int
+    Kpad: int
+    Lv: int
+    n: int
+    sort_rank: np.ndarray
+    tkey: np.ndarray
+    nbr: np.ndarray
+    lab_b: np.ndarray
+    lab_e: np.ndarray
+    entry_ids: np.ndarray
+    entry_ver: np.ndarray
+    members: np.ndarray
+    member_ver: np.ndarray
+    node_off: np.ndarray
+
+    def nbytes(self) -> int:
+        return sum(getattr(self, f).nbytes for f in
+                   ("sort_rank", "tkey", "nbr", "lab_b", "lab_e",
+                    "entry_ids", "entry_ver", "members", "member_ver", "node_off"))
+
+    def live_edges(self) -> int:
+        return int((self.nbr != NO_EDGE).sum())
+
+
+def _variant_ranks(variant: str, rl: np.ndarray, rr: np.ndarray, K: int):
+    top = K - 1
+    if variant == iv.VARIANT_T:
+        return rl.astype(np.int32), rr.astype(np.int32)
+    if variant == iv.VARIANT_TP:
+        return (top - rr).astype(np.int32), rl.astype(np.int32)
+    if variant == iv.VARIANT_TPP:
+        return (top - rl).astype(np.int32), rr.astype(np.int32)
+    raise ValueError(f"unknown variant {variant}")
+
+
+def build_variant(vectors: np.ndarray, rl: np.ndarray, rr: np.ndarray, K: int,
+                  variant: str, m: int = 16, ef_con: int = 100,
+                  m_max: Optional[int] = None, n_entries: int = 4,
+                  progress: Optional[int] = None) -> FrozenVariant:
+    """Algorithms 1+2: incremental MSTG construction for one variant."""
+    n = vectors.shape[0]
+    Kpad = st.padded_domain(K)
+    Lv = st.num_levels(Kpad)
+    sort_rank, tkey = _variant_ranks(variant, rl, rr, K)
+    order = np.argsort(sort_rank, kind="stable")
+
+    levels = [LabeledLevelGraph(vectors, m=m, ef_con=ef_con, m_max=m_max,
+                                n_entries=n_entries) for _ in range(Lv)]
+    t0 = time.time()
+    for i, u in enumerate(order):
+        u = int(u)
+        ver = int(sort_rank[u])
+        key = int(tkey[u])
+        for lvl in range(Lv):
+            node = key >> (Lv - 1 - lvl)
+            levels[lvl].insert(u, node, ver)
+        if progress and (i + 1) % progress == 0:
+            print(f"  [{variant}] inserted {i + 1}/{n} ({time.time() - t0:.1f}s)")
+
+    # freeze adjacency with a uniform slot count across levels
+    S = max(max(g.max_slots(n) for g in levels), 1)
+    nbr = np.full((Lv, n, S), NO_EDGE, dtype=np.int32)
+    lab_b = np.zeros((Lv, n, S), dtype=np.int32)
+    lab_e = np.zeros((Lv, n, S), dtype=np.int32)
+    for lvl, g in enumerate(levels):
+        t, b, e = g.freeze(n, slots=S)
+        nbr[lvl], lab_b[lvl], lab_e[lvl] = t, b, e
+
+    E = n_entries
+    entry_ids = np.full((Lv, Kpad, E), NO_EDGE, dtype=np.int32)
+    entry_ver = np.full((Lv, Kpad, E), OPEN, dtype=np.int32)
+    members = np.zeros((Lv, n), dtype=np.int32)
+    member_ver = np.full((Lv, n), OPEN, dtype=np.int32)
+    node_off = np.zeros((Lv, Kpad + 1), dtype=np.int32)
+    for lvl, g in enumerate(levels):
+        pos = 0
+        counts = np.zeros(Kpad + 1, dtype=np.int64)
+        for node in range(1 << lvl):
+            mem = g.node_members.get(node, [])
+            counts[node] = len(mem)
+            if mem:
+                vers = g.node_member_vers[node]
+                members[lvl, pos:pos + len(mem)] = mem
+                member_ver[lvl, pos:pos + len(mem)] = vers
+                pos += len(mem)
+                ent = mem[:E]
+                entry_ids[lvl, node, :len(ent)] = ent
+                entry_ver[lvl, node, :len(ent)] = vers[:len(ent)]
+        node_off[lvl, 1:] = np.cumsum(counts[:-1])[:Kpad]
+    return FrozenVariant(variant=variant, K=K, Kpad=Kpad, Lv=Lv, n=n,
+                         sort_rank=sort_rank, tkey=tkey, nbr=nbr, lab_b=lab_b,
+                         lab_e=lab_e, entry_ids=entry_ids, entry_ver=entry_ver,
+                         members=members, member_ver=member_ver, node_off=node_off)
+
+
+class MSTGIndex:
+    """The paper's index: builds the variants required by a predicate mask and
+    plans queries per Theorem 4.1. Search execution lives in
+    :mod:`repro.core.search` (graph engine) and :mod:`repro.core.flat` (exact
+    block engine)."""
+
+    def __init__(self, vectors: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+                 mask: int = iv.ANY_OVERLAP, variants: Optional[Sequence[str]] = None,
+                 m: int = 16, ef_con: int = 100, m_max: Optional[int] = None,
+                 n_entries: int = 4, domain: Optional[iv.AttributeDomain] = None,
+                 progress: Optional[int] = None):
+        vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+        lo = np.asarray(lo, dtype=np.float64)
+        hi = np.asarray(hi, dtype=np.float64)
+        if np.any(lo > hi):
+            raise ValueError("object ranges must satisfy lo <= hi")
+        self.vectors = vectors
+        self.lo, self.hi = lo, hi
+        self.domain = domain or iv.AttributeDomain.from_ranges(lo, hi)
+        self.rl = self.domain.rank(lo)
+        self.rr = self.domain.rank(hi)
+        self.params = dict(m=m, ef_con=ef_con, m_max=m_max, n_entries=n_entries)
+        if variants is None:
+            variants = iv.variants_required(mask if mask else iv.ANY_OVERLAP)
+        self.build_seconds: Dict[str, float] = {}
+        self.variants: Dict[str, FrozenVariant] = {}
+        for v in variants:
+            t0 = time.time()
+            self.variants[v] = build_variant(
+                vectors, self.rl, self.rr, self.domain.K, v, m=m, ef_con=ef_con,
+                m_max=m_max, n_entries=n_entries, progress=progress)
+            self.build_seconds[v] = time.time() - t0
+
+    # ---- planning ----
+    def plan(self, mask: int, ql: float, qh: float) -> List[iv.SearchTask]:
+        tasks = iv.plan_searches(self.domain, mask, ql, qh)
+        missing = {t.variant for t in tasks} - set(self.variants)
+        if missing:
+            raise ValueError(f"mask {iv.mask_name(mask)} needs variants {missing}; "
+                             f"built: {sorted(self.variants)}")
+        return tasks
+
+    def plan_batch(self, mask: int, ql: np.ndarray, qh: np.ndarray):
+        """Vectorized planning: for a fixed mask the task *templates* (variant
+        sequence) are query-independent; versions/key bounds vary per query.
+        Returns a list of (variant, version(Q,), key_lo(Q,), key_hi(Q,))."""
+        ql = np.asarray(ql, dtype=np.float64)
+        qh = np.asarray(qh, dtype=np.float64)
+        Q = ql.shape[0]
+        tmpl = iv.plan_searches_ranked(mask, 0, 0, self.domain.K - 1,
+                                       self.domain.K - 1, self.domain.K)
+        fl = self.domain.floor_rank(ql)
+        cl = self.domain.ceil_rank(ql)
+        fr = self.domain.floor_rank(qh)
+        cr = self.domain.ceil_rank(qh)
+        out = []
+        for slot, t0 in enumerate(tmpl):
+            versions = np.empty(Q, np.int64)
+            klo = np.empty(Q, np.int64)
+            khi = np.empty(Q, np.int64)
+            for qi in range(Q):
+                # the task sequence is mask-determined, so slots align per query
+                t = iv.plan_searches_ranked(mask, int(fl[qi]), int(cl[qi]),
+                                            int(fr[qi]), int(cr[qi]), self.domain.K)[slot]
+                assert t.variant == t0.variant
+                versions[qi], klo[qi], khi[qi] = t.version, t.key_lo, t.key_hi
+            out.append((t0.variant, versions, klo, khi))
+        return out
+
+    def index_bytes(self) -> int:
+        return sum(v.nbytes() for v in self.variants.values())
+
+    def predicate_select(self, mask: int, ql: float, qh: float) -> np.ndarray:
+        return np.asarray(iv.eval_predicate(mask, self.lo, self.hi,
+                                            float(ql), float(qh)))

@@ -1,0 +1,242 @@
+"""Batched MSTG graph search in JAX (paper Algorithm 4, generalized §4.1/§4.4).
+
+TPU-native execution of the paper's search: one ``lax.while_loop`` advances a
+whole query batch; each step expands the closest unexpanded pool vertex per
+query with
+
+    1. one gather from the per-level labeled adjacency (the decomposition nodes
+       are disjoint, so a vertex's neighbors live at exactly one level),
+    2. label masking  b <= version <= e  (this IS the paper's "never traverse a
+       non-qualifying vertex" guarantee — edges only connect qualifying members),
+    3. a batched distance evaluation (Pallas kernel on TPU, jnp fallback), and
+    4. a sorted pool merge (keep the L best).
+
+Termination matches Algorithm 4: a query is done when its L best are all
+expanded. Results for two-task plans (Theorem 4.1) are merged with id-dedupe.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import segment_tree as st
+from .hnsw import NO_EDGE
+from .mstg import FrozenVariant, MSTGIndex
+
+INF = jnp.inf
+
+
+class DeviceVariant:
+    """FrozenVariant arrays staged on device."""
+
+    def __init__(self, fv: FrozenVariant, vectors: np.ndarray):
+        self.meta = fv
+        self.vectors = jnp.asarray(vectors, jnp.float32)
+        self.sort_rank = jnp.asarray(fv.sort_rank)
+        self.tkey = jnp.asarray(fv.tkey)
+        self.nbr = jnp.asarray(fv.nbr)
+        self.lab_b = jnp.asarray(fv.lab_b)
+        self.lab_e = jnp.asarray(fv.lab_e)
+        self.entry_ids = jnp.asarray(fv.entry_ids)
+        self.entry_ver = jnp.asarray(fv.entry_ver)
+        self.members = jnp.asarray(fv.members)
+        self.member_ver = jnp.asarray(fv.member_ver)
+        self.node_off = jnp.asarray(fv.node_off)
+
+    def tree(self):
+        return dict(vectors=self.vectors, sort_rank=self.sort_rank,
+                    tkey=self.tkey, nbr=self.nbr, lab_b=self.lab_b,
+                    lab_e=self.lab_e, entry_ids=self.entry_ids,
+                    entry_ver=self.entry_ver, members=self.members,
+                    member_ver=self.member_ver, node_off=self.node_off)
+
+
+def _batched_l2(queries: jnp.ndarray, cand_vecs: jnp.ndarray) -> jnp.ndarray:
+    """(Q, d) x (Q, S, d) -> (Q, S) squared L2. jnp fallback; the Pallas path
+    is selected in repro.kernels.ops."""
+    diff = cand_vecs - queries[:, None, :]
+    return jnp.einsum("qsd,qsd->qs", diff, diff)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps", "Kpad",
+                                              "use_kernel", "fanout",
+                                              "with_steps"))
+def mstg_graph_search(arrays: dict, queries: jnp.ndarray, version: jnp.ndarray,
+                      key_lo: jnp.ndarray, key_hi: jnp.ndarray, *, k: int,
+                      ef: int, max_steps: int, Kpad: int,
+                      use_kernel: bool = False, fanout: int = 1,
+                      with_steps: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched beam search on one MSTG variant.
+
+    arrays   : DeviceVariant.tree()
+    queries  : (Q, d) float32
+    version  : (Q,) int32 — max valid sort rank (< 0 => empty task)
+    key_lo/hi: (Q,) int32 — inclusive tree-key range (lo > hi => empty)
+    fanout   : frontier vertices expanded per loop step (beyond-paper: TPU
+               amortizes loop latency over fanout x S distance evals; see
+               EXPERIMENTS.md §Perf)
+    returns  : ids (Q, k) int32 (NO_EDGE pad), dists (Q, k) float32 (+inf pad)
+    """
+    vectors = arrays["vectors"]
+    tkey = arrays["tkey"]
+    nbr, lab_b, lab_e = arrays["nbr"], arrays["lab_b"], arrays["lab_e"]
+    entry_ids, entry_ver = arrays["entry_ids"], arrays["entry_ver"]
+    n = vectors.shape[0]
+    Q = queries.shape[0]
+    S = nbr.shape[2]
+    L = ef
+    version = version.astype(jnp.int32)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        dist_fn = lambda q, c: kops.gathered_l2(q, c)
+    else:
+        dist_fn = _batched_l2
+
+    # --- decomposition nodes per query ---
+    levels, idxs, valid = jax.vmap(lambda a, b: st.decompose_jax(a, b, Kpad))(key_lo, key_hi)
+    P = levels.shape[1]
+
+    # --- initial pool from per-node entry points ---
+    ent = entry_ids[levels, idxs]            # (Q, P, E)
+    ever = entry_ver[levels, idxs]           # (Q, P, E)
+    ent_ok = valid[:, :, None] & (ent != NO_EDGE) & (ever <= version[:, None, None])
+    ent = jnp.where(ent_ok, ent, 0).reshape(Q, -1)
+    ent_ok = ent_ok.reshape(Q, -1)
+    ed = dist_fn(queries, vectors[ent])
+    ed = jnp.where(ent_ok, ed, INF)
+    ent = jnp.where(ent_ok, ent, NO_EDGE)
+
+    order = jnp.argsort(ed, axis=1)
+    take = min(L, ent.shape[1])
+    pool_ids = jnp.full((Q, L), NO_EDGE, jnp.int32)
+    pool_d = jnp.full((Q, L), INF, jnp.float32)
+    pool_ids = pool_ids.at[:, :take].set(
+        jnp.take_along_axis(ent, order, 1)[:, :take].astype(jnp.int32))
+    pool_d = pool_d.at[:, :take].set(jnp.take_along_axis(ed, order, 1)[:, :take])
+    expanded = jnp.zeros((Q, L), bool)
+
+    visited = jnp.zeros((Q, n), bool)
+    qix = jnp.arange(Q)
+    ent_safe = jnp.where(ent == NO_EDGE, 0, ent)
+    visited = visited.at[qix[:, None], ent_safe].max(ent != NO_EDGE)
+
+    def active_fn(pool_d, expanded):
+        return jnp.any(~expanded & jnp.isfinite(pool_d), axis=1)
+
+    def cond(state):
+        pool_ids, pool_d, expanded, visited, step = state
+        return (step < max_steps) & jnp.any(active_fn(pool_d, expanded))
+
+    F = fanout
+
+    def body(state):
+        pool_ids, pool_d, expanded, visited, step = state
+        frontier_d = jnp.where(expanded, INF, pool_d)
+        # expand the F closest unexpanded pool vertices at once
+        neg_fd, slot = jax.lax.top_k(-frontier_d, F)               # (Q, F)
+        act = jnp.isfinite(-neg_fd)
+        u = jnp.take_along_axis(pool_ids, slot, 1)                 # (Q, F)
+        u_safe = jnp.where(act, u, 0)
+        expanded = expanded.at[qix[:, None], slot].max(act)
+
+        # which decomposition node covers u -> its level   (Q, F)
+        start, end = st.node_ranges_jax(levels, idxs, Kpad)        # (Q, P)
+        t = tkey[u_safe][..., None]                                # (Q, F, 1)
+        inside = (valid[:, None, :] & (t >= start[:, None, :]) &
+                  (t <= end[:, None, :]))                          # (Q, F, P)
+        lvl = jnp.max(jnp.where(inside, levels[:, None, :], -1), axis=-1)
+        lvl_safe = jnp.clip(lvl, 0, nbr.shape[0] - 1)
+        tg = nbr[lvl_safe, u_safe].reshape(Q, F * S)               # (Q, F*S)
+        b = lab_b[lvl_safe, u_safe].reshape(Q, F * S)
+        e = lab_e[lvl_safe, u_safe].reshape(Q, F * S)
+        ok = jnp.repeat(act & (lvl >= 0), S, axis=1) & (tg != NO_EDGE)
+        ok &= (b <= version[:, None]) & (version[:, None] <= e)
+        tg_safe = jnp.where(ok, tg, 0)
+        # dedupe within the step: keep only the first occurrence of each id
+        seen = visited[qix[:, None], tg_safe]
+        if F > 1:
+            first = jnp.ones_like(ok)
+            srt = jnp.argsort(tg_safe, axis=1)
+            tg_sorted = jnp.take_along_axis(tg_safe, srt, 1)
+            dup_sorted = jnp.concatenate(
+                [jnp.zeros((Q, 1), bool),
+                 tg_sorted[:, 1:] == tg_sorted[:, :-1]], axis=1)
+            inv = jnp.argsort(srt, axis=1)
+            first = ~jnp.take_along_axis(dup_sorted, inv, 1)
+            ok &= first
+        new = ok & ~seen
+        visited = visited.at[qix[:, None], tg_safe].max(new)
+
+        nd = dist_fn(queries, vectors[tg_safe])
+        nd = jnp.where(new, nd, INF)
+
+        cat_ids = jnp.concatenate([pool_ids, jnp.where(new, tg, NO_EDGE)], axis=1)
+        cat_d = jnp.concatenate([pool_d, nd], axis=1)
+        cat_exp = jnp.concatenate([expanded, jnp.zeros((Q, F * S), bool)], axis=1)
+        neg, order = jax.lax.top_k(-cat_d, L)
+        pool_ids = jnp.take_along_axis(cat_ids, order, 1)
+        pool_d = -neg
+        expanded = jnp.take_along_axis(cat_exp, order, 1)
+        return pool_ids, pool_d, expanded, visited, step + 1
+
+    state = (pool_ids, pool_d, expanded, visited, jnp.array(0, jnp.int32))
+    pool_ids, pool_d, expanded, visited, n_steps = jax.lax.while_loop(
+        cond, body, state)
+    if with_steps:
+        return pool_ids[:, :k], pool_d[:, :k], n_steps
+    return pool_ids[:, :k], pool_d[:, :k]
+
+
+def merge_topk(ids_a, d_a, ids_b, d_b, k: int):
+    """Merge two (Q, k) result sets, dropping duplicate ids (Theorem 4.1 plans
+    may overlap at predicate boundaries)."""
+    ids = jnp.concatenate([ids_a, ids_b], axis=1)
+    d = jnp.concatenate([d_a, d_b], axis=1)
+    order = jnp.argsort(d, axis=1)
+    ids = jnp.take_along_axis(ids, order, 1)
+    d = jnp.take_along_axis(d, order, 1)
+    # mark duplicates of any earlier (closer) id
+    dup = (ids[:, :, None] == ids[:, None, :])
+    earlier = jnp.tril(jnp.ones((ids.shape[1], ids.shape[1]), bool), k=-1)
+    is_dup = jnp.any(dup & earlier[None] & (ids[:, None, :] != NO_EDGE), axis=2)
+    d = jnp.where(is_dup, INF, d)
+    ids = jnp.where(is_dup, NO_EDGE, ids)
+    order = jnp.argsort(d, axis=1)[:, :k]
+    return jnp.take_along_axis(ids, order, 1), jnp.take_along_axis(d, order, 1)
+
+
+class MSTGSearcher:
+    """Host-facing search API over a built MSTGIndex (graph engine)."""
+
+    def __init__(self, index: MSTGIndex, use_kernel: bool = False):
+        self.index = index
+        self.use_kernel = use_kernel
+        self.dev = {name: DeviceVariant(fv, index.vectors)
+                    for name, fv in index.variants.items()}
+
+    def search(self, queries: np.ndarray, qlo: np.ndarray, qhi: np.ndarray,
+               mask: int, k: int = 10, ef: int = 64,
+               max_steps: Optional[int] = None,
+               fanout: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+        queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
+        plans = self.index.plan_batch(mask, qlo, qhi)
+        steps = max_steps or ((4 * ef + 64) // max(fanout, 1) + 8)
+        res = None
+        for variant, versions, klo, khi in plans:
+            dv = self.dev[variant]
+            ids, d = mstg_graph_search(
+                dv.tree(), queries, jnp.asarray(versions, jnp.int32),
+                jnp.asarray(klo, jnp.int32), jnp.asarray(khi, jnp.int32),
+                k=k, ef=ef, max_steps=steps, Kpad=dv.meta.Kpad,
+                use_kernel=self.use_kernel, fanout=fanout)
+            res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
+        if res is None:
+            Q = queries.shape[0]
+            return (np.full((Q, k), NO_EDGE, np.int32), np.full((Q, k), np.inf, np.float32))
+        return np.asarray(res[0]), np.asarray(res[1])

@@ -1,0 +1,135 @@
+"""Perfect-binary segment tree over the rank domain (paper §4.1–4.2).
+
+The tree is *structural only* (paper: "a segment tree T^0 based on A without
+objects"): node (level, idx) at level ``lvl`` (root = level 0) covers ranks
+``[idx * W, (idx+1) * W - 1]`` with ``W = Kpad >> lvl`` and ``Kpad`` the padded
+power-of-two domain size. Object membership lives in the per-level adjacency
+arrays built by :mod:`repro.core.mstg`.
+
+Key property used throughout the system: the canonical decomposition of any rank
+range returns nodes that are pairwise disjoint in key space and number at most 2
+per level — so every qualifying vertex belongs to exactly ONE decomposition node,
+and per-LEVEL dense adjacency arrays give one-gather neighbor lookups on TPU.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def padded_domain(K: int) -> int:
+    """Smallest power of two >= K."""
+    p = 1
+    while p < K:
+        p <<= 1
+    return p
+
+
+def num_levels(Kpad: int) -> int:
+    return int(Kpad).bit_length()  # log2(Kpad) + 1 for powers of two
+
+
+def node_range(level: int, idx: int, Kpad: int) -> Tuple[int, int]:
+    w = Kpad >> level
+    return idx * w, (idx + 1) * w - 1
+
+
+def decompose(lo: int, hi: int, Kpad: int) -> List[Tuple[int, int]]:
+    """Canonical cover of rank range [lo, hi] (inclusive) as (level, idx) nodes."""
+    if lo > hi:
+        return []
+    lo = max(0, int(lo))
+    hi = min(Kpad - 1, int(hi))
+    if lo > hi:
+        return []
+    out = []
+    a, b = lo + Kpad, hi + Kpad + 1  # half-open in heap coordinates
+    while a < b:
+        if a & 1:
+            out.append(a)
+            a += 1
+        if b & 1:
+            b -= 1
+            out.append(b)
+        a >>= 1
+        b >>= 1
+    nodes = []
+    for h in out:
+        level = h.bit_length() - 1
+        nodes.append((level, h - (1 << level)))
+    nodes.sort()
+    return nodes
+
+
+def max_cover_nodes(Kpad: int) -> int:
+    """Static bound on decomposition size (2 emission slots per level)."""
+    return 2 * num_levels(Kpad)
+
+
+def decompose_jax(lo, hi, Kpad: int):
+    """JIT-able canonical decomposition.
+
+    Returns (levels, idxs, valid) int32 arrays of static length
+    ``max_cover_nodes(Kpad)``. ``lo > hi`` yields an all-invalid result. Inputs
+    may be traced scalars; they are clipped to [0, Kpad-1].
+    """
+    P = max_cover_nodes(Kpad)
+    Lv = num_levels(Kpad)
+    lo_raw, hi_raw = jnp.asarray(lo), jnp.asarray(hi)
+    empty = (lo_raw > hi_raw) | (hi_raw < 0) | (lo_raw > Kpad - 1)
+    lo = jnp.clip(lo, 0, Kpad - 1).astype(jnp.int32)
+    hi = jnp.clip(hi, 0, Kpad - 1).astype(jnp.int32)
+    a0 = jnp.where(empty, 2 * Kpad, lo + Kpad).astype(jnp.int32)
+    b0 = jnp.where(empty, 2 * Kpad, hi + Kpad + 1).astype(jnp.int32)
+
+    def body(i, carry):
+        a, b, heaps = carry
+        emit_a = (a < b) & ((a & 1) == 1)
+        heaps = heaps.at[2 * i].set(jnp.where(emit_a, a, 0))
+        a = a + emit_a.astype(jnp.int32)
+        emit_b = (a < b) & ((b & 1) == 1)
+        b = b - emit_b.astype(jnp.int32)
+        heaps = heaps.at[2 * i + 1].set(jnp.where(emit_b, b, 0))
+        return a >> 1, b >> 1, heaps
+
+    heaps0 = jnp.zeros((P,), jnp.int32)
+    _, _, heaps = jax.lax.fori_loop(0, Lv, body, (a0, b0, heaps0))
+    valid = heaps > 0
+    safe = jnp.maximum(heaps, 1)
+    levels = (jnp.log2(safe.astype(jnp.float32)) + 1e-4).astype(jnp.int32)
+    idxs = safe - (1 << levels).astype(jnp.int32)
+    return (jnp.where(valid, levels, 0).astype(jnp.int32),
+            jnp.where(valid, idxs, 0).astype(jnp.int32),
+            valid)
+
+
+def node_ranges_jax(levels, idxs, Kpad: int):
+    """Inclusive key ranges covered by (levels, idxs) nodes."""
+    w = (Kpad >> levels).astype(jnp.int32)
+    start = idxs * w
+    return start, start + w - 1
+
+
+def leaf_path_nodes(key_rank: int, Kpad: int) -> List[Tuple[int, int]]:
+    """All (level, idx) ancestors of the leaf for ``key_rank`` — the O(log|A|)
+    nodes an insertion touches (paper Algorithm 1)."""
+    Lv = num_levels(Kpad)
+    return [(lvl, int(key_rank) >> (Lv - 1 - lvl)) for lvl in range(Lv)]
+
+
+def level_shift(level: int, Kpad: int) -> int:
+    return num_levels(Kpad) - 1 - level
+
+
+def vertex_levels_for_cover(tkeys, levels, idxs, valid, Kpad: int):
+    """For each vertex key in ``tkeys``, the level of the (unique) covering
+    decomposition node, or -1 if uncovered. Vectorized: (..., P) comparison."""
+    start, end = node_ranges_jax(levels, idxs, Kpad)         # (P,)
+    t = tkeys[..., None]
+    inside = valid & (t >= start) & (t <= end)               # (..., P)
+    lvl = jnp.max(jnp.where(inside, levels, -1), axis=-1)
+    return lvl.astype(jnp.int32)

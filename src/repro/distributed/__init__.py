@@ -1,0 +1,2 @@
+from .topk import sharded_flat_topk, tournament_topk_merge, global_topk_merge
+from .sharding import batch_spec, replicated, shard_or_replicate

@@ -1,0 +1,50 @@
+"""Small sharding helpers shared by launch/serving/training."""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def mesh_axis_size(mesh: Mesh, axes: Union[str, Sequence[str], None]) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def shard_or_replicate(mesh: Mesh, dim_size: int,
+                       axes: Union[str, Sequence[str], None]):
+    """Use ``axes`` for this dim only if it divides evenly, else replicate.
+
+    Small models (gemma3-1b has 4 heads) or tiny batches (long_500k has B=1)
+    cannot shard every logical axis on a 16-wide mesh — replication is the
+    correct degradation and is recorded by the dry-run memory analysis."""
+    if axes is None:
+        return None
+    size = mesh_axis_size(mesh, axes)
+    if size <= 1 or dim_size % size != 0:
+        return None
+    return axes if isinstance(axes, str) else tuple(axes)
+
+
+def batch_spec(mesh: Mesh, batch: int, axes=("pod", "data")) -> P:
+    """Batch dim over (pod, data) when divisible; degrade gracefully."""
+    present = tuple(a for a in axes if a in mesh.shape)
+    while present and (mesh_axis_size(mesh, present) == 0 or
+                       batch % mesh_axis_size(mesh, present) != 0):
+        present = present[1:]
+    return P(present if present else None)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def named(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))

@@ -1,0 +1,91 @@
+"""Distributed filtered top-k over a corpus-sharded MSTG deployment.
+
+Architecture (DESIGN.md §5): the corpus (vectors + ranges [+ per-shard MSTG
+arrays]) is sharded along ``corpus_axis``; each device computes a local
+filtered top-k, then shards exchange results. Two merge schedules:
+
+* ``all_gather`` — every shard gathers all (Q, k) lists, one collective,
+  bytes/device ∝ D·Q·k. Simple, latency-optimal for small D.
+* ``tournament`` — log2(D) ``ppermute`` rounds, each merging two k-lists;
+  bytes/device ∝ log2(D)·Q·k. The beyond-paper schedule for pod-scale D
+  (D=512: 9 rounds vs 512x gather) — see EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core.flat import flat_search
+from repro.core.hnsw import NO_EDGE
+
+
+def global_topk_merge(ids, dists, k: int, axis: str):
+    """all_gather merge inside shard_map: (Q, k) local -> (Q, k) global."""
+    all_ids = jax.lax.all_gather(ids, axis)     # (D, Q, k)
+    all_d = jax.lax.all_gather(dists, axis)
+    D = all_ids.shape[0]
+    Q = all_ids.shape[1]
+    flat_ids = jnp.moveaxis(all_ids, 0, 1).reshape(Q, D * k)
+    flat_d = jnp.moveaxis(all_d, 0, 1).reshape(Q, D * k)
+    neg, pos = jax.lax.top_k(-flat_d, k)
+    return jnp.take_along_axis(flat_ids, pos, 1), -neg
+
+
+def tournament_topk_merge(ids, dists, k: int, axis: str):
+    """Recursive-halving merge: log2(D) ppermute rounds of k-list merges.
+
+    After round r, device i holds the merged top-k of its 2^(r+1)-device
+    group; all devices finish with the global top-k (butterfly exchange)."""
+    D = jax.lax.axis_size(axis)
+    rounds = int(np.log2(D))
+    assert (1 << rounds) == D, "tournament merge needs power-of-two shards"
+    for r in range(rounds):
+        stride = 1 << r
+        idx = jax.lax.axis_index(axis)
+        partner = jnp.where((idx // stride) % 2 == 0, idx + stride, idx - stride)
+        perm = [(int(i), int((i + stride) if (i // stride) % 2 == 0 else (i - stride)))
+                for i in range(D)]
+        other_ids = jax.lax.ppermute(ids, axis, perm)
+        other_d = jax.lax.ppermute(dists, axis, perm)
+        cat_ids = jnp.concatenate([ids, other_ids], axis=1)
+        cat_d = jnp.concatenate([dists, other_d], axis=1)
+        neg, pos = jax.lax.top_k(-cat_d, k)
+        ids = jnp.take_along_axis(cat_ids, pos, 1)
+        dists = -neg
+    return ids, dists
+
+
+def sharded_flat_topk(mesh: Mesh, corpus, lo, hi, queries, ql, qh, *, mask: int,
+                      k: int, corpus_axis: str = "data",
+                      merge: str = "all_gather",
+                      use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact distributed RRANN: corpus sharded on ``corpus_axis``, queries
+    replicated, result replicated. Local ids are rebased to global ids."""
+    D = mesh.shape[corpus_axis]
+    n = corpus.shape[0]
+    assert n % D == 0, f"corpus size {n} not divisible by {D} shards"
+    nloc = n // D
+    merge_fn = {"all_gather": global_topk_merge,
+                "tournament": tournament_topk_merge}[merge]
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(corpus_axis, None), P(corpus_axis), P(corpus_axis),
+                  P(None, None), P(None), P(None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_rep=False)
+    def run(c, l, h, q, a, b):
+        ids, d = flat_search(c, l, h, q, a, b, mask=mask, k=k,
+                             use_kernel=use_kernel)
+        shard = jax.lax.axis_index(corpus_axis)
+        gids = jnp.where(ids != NO_EDGE, ids + shard * nloc, NO_EDGE)
+        return merge_fn(gids, d, k, corpus_axis)
+
+    return run(corpus, lo, hi, queries, ql, qh)

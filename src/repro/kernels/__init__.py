@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's distance-verification hot spot.
+
+- pairwise_l2.py  : fused RR-predicate + pairwise squared-L2 (MXU tiles)
+- gathered_l2.py  : beam-candidate distances (VPU + MXU formulations)
+- fused_topk.py   : predicate + distance + running top-k in ONE kernel
+                    (grid-persistent accumulator; no (Q, N) matrix ever)
+- ref.py          : pure-jnp oracles (the allclose ground truth)
+- ops.py          : jit entry points; interpret=True off-TPU
+
+Tests sweep shapes/dtypes via hypothesis in interpret mode
+(tests/test_kernels.py).
+"""
+from . import ops

@@ -1,0 +1,104 @@
+"""Fused predicate + L2 + running top-k Pallas kernel.
+
+One kernel call answers an exact filtered k-NN query batch: the TPU grid walks
+corpus blocks sequentially (TPU grids execute in order), each step computes the
+masked distance tile in VMEM and folds it into a persistent (Q, k) accumulator
+that every grid step aliases (out block index 0) — the (Q, N) distance matrix
+never exists, in VMEM or HBM. This is the §Perf-iteration-6 engine as a single
+kernel: HBM traffic = corpus + queries + (Q, 2k) outputs.
+
+Top-k inside the kernel uses k rounds of (min, argmin, mask) — k is small
+(<=32) and the VPU eats the (Q, BN) compares; no sort network needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import intervals as iv
+
+NO_EDGE = -1
+DEFAULT_BN = 1024
+
+
+def _extract_topk(dist, ids, k: int):
+    """k rounds of min-extraction. dist: (Q, M) fp32; ids: (Q, M) int32."""
+    Q = dist.shape[0]
+    out_d = []
+    out_i = []
+    for _ in range(k):
+        m = jnp.min(dist, axis=1)                      # (Q,)
+        am = jnp.argmin(dist, axis=1)                  # (Q,)
+        out_d.append(m)
+        out_i.append(jnp.take_along_axis(ids, am[:, None], 1)[:, 0])
+        dist = jnp.where(jnp.arange(dist.shape[1])[None, :] == am[:, None],
+                         jnp.inf, dist)
+    return jnp.stack(out_d, 1), jnp.stack(out_i, 1)    # (Q, k)
+
+
+def _kernel(q_ref, c_ref, lo_ref, hi_ref, ql_ref, qh_ref,
+            outd_ref, outi_ref, *, mask: int, k: int, bn: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        outd_ref[...] = jnp.full(outd_ref.shape, jnp.inf, jnp.float32)
+        outi_ref[...] = jnp.full(outi_ref.shape, NO_EDGE, jnp.int32)
+
+    q = q_ref[...].astype(jnp.float32)                 # (Q, d)
+    c = c_ref[...].astype(jnp.float32)                 # (BN, d)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1)
+    dist = qn - 2.0 * jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) + cn[None, :]
+    sel = iv.eval_predicate(mask, lo_ref[...][None, :], hi_ref[...][None, :],
+                            ql_ref[...][:, None], qh_ref[...][:, None])
+    dist = jnp.where(sel, dist, jnp.inf)
+    gids = (step * bn + jnp.arange(bn, dtype=jnp.int32))[None, :]
+    gids = jnp.broadcast_to(gids, dist.shape)
+
+    new_d, new_i = _extract_topk(dist, gids, k)        # (Q, k)
+    cat_d = jnp.concatenate([outd_ref[...], new_d], axis=1)
+    cat_i = jnp.concatenate([outi_ref[...], new_i], axis=1)
+    merged_d, merged_i = _extract_topk(cat_d, cat_i, k)
+    outd_ref[...] = merged_d
+    outi_ref[...] = jnp.where(jnp.isfinite(merged_d), merged_i, NO_EDGE)
+
+
+@functools.partial(jax.jit, static_argnames=("mask", "k", "bn", "interpret"))
+def fused_topk_l2(queries, corpus, lo, hi, ql, qh, mask: int, k: int = 10,
+                  bn: int = DEFAULT_BN, interpret: bool = False):
+    """(Q, d) x (N, d) -> exact filtered ((Q, k) ids, (Q, k) sq-distances)."""
+    Q, d = queries.shape
+    N = corpus.shape[0]
+    bn = min(bn, max(128, N))
+    Np = -(-N // bn) * bn
+    cpad = jnp.pad(corpus, ((0, Np - N), (0, 0)))
+    # NaN endpoints fail every RR comparison -> padded rows never qualify
+    lop = jnp.pad(lo.astype(jnp.float32), (0, Np - N), constant_values=jnp.nan)
+    hip = jnp.pad(hi.astype(jnp.float32), (0, Np - N), constant_values=jnp.nan)
+
+    outd, outi = pl.pallas_call(
+        functools.partial(_kernel, mask=mask, k=k, bn=bn),
+        grid=(Np // bn,),
+        in_specs=[
+            pl.BlockSpec((Q, d), lambda i: (0, 0)),
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((Q,), lambda i: (0,)),
+            pl.BlockSpec((Q,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Q, k), lambda i: (0, 0)),   # all steps alias block 0
+            pl.BlockSpec((Q, k), lambda i: (0, 0)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((Q, k), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, k), jnp.int32)],
+        interpret=interpret,
+    )(queries, cpad, lop, hip, ql.astype(jnp.float32), qh.astype(jnp.float32))
+    return outi, outd

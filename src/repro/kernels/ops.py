@@ -1,0 +1,48 @@
+"""Public jit'd kernel entry points with automatic backend dispatch.
+
+On TPU the Pallas kernels run compiled; everywhere else (this CPU container)
+they run in ``interpret=True`` mode, which executes the kernel body in Python
+on CPU — bitwise the same program structure, used by tests/benchmarks to
+validate against the :mod:`repro.kernels.ref` oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import pairwise_l2 as _pw
+from . import gathered_l2 as _gl
+from . import ref
+
+
+@functools.cache
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pairwise_l2_masked(queries, corpus, lo, hi, ql, qh, mask: int,
+                       bq: int = _pw.DEFAULT_BQ, bn: int = _pw.DEFAULT_BN):
+    return _pw.pairwise_l2_masked(queries, corpus, lo, hi, ql, qh, mask,
+                                  bq=bq, bn=bn, interpret=_interpret())
+
+
+def gathered_l2(queries, cand_vecs, bq: int = _gl.DEFAULT_BQ):
+    return _gl.gathered_l2(queries, cand_vecs, bq=bq, interpret=_interpret())
+
+
+def gathered_l2_dot(queries, cand_vecs, bq: int = _gl.DEFAULT_BQ):
+    return _gl.gathered_l2_dot(queries, cand_vecs, bq=bq, interpret=_interpret())
+
+
+# re-export oracles for convenience
+pairwise_l2_masked_ref = ref.pairwise_l2_masked_ref
+gathered_l2_ref = ref.gathered_l2_ref
+
+
+def fused_topk_l2(queries, corpus, lo, hi, ql, qh, mask: int, k: int = 10,
+                  bn: int = 1024):
+    from . import fused_topk as _ft
+    return _ft.fused_topk_l2(queries, corpus, lo, hi, ql, qh, mask, k=k,
+                             bn=bn, interpret=_interpret())

@@ -1,0 +1,79 @@
+"""Fused RR-predicate + pairwise-L2 Pallas TPU kernel (DESIGN.md §2).
+
+The paper's search cost is dominated by distance verification of candidates
+that may or may not satisfy the filter. On TPU we fuse the two: each grid cell
+loads a (BQ, d) query tile and a (BN, d) corpus tile into VMEM, forms
+``|q|^2 - 2 q·cᵀ + |c|^2`` on the MXU with fp32 accumulation, evaluates the RR
+predicate on the (BN,) endpoint tiles in VREGs and writes ``+inf`` for failing
+candidates — non-qualifying vectors never leave the chip, the TPU analogue of
+"avoid verifying vectors that do not satisfy the query predicate".
+
+Block sizes are MXU-aligned (multiples of 128 on the N axis, 8+ on Q); the
+full feature depth d rides along the minor dimension (d <= ~4k keeps the
+working set ~4 MB < VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import intervals as iv
+
+DEFAULT_BQ = 128
+DEFAULT_BN = 256
+
+
+def _kernel(q_ref, c_ref, lo_ref, hi_ref, ql_ref, qh_ref, out_ref, *, mask: int):
+    q = q_ref[...].astype(jnp.float32)          # (BQ, d)
+    c = c_ref[...].astype(jnp.float32)          # (BN, d)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)  # (BQ, 1)
+    cn = jnp.sum(c * c, axis=1)                 # (BN,)
+    # MXU: (BQ, d) x (d, BN)
+    cross = jax.lax.dot_general(q, c, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    dist = qn - 2.0 * cross + cn[None, :]
+    sel = iv.eval_predicate(mask, lo_ref[...][None, :], hi_ref[...][None, :],
+                            ql_ref[...][:, None], qh_ref[...][:, None])
+    out_ref[...] = jnp.where(sel, dist, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("mask", "bq", "bn", "interpret"))
+def pairwise_l2_masked(queries, corpus, lo, hi, ql, qh, mask: int,
+                       bq: int = DEFAULT_BQ, bn: int = DEFAULT_BN,
+                       interpret: bool = False):
+    """(Q, d) x (N, d) -> (Q, N) fused masked squared-L2. Q and N need not be
+    block-aligned; inputs are padded and the pad region is predicate-masked."""
+    Q, d = queries.shape
+    N = corpus.shape[0]
+    bq = min(bq, max(8, Q))
+    bn = min(bn, max(128, N))
+    Qp = -(-Q // bq) * bq
+    Np = -(-N // bn) * bn
+    qpad = jnp.pad(queries, ((0, Qp - Q), (0, 0)))
+    cpad = jnp.pad(corpus, ((0, Np - N), (0, 0)))
+    # NaN endpoints fail every RR comparison -> padded rows never qualify
+    lop = jnp.pad(lo.astype(jnp.float32), (0, Np - N), constant_values=jnp.nan)
+    hip = jnp.pad(hi.astype(jnp.float32), (0, Np - N), constant_values=jnp.nan)
+    qlp = jnp.pad(ql.astype(jnp.float32), (0, Qp - Q), constant_values=jnp.nan)
+    qhp = jnp.pad(qh.astype(jnp.float32), (0, Qp - Q), constant_values=jnp.nan)
+
+    grid = (Qp // bq, Np // bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, mask=mask),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+            pl.BlockSpec((bq,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bq, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Qp, Np), jnp.float32),
+        interpret=interpret,
+    )(qpad, cpad, lop, hip, qlp, qhp)
+    return out[:Q, :N]

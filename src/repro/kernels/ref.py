@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import intervals as iv
+
+
+def pairwise_l2_masked_ref(queries, corpus, lo, hi, ql, qh, mask: int):
+    """(Q, d) x (N, d) -> (Q, N) squared L2; +inf where the RR predicate fails.
+
+    fp32 accumulation regardless of input dtype (matches kernel contract).
+    """
+    q = queries.astype(jnp.float32)
+    c = corpus.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)
+    cn = jnp.sum(c * c, axis=1)
+    d = qn - 2.0 * (q @ c.T) + cn[None, :]
+    sel = iv.eval_predicate(mask, lo[None, :], hi[None, :], ql[:, None], qh[:, None])
+    return jnp.where(sel, d, jnp.inf)
+
+
+def gathered_l2_ref(queries, cand_vecs):
+    """(Q, d) x (Q, S, d) -> (Q, S) squared L2, fp32 accumulation."""
+    q = queries.astype(jnp.float32)
+    c = cand_vecs.astype(jnp.float32)
+    diff = c - q[:, None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def topk_mask_ref(dists, k: int):
+    """(Q, N) -> bool mask of the k smallest per row (ties broken by index)."""
+    idx = jnp.argsort(dists, axis=1)[:, :k]
+    out = jnp.zeros_like(dists, dtype=bool)
+    return out.at[jnp.arange(dists.shape[0])[:, None], idx].set(True)

@@ -1,0 +1,3 @@
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time and must
+# only be imported as the program entry point.
+from .mesh import make_production_mesh, make_host_mesh

@@ -1,0 +1,231 @@
+"""Per-(arch x shape) step builders: callable + ShapeDtypeStruct inputs +
+NamedShardings for jit lowering. This is the single source of truth used by
+the dry-run, the roofline, and the real train/serve entry points.
+
+input_specs() follows the shannon/kernels pattern: weak-type-correct,
+shardable ShapeDtypeStructs, zero device allocation. ``[audio]``/``[vlm]``
+frontends are stubs — specs carry precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeConfig, get_config, supports_shape
+from repro.models import params as pr
+from repro.models.transformer import LM, cache_meta
+from repro.training import AdamWConfig
+from repro.training.train_loop import make_train_step
+
+
+def _divides(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def batch_axes_for(mesh: Mesh, batch: int) -> Tuple[str, ...]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    while axes:
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if _divides(batch, size):
+            return axes
+        axes = axes[1:]
+    return ()
+
+
+def _seq_axis(mesh: Mesh, M: int) -> Optional[str]:
+    return "model" if ("model" in mesh.shape and _divides(M, mesh.shape["model"])) \
+        else None
+
+
+def cache_specs(lm: LM, mesh: Mesh, batch_axes, batch: int, max_len: int,
+                enc_len: int = 0) -> Any:
+    """PartitionSpec tree structurally matching ``lm.decode_cache_meta``:
+    batch over (pod, data), cache sequence axis over 'model' (distributed-LSE
+    decode), recurrent state heads/channels over 'model'; stacked segments get
+    a leading None for the scan dim."""
+    from repro.models.transformer import cache_meta_for_desc
+    ba = tuple(batch_axes)
+    B_axes = ba if ba else None
+
+    def leaf_spec(sds):
+        shp = sds.shape
+        if len(shp) == 4:       # (B, M, Hkv, Dh) kv / (B, H, Dk, Dv) rwkv state
+            return P(B_axes, _seq_axis(mesh, shp[1]), None, None)
+        if len(shp) == 3:       # (B, M, r) latent / (B, ck-1, W) conv
+            ax = _seq_axis(mesh, shp[1])
+            if ax:
+                return P(B_axes, ax, None)
+            return P(B_axes, None, _seq_axis(mesh, shp[2]))
+        if len(shp) == 2:       # (B, W) state / (B, D) shift
+            return P(B_axes, _seq_axis(mesh, shp[1]))
+        return P(*([None] * len(shp)))
+
+    out = []
+    for seg in lm.segments:
+        unit_sds = {f"L{j}": cache_meta_for_desc(lm.cfg, d, batch, max_len,
+                                                 enc_len)
+                    for j, d in enumerate(seg.pattern)}
+        unit_spec = jax.tree.map(leaf_spec, unit_sds)
+        if seg.repeats > 1:
+            unit_spec = jax.tree.map(lambda p: P(None, *p), unit_spec)
+        out.append(unit_spec)
+    return out
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to ``jax.jit(fn, in_shardings=...).lower(*args)``."""
+    name: str
+    fn: Any
+    args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any = None
+    donate: Tuple[int, ...] = ()
+
+
+class ArchRunner:
+    """Builds train/prefill/decode step bundles for one architecture.
+
+    ``segment_repeats`` overrides each segment's scan repeat count — used by
+    the roofline's scan-cost correction (XLA costs a scan body once)."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh,
+                 segment_repeats: Optional[Tuple[int, ...]] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.lm = LM(cfg)
+        if segment_repeats is not None:
+            from repro.models.transformer import Segment
+            assert len(segment_repeats) == len(self.lm.segments)
+            self.lm.segments = [Segment(s.pattern, r) for s, r in
+                                zip(self.lm.segments, segment_repeats)]
+        self.metas = self.lm.abstract_params()
+
+    def _psharding(self, rules=None):
+        return pr.map_tree(
+            lambda m: NamedSharding(self.mesh, pr.spec_for(m, self.mesh,
+                                                           rules or pr.DEFAULT_RULES)),
+            self.metas)
+
+    def _batch_sds(self, shape: ShapeConfig, seq: Optional[int] = None,
+                   with_labels: bool = True) -> Dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B = shape.global_batch
+        S = seq if seq is not None else shape.seq_len
+        n_front = cfg.n_frontend_tokens if cfg.frontend == "vision_stub" else 0
+        sds = {"tokens": jax.ShapeDtypeStruct((B, S - n_front), jnp.int32)}
+        if with_labels:
+            sds["labels"] = jax.ShapeDtypeStruct((B, S - n_front), jnp.int32)
+        if cfg.frontend == "vision_stub":
+            sds["patches"] = jax.ShapeDtypeStruct(
+                (B, n_front, cfg.frontend_dim), jnp.bfloat16
+                if cfg.activ_dtype == "bfloat16" else jnp.float32)
+        if cfg.frontend == "audio_stub":
+            sds["frames"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.frontend_dim), jnp.bfloat16
+                if cfg.activ_dtype == "bfloat16" else jnp.float32)
+        return sds
+
+    def _batch_shardings(self, batch_sds, batch_axes):
+        ba = tuple(batch_axes) or None
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh,
+                                    P(*((ba,) + (None,) * (len(s.shape) - 1)))),
+            batch_sds)
+
+    # ---- bundles ----
+    def train_bundle(self, shape: ShapeConfig) -> StepBundle:
+        mesh = self.mesh
+        ba = batch_axes_for(mesh, shape.global_batch)
+        psh = self._psharding(pr.DEFAULT_RULES)
+        osh = {"m": psh, "v": psh,
+               "step": NamedSharding(mesh, P())}
+        batch_sds = self._batch_sds(shape)
+        bsh = self._batch_shardings(batch_sds, ba)
+        params_sds = pr.shape_dtype_tree(self.metas)
+        opt_sds = {"m": jax.tree.map(
+                       lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                       params_sds),
+                   "v": jax.tree.map(
+                       lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                       params_sds),
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        lm = self.lm
+
+        def loss_fn(params, batch):
+            return lm.train_loss(params, batch, mesh=mesh, batch_axes=ba)
+
+        from repro.training.optimizer import adamw_update, clip_by_global_norm
+        ocfg = AdamWConfig()
+
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads, gnorm = clip_by_global_norm(grads, ocfg.grad_clip)
+            params, opt_state = adamw_update(ocfg, params, grads, opt_state)
+            return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+        return StepBundle(
+            name="train_step", fn=train_step,
+            args=(params_sds, opt_sds, batch_sds),
+            in_shardings=(psh, osh, bsh),
+            out_shardings=(psh, osh, None),
+            donate=(0, 1))
+
+    def prefill_bundle(self, shape: ShapeConfig) -> StepBundle:
+        mesh = self.mesh
+        ba = batch_axes_for(mesh, shape.global_batch)
+        psh = self._psharding(pr.SERVE_RULES)
+        batch_sds = self._batch_sds(shape, with_labels=False)
+        bsh = self._batch_shardings(batch_sds, ba)
+        params_sds = pr.shape_dtype_tree(self.metas)
+        lm = self.lm
+
+        def prefill(params, batch):
+            return lm.prefill(params, batch, mesh=mesh, batch_axes=ba)
+
+        return StepBundle(name="prefill", fn=prefill,
+                          args=(params_sds, batch_sds),
+                          in_shardings=(psh, bsh))
+
+    def decode_bundle(self, shape: ShapeConfig) -> StepBundle:
+        mesh = self.mesh
+        cfg = self.cfg
+        B = shape.global_batch
+        ba = batch_axes_for(mesh, B)
+        psh = self._psharding(pr.SERVE_RULES)
+        enc_len = shape.seq_len if cfg.n_enc_layers else 0
+        n_front = cfg.n_frontend_tokens if cfg.frontend == "vision_stub" else 0
+        cache_sds = self.lm.decode_cache_meta(B, shape.seq_len + n_front,
+                                              enc_len)
+        csp = cache_specs(self.lm, mesh, ba, B, shape.seq_len + n_front, enc_len)
+        csh = jax.tree.map(lambda s: NamedSharding(mesh, s), csp)
+        tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        tok_sh = NamedSharding(mesh, P(tuple(ba) or None, None))
+        pos_sh = NamedSharding(mesh, P())
+        lm = self.lm
+
+        def decode(params, caches, tokens, pos):
+            return lm.decode_step(params, caches, tokens, pos, mesh=mesh,
+                                  batch_axes=ba)
+
+        return StepBundle(name="serve_step", fn=decode,
+                          args=(params_sds_serve(self.metas), cache_sds,
+                                tok_sds, pos_sds),
+                          in_shardings=(psh, csh, tok_sh, pos_sh),
+                          donate=(1,))
+
+    def bundle_for(self, shape: ShapeConfig) -> StepBundle:
+        return {"train": self.train_bundle, "prefill": self.prefill_bundle,
+                "decode": self.decode_bundle}[shape.kind](shape)
+
+
+def params_sds_serve(metas):
+    return pr.shape_dtype_tree(metas)

@@ -1,0 +1,2 @@
+from .transformer import LM, make_segments, layer_descs
+from . import params

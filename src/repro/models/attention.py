@@ -1,0 +1,349 @@
+"""Attention: chunked (flash-style) training/prefill path, cache decode path,
+GQA with qk-norm/bias/sliding-window, and MLA (DeepSeek latent attention).
+
+Memory discipline: the (Sq, Skv) score matrix is never materialized — a double
+``lax.scan`` over (q chunks) x (kv chunks) carries online-softmax statistics
+(m, l, acc) exactly like FlashAttention; fp32 statistics, bf16-safe inputs.
+Decode (Sq == 1) attends over a KV cache whose sequence axis may be sharded
+('model'); XLA turns the masked softmax reductions into local reduce +
+all-reduce (distributed LSE combine).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, rmsnorm
+from .params import meta
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None and window > 0:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    q_offset=0, softcap: Optional[float] = None,
+                    q_chunk: int = 512, kv_chunk: int = 512,
+                    kv_len=None, unroll: bool = False,
+                    block_skip: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, H, Dk); k: (B, Skv, Hkv, Dk); v: (B, Skv, Hkv, Dv).
+    GQA via head grouping (H % Hkv == 0). Returns (B, Sq, H, Dv).
+
+    ``block_skip=True`` (forward-only paths: prefill/serve) runs the inner
+    loop over the dynamic block range a causal/windowed q chunk can see —
+    a ~2x flop cut for causal, ~S/window for sliding windows (§Perf
+    iteration 7). Training keeps the full-range ``lax.scan`` (dynamic-bound
+    fori_loop is not reverse-differentiable). ``unroll=True`` replaces the
+    loops with Python loops over the same block set so cost_analysis counts
+    every block (roofline measurement)."""
+    B, Sq, H, Dk = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    Dv = v.shape[-1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    # pad both sequence axes to chunk multiples; padded kv is masked via
+    # kv_len, padded q rows are sliced off at the end
+    Sq_p = -(-Sq // q_chunk) * q_chunk
+    Skv_p = -(-Skv // kv_chunk) * kv_chunk
+    if Skv_p != Skv:
+        kv_len = jnp.minimum(kv_len, Skv) if kv_len is not None else Skv
+        k = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    Sq_full, Sq, Skv = Sq, Sq_p, Skv_p
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / jnp.sqrt(Dk).astype(jnp.float32)
+
+    qg = q.reshape(B, Sq, Hkv, G, Dk)
+
+    def kv_bounds(qi):
+        """Dynamic kv-block range visible to q chunk ``qi`` (block skipping)."""
+        q_lo = q_offset + qi * q_chunk
+        q_hi = q_lo + q_chunk - 1
+        hi = nk if not causal else jnp.minimum(nk, q_hi // kv_chunk + 1)
+        lo = 0
+        if window is not None and window > 0:
+            lo = jnp.maximum(0, (q_lo - window + 1) // kv_chunk)
+        return lo, hi
+
+    def q_block(qi, q_blk):
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_block(ki, carry):
+            m_i, l_i, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = _block_mask(q_pos, k_pos, causal, window)
+            if kv_len is not None:
+                mask = mask & (k_pos[None, :] < kv_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_i - m_new)
+            l_new = l_i * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return m_new, l_new, acc
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, Dv), jnp.float32)
+        if unroll:  # static bounds, every visible block in the HLO
+            q_lo = int(q_offset) + int(qi) * q_chunk
+            if block_skip:
+                hi_s = (nk if not causal
+                        else min(nk, (q_lo + q_chunk - 1) // kv_chunk + 1))
+                lo_s = (max(0, (q_lo - window + 1) // kv_chunk)
+                        if (window and window > 0) else 0)
+            else:
+                lo_s, hi_s = 0, nk
+            carry = (m0, l0, a0)
+            for ki in range(lo_s, hi_s):
+                carry = kv_block(jnp.asarray(ki), carry)
+            m_f, l_f, acc = carry
+        elif block_skip:  # forward-only: dynamic-bound loop skips masked blocks
+            lo, hi = kv_bounds(qi)
+            m_f, l_f, acc = jax.lax.fori_loop(lo, hi, kv_block, (m0, l0, a0))
+        else:  # differentiable full-range scan (training)
+            def scan_body(carry, ki):
+                return kv_block(ki, carry), None
+
+            (m_f, l_f, acc), _ = jax.lax.scan(scan_body, (m0, l0, a0),
+                                              jnp.arange(nk))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out  # (B, Hkv, G, q_chunk, Dv)
+
+    if unroll:
+        blocks = jnp.stack([q_block(qi, qg[:, qi * q_chunk:(qi + 1) * q_chunk])
+                            for qi in range(nq)], 0)
+    else:
+        def outer(_, qi):
+            q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * q_chunk, q_chunk, 1)
+            return None, q_block(qi, q_blk)
+
+        _, blocks = jax.lax.scan(outer, None, jnp.arange(nq))
+    out = jnp.moveaxis(blocks, 0, 3).reshape(B, Hkv, G, Sq, Dv)  # (nq,B,Hkv,G,qc,Dv)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, Sq, H, Dv)
+    return out[:, :Sq_full].astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, key_valid, *,
+                     softcap: Optional[float] = None) -> jnp.ndarray:
+    """Single-token attention over a cache. q: (B, 1, H, Dk);
+    caches: (B, M, Hkv, D*); ``key_valid``: (M,) bool mask of live entries
+    (handles both linear and ring caches). Sequence axis of the cache may be
+    sharded; the reductions below become local+all-reduce under SPMD."""
+    B, _, H, Dk = q.shape
+    M, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / jnp.sqrt(Dk).astype(jnp.float32)
+    qg = q.reshape(B, Hkv, G, Dk)
+    s = jnp.einsum("bhgd,bmhd->bhgm", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(key_valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgm,bmhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, -1).astype(v_cache.dtype)
+
+
+def cache_slot_and_mask(cur_pos, M: int, window: Optional[int]):
+    """Write slot + validity mask for a decode cache of capacity M.
+
+    Linear cache (M >= sequence): slot = cur_pos, valid = pos <= cur_pos
+    (+ window). Ring cache (local attention, M == window): slot = cur_pos % M,
+    valid = entries whose absolute position is within the window."""
+    pos = jnp.arange(M)
+    ring = window is not None and window > 0 and M <= window
+    if ring:
+        slot = cur_pos % M
+        abs_pos = cur_pos - ((cur_pos - pos) % M)
+        valid = abs_pos >= 0
+    else:
+        slot = cur_pos
+        valid = pos <= cur_pos
+        if window is not None and window > 0:
+            valid &= pos > cur_pos - window
+    return slot, valid
+
+
+# ---------------- GQA attention block ----------------
+def attn_meta(cfg, dtype):
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": meta((D, H, Dh), ("embed", "heads", "head_dim"), dtype),
+        "wk": meta((D, Hkv, Dh), ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": meta((D, Hkv, Dh), ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": meta((H, Dh, D), ("heads", "head_dim", "embed"), dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = meta((H, Dh), ("heads", "head_dim"), dtype, init="zeros")
+        p["bk"] = meta((Hkv, Dh), ("kv_heads", "head_dim"), dtype, init="zeros")
+        p["bv"] = meta((Hkv, Dh), ("kv_heads", "head_dim"), dtype, init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = meta((Dh,), ("head_dim",), dtype, init="ones")
+        p["k_norm"] = meta((Dh,), ("head_dim",), dtype, init="ones")
+    return p
+
+
+def _qk_normalize(p, q, k):
+    if "q_norm" in p:
+        q = rmsnorm({"scale": p["q_norm"]}, q)
+        k = rmsnorm({"scale": p["k_norm"]}, k)
+    return q, k
+
+
+def attn_apply(p, x, *, cfg, rope_theta: float, window: Optional[int],
+               positions, mode: str, cache=None, cur_pos=None,
+               kv_len=None, cross_memory=None, causal: bool = True,
+               is_cross: bool = False):
+    """mode: 'train' | 'prefill' | 'decode'. Returns (out, new_cache).
+
+    ``is_cross``: cross-attention block — keys/values come from
+    ``cross_memory`` (encoder states, train/prefill) or from the cached
+    projections (decode); no rope, no causal mask."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+
+    if is_cross or cross_memory is not None:
+        if mode == "decode":
+            k, v = cache  # projected at prefill
+            new_cache = cache
+        else:
+            k = jnp.einsum("bsd,dhk->bshk", cross_memory, p["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", cross_memory, p["wv"])
+            if "bk" in p:
+                k, v = k + p["bk"], v + p["bv"]
+            new_cache = (k, v) if mode == "prefill" else None
+        if "q_norm" in p:
+            q = rmsnorm({"scale": p["q_norm"]}, q)
+        if mode == "decode":
+            out = decode_attention(q, k, v, jnp.ones((k.shape[1],), bool),
+                                   softcap=cfg.attn_logit_softcap)
+        else:
+            out = flash_attention(q, k, v, causal=False, window=None,
+                                  softcap=cfg.attn_logit_softcap,
+                                  q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                                  kv_len=kv_len, unroll=cfg.flash_unroll,
+                                  block_skip=(mode != "train"))
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    q, k = _qk_normalize(p, q, k)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+
+    new_cache = cache
+    if mode == "decode":
+        k_cache, v_cache = cache
+        slot, valid = cache_slot_and_mask(cur_pos, k_cache.shape[1], window)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), slot, 1)
+        out = decode_attention(q, k_cache, v_cache, valid,
+                               softcap=cfg.attn_logit_softcap)
+        new_cache = (k_cache, v_cache)
+    else:
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=cfg.attn_logit_softcap,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                              kv_len=kv_len, unroll=cfg.flash_unroll,
+                              block_skip=(mode != "train"))
+        if mode == "prefill":
+            new_cache = (k, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# ---------------- MLA (DeepSeek-V3) ----------------
+def mla_meta(cfg, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": meta((D, qr), ("embed", "q_lora"), dtype),
+        "q_norm": meta((qr,), ("q_lora",), dtype, init="ones"),
+        "w_uq": meta((qr, H, dn + dr), ("q_lora", "heads", "head_dim"), dtype),
+        "w_dkv": meta((D, kvr + dr), ("embed", None), dtype),
+        "kv_norm": meta((kvr,), (None,), dtype, init="ones"),
+        "w_uk": meta((kvr, H, dn), (None, "heads", "head_dim"), dtype),
+        "w_uv": meta((kvr, H, dv), (None, "heads", "head_dim"), dtype),
+        "wo": meta((H, dv, D), ("heads", "head_dim", "embed"), dtype),
+    }
+
+
+def mla_apply(p, x, *, cfg, positions, mode: str, cache=None, cur_pos=None):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    # queries
+    ql = rmsnorm({"scale": p["q_norm"]}, x @ p["w_dq"])
+    q = jnp.einsum("bsr,rhk->bshk", ql, p["w_uq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    # latent kv
+    dkv = x @ p["w_dkv"]
+    latent, k_rope = dkv[..., :kvr], dkv[..., kvr:]
+    latent = rmsnorm({"scale": p["kv_norm"]}, latent)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # 1 shared head
+
+    if mode == "decode":
+        lat_cache, rope_cache = cache
+        lat_cache = jax.lax.dynamic_update_slice_in_dim(
+            lat_cache, latent.astype(lat_cache.dtype), cur_pos, 1)
+        rope_cache = jax.lax.dynamic_update_slice_in_dim(
+            rope_cache, k_rope[:, :, 0, :].astype(rope_cache.dtype), cur_pos, 1)
+        # absorbed attention in latent space
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])   # (B,1,H,kvr)
+        s = (jnp.einsum("bshr,bmr->bhsm", q_abs, lat_cache,
+                        preferred_element_type=jnp.float32) +
+             jnp.einsum("bshk,bmk->bhsm", q_rope, rope_cache,
+                        preferred_element_type=jnp.float32))
+        s = s / jnp.sqrt(dn + dr)
+        ok = jnp.arange(lat_cache.shape[1])[None, :] <= cur_pos
+        s = jnp.where(ok[:, None, None], s, NEG_INF)
+        att = jax.nn.softmax(s.astype(jnp.float32), -1)
+        ctx = jnp.einsum("bhsm,bmr->bshr", att.astype(lat_cache.dtype), lat_cache,
+                         preferred_element_type=jnp.float32)
+        out = jnp.einsum("bshr,rhv->bshv", ctx.astype(x.dtype), p["w_uv"])
+        new_cache = (lat_cache, rope_cache)
+    else:
+        k_nope = jnp.einsum("bsr,rhk->bshk", latent, p["w_uk"])
+        v = jnp.einsum("bsr,rhv->bshv", latent, p["w_uv"])
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope, (B, S, H, dr)).astype(k_nope.dtype)], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = flash_attention(qq, k, v, causal=True,
+                              q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                              unroll=cfg.flash_unroll,
+                              block_skip=(mode != "train"))
+        new_cache = ((latent, k_rope[:, :, 0, :]) if mode == "prefill" else None)
+    y = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return y, new_cache

@@ -1,0 +1,141 @@
+"""Shared neural building blocks (raw JAX, no flax)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .params import meta
+
+
+# ---------------- norms ----------------
+def rmsnorm_meta(d, dtype):
+    return {"scale": meta((d,), ("embed",), dtype, init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_np(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm (no scale/bias)."""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def make_norm(cfg):
+    if cfg.norm_type == "layernorm_np":
+        return (lambda d, dt: {}), (lambda p, x: layernorm_np(x))
+    return rmsnorm_meta, rmsnorm
+
+
+# ---------------- rope ----------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, Dh) with rotary over Dh; positions: (..., S) or (S,)."""
+    Dh = x.shape[-1]
+    inv = rope_freqs(Dh, theta)                        # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------- MLP ----------------
+def mlp_meta(d_model, d_ff, dtype, bias=False):
+    p = {"w_gate": meta((d_model, d_ff), ("embed", "mlp"), dtype),
+         "w_up": meta((d_model, d_ff), ("embed", "mlp"), dtype),
+         "w_down": meta((d_ff, d_model), ("mlp", "embed"), dtype)}
+    if bias:
+        p["b_gate"] = meta((d_ff,), ("mlp",), dtype, init="zeros")
+        p["b_up"] = meta((d_ff,), ("mlp",), dtype, init="zeros")
+        p["b_down"] = meta((d_model,), ("embed",), dtype, init="zeros")
+    return p
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": functools.partial(jax.nn.gelu, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def mlp(params, x, act: str = "silu"):
+    g = x @ params["w_gate"]
+    u = x @ params["w_up"]
+    if "b_gate" in params:
+        g = g + params["b_gate"]
+        u = u + params["b_up"]
+    h = act_fn(act)(g) * u
+    y = h @ params["w_down"]
+    if "b_down" in params:
+        y = y + params["b_down"]
+    return y
+
+
+# ---------------- embedding / unembedding ----------------
+def embed_meta(vocab, d_model, dtype):
+    # N(0, 1/sqrt(d)): O(1) logits under tied unembedding; models with
+    # embed_scale (gemma) restore O(1) activations via the sqrt(d) multiplier
+    return {"table": meta((vocab, d_model), ("vocab", "embed"), dtype,
+                          init="embed", scale=d_model ** -0.5)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_meta(vocab, d_model, dtype, tied: bool):
+    if tied:
+        return {}
+    return {"w_out": meta((d_model, vocab), ("embed", "vocab"), dtype)}
+
+
+def logits_fn(head_params, embed_params, x, tied: bool):
+    if tied:
+        return x @ embed_params["table"].T
+    return x @ head_params["w_out"]
+
+
+def chunked_softmax_xent(logits_fn_, x, labels, mask, chunk: int = 512):
+    """Cross entropy over the sequence in chunks to bound the fp32 (B, C, V)
+    intermediate on huge vocabularies. ``logits_fn_``: (B, C, D) -> (B, C, V).
+
+    Returns (mean_loss, total_weight)."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+
+    def one(xc, yc, mc):
+        lg = logits_fn_(xc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, yc[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    def body(carry, idx):
+        tot, cnt = carry
+        xc = jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=1)
+        yc = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(mask, idx * chunk, chunk, axis=1)
+        l, c = one(xc, yc, mc)
+        return (tot + l, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 jnp.arange(n_chunks))
+    if rem:
+        l, c = one(x[:, -rem:], labels[:, -rem:], mask[:, -rem:])
+        tot, cnt = tot + l, cnt + c
+    return tot / jnp.maximum(cnt, 1.0), cnt

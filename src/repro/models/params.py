@@ -1,0 +1,142 @@
+"""Parameter metadata trees: shapes + logical axes, materialized lazily.
+
+Models declare ``ParamMeta`` trees (shape, dtype, logical axis names). From a
+meta tree we derive, without ever allocating:
+
+* ``shape_dtype_tree``  — ShapeDtypeStructs for dry-run lowering,
+* ``spec_tree``         — PartitionSpecs via the logical->mesh rules (with
+                          divisibility fallback to replication),
+* ``init_tree``         — real arrays (smoke tests / examples / training).
+
+Logical axes: embed, vocab, heads, kv_heads, head_dim, mlp, expert, layers,
+q_lora, kv_lora, conv, stack (scan units). The default rule set implements
+FSDP ("embed" over data) x TP ("vocab"/"heads"/"mlp"/"expert" over model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"   # normal | zeros | ones | embed
+    scale: Optional[float] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def meta(shape, axes, dtype=jnp.float32, init="normal", scale=None) -> ParamMeta:
+    return ParamMeta(tuple(int(s) for s in shape), tuple(axes), dtype, init, scale)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def map_tree(fn: Callable[[ParamMeta], Any], metas: Tree) -> Tree:
+    return jax.tree.map(fn, metas, is_leaf=is_meta)
+
+
+def shape_dtype_tree(metas: Tree) -> Tree:
+    return map_tree(lambda m: jax.ShapeDtypeStruct(m.shape, m.dtype), metas)
+
+
+# Default logical-axis -> mesh-axis rules (training posture: FSDP x TP).
+DEFAULT_RULES: Dict[str, Sequence[str]] = {
+    "embed": ("data",),          # FSDP shard over the data axis
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "expert_mlp": None,
+    "head_dim": None,
+    "q_lora": None,
+    "kv_lora": ("model",),
+    "layers": None,
+    "stack": None,
+    "conv": None,
+}
+
+# Inference posture: no FSDP (weights stationary), TP only — except experts,
+# which shard over the FULL mesh (pod x data x model): a 671B MoE cannot fit
+# 16-way (85 GB/device); 512-way EP brings it to ~2.7 GB/device. See
+# EXPERIMENTS.md §Perf iteration 2.
+SERVE_RULES = dict(DEFAULT_RULES, embed=None,
+                   expert=("pod", "data", "model"))
+
+
+def spec_for(m: ParamMeta, mesh: Mesh, rules: Dict[str, Sequence[str]]) -> P:
+    parts = []
+    used = set()
+    for dim, ax in zip(m.shape, m.axes):
+        r = rules.get(ax) if ax else None
+        if r is None:
+            parts.append(None)
+            continue
+        r = (r,) if isinstance(r, str) else tuple(r)
+        r = tuple(a for a in r if a in mesh.shape and a not in used)
+        # drop leading axes until the product divides the dim (e.g. experts
+        # over ('data','model') degrade to ('model',) when E < devices)
+        while r and (dim % int(np.prod([mesh.shape[a] for a in r])) != 0
+                     or int(np.prod([mesh.shape[a] for a in r])) <= 1):
+            r = r[1:]
+        if not r:
+            parts.append(None)
+            continue
+        used.update(r)
+        parts.append(r[0] if len(r) == 1 else r)
+    return P(*parts)
+
+
+def spec_tree(metas: Tree, mesh: Mesh, rules: Optional[Dict] = None) -> Tree:
+    rules = rules or DEFAULT_RULES
+    return map_tree(lambda m: spec_for(m, mesh, rules), metas)
+
+
+def sharding_tree(metas: Tree, mesh: Mesh, rules: Optional[Dict] = None) -> Tree:
+    rules = rules or DEFAULT_RULES
+    return map_tree(lambda m: NamedSharding(mesh, spec_for(m, mesh, rules)), metas)
+
+
+def init_tree(metas: Tree, key: jax.Array) -> Tree:
+    """Materialize parameters. Deterministic per-leaf keys via path folding."""
+    leaves, treedef = jax.tree.flatten(metas, is_leaf=is_meta)
+    out = []
+    for i, m in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if m.init == "zeros":
+            arr = jnp.zeros(m.shape, m.dtype)
+        elif m.init == "ones":
+            arr = jnp.ones(m.shape, m.dtype)
+        else:
+            fan_in = m.shape[-2] if len(m.shape) >= 2 else m.shape[-1]
+            scale = m.scale if m.scale is not None else (1.0 / np.sqrt(fan_in))
+            if m.init == "embed":
+                scale = m.scale if m.scale is not None else 1.0
+            arr = (scale * jax.random.normal(k, m.shape, jnp.float32)).astype(m.dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(metas: Tree) -> int:
+    leaves = jax.tree.leaves(metas, is_leaf=is_meta)
+    return int(sum(np.prod(m.shape) for m in leaves))
+
+
+def tree_bytes(metas: Tree) -> int:
+    leaves = jax.tree.leaves(metas, is_leaf=is_meta)
+    return int(sum(np.prod(m.shape) * jnp.dtype(m.dtype).itemsize for m in leaves))

@@ -1,0 +1,219 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/RecurrentGemma) and RWKV-6.
+
+Both are written in *chunk/scan-parallel* forms so training lowers to matmuls
+and associative scans (MXU/VPU friendly), while decode is an O(1) state
+update — this is what makes the ``long_500k`` cells runnable for these
+families (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import act_fn, rmsnorm
+from .params import meta
+
+# ---------------- RG-LRU recurrent block (Griffin) ----------------
+_LRU_C = 8.0
+
+
+def rglru_meta(cfg, dtype):
+    D, W = cfg.d_model, cfg.lru_width
+    ck = cfg.conv_width
+    return {
+        "w_x": meta((D, W), ("embed", "mlp"), dtype),
+        "w_gate_branch": meta((D, W), ("embed", "mlp"), dtype),
+        "conv": meta((ck, W), ("conv", "mlp"), dtype, scale=0.1),
+        "conv_b": meta((W,), ("mlp",), dtype, init="zeros"),
+        "lru_in_gate": meta((W,), ("mlp",), dtype, init="ones"),
+        "lru_in_gate_b": meta((W,), ("mlp",), dtype, init="zeros"),
+        "lru_rec_gate": meta((W,), ("mlp",), dtype, init="ones"),
+        "lru_rec_gate_b": meta((W,), ("mlp",), dtype, init="zeros"),
+        "lru_a": meta((W,), ("mlp",), jnp.float32, init="ones", scale=1.0),
+        "w_out": meta((W, D), ("mlp", "embed"), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state):
+    """Depthwise causal conv. x: (B, S, W); w: (ck, W); state: (B, ck-1, W)."""
+    ck = w.shape[0]
+    xx = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xx[:, i:i + x.shape[1]] * w[i] for i in range(ck)) + b
+    new_state = xx[:, -(ck - 1):] if ck > 1 else state
+    return out, new_state
+
+
+def _rglru_scan(x, r_gate, i_gate, a_param, h0):
+    """h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t), parallel scan.
+    x/r_gate/i_gate: (B, S, W); h0: (B, W)."""
+    log_a = -_LRU_C * jax.nn.softplus(a_param) * r_gate.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (i_gate * x).astype(jnp.float32)
+    # prepend carry as a pseudo-step: h0 enters with a=1
+    a_all = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    b_all = jnp.concatenate([h0[:, None].astype(jnp.float32), b], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    return hh[:, 1:].astype(x.dtype), hh[:, -1]
+
+
+def rglru_apply(p, x, *, cfg, mode: str, cache=None):
+    """Griffin recurrent block. cache: (conv_state (B, ck-1, W), h (B, W))."""
+    B, S, D = x.shape
+    W = cfg.lru_width
+    ck = cfg.conv_width
+    if cache is None:
+        cache = (jnp.zeros((B, ck - 1, W), x.dtype),
+                 jnp.zeros((B, W), jnp.float32))
+    conv_state, h0 = cache
+    gate = act_fn("gelu")(x @ p["w_gate_branch"])
+    u = x @ p["w_x"]
+    u, conv_state = _causal_conv(u, p["conv"], p["conv_b"], conv_state)
+    r = jax.nn.sigmoid(u * p["lru_rec_gate"] + p["lru_rec_gate_b"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u * p["lru_in_gate"] + p["lru_in_gate_b"]).astype(jnp.float32)
+    if mode == "decode":
+        log_a = -_LRU_C * jax.nn.softplus(p["lru_a"]) * r[:, 0]
+        a = jnp.exp(log_a)
+        mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        h = a * h0 + mult * (i[:, 0] * u[:, 0].astype(jnp.float32))
+        y = h[:, None].astype(x.dtype)
+        new_cache = (conv_state, h)
+    else:
+        y, h = _rglru_scan(u, r, i, p["lru_a"], h0)
+        new_cache = (conv_state, h)
+    out = (y * gate) @ p["w_out"]
+    return out, new_cache
+
+
+# ---------------- RWKV-6 (Finch) ----------------
+def rwkv6_meta(cfg, dtype):
+    D = cfg.d_model
+    H = cfg.n_heads
+    Dh = D // H
+    lora = cfg.rwkv_lora
+    return {
+        "mu": meta((5, D), (None, "embed"), dtype, scale=0.5),       # w,k,v,r,g
+        "mu_x": meta((D,), ("embed",), dtype, scale=0.5),
+        "ddl_a": meta((D, 5 * lora), ("embed", None), dtype, scale=0.02),
+        "ddl_b": meta((5, lora, D), (None, None, "embed"), dtype, scale=0.02),
+        "w0": meta((D,), ("embed",), jnp.float32, init="zeros"),
+        "w_lora_a": meta((D, lora), ("embed", None), dtype, scale=0.02),
+        "w_lora_b": meta((lora, D), (None, "embed"), dtype, scale=0.02),
+        "bonus": meta((H, Dh), ("heads", "head_dim"), jnp.float32, init="zeros"),
+        "w_r": meta((D, D), ("embed", "mlp"), dtype),
+        "w_k": meta((D, D), ("embed", "mlp"), dtype),
+        "w_v": meta((D, D), ("embed", "mlp"), dtype),
+        "w_g": meta((D, D), ("embed", "mlp"), dtype),
+        "ln_scale": meta((H, Dh), ("heads", "head_dim"), dtype, init="ones"),
+        "w_o": meta((D, D), ("mlp", "embed"), dtype),
+    }
+
+
+def _rwkv_mix(p, x, shifted):
+    """RWKV-6 data-dependent token-shift (ddlerp) producing the five mixed
+    streams (w, k, v, r, g). x/shifted: (B, S, D)."""
+    dx = shifted - x
+    base = x + dx * p["mu_x"]
+    low = jnp.tanh(base @ p["ddl_a"])                      # (B, S, 5*lora)
+    low = low.reshape(*low.shape[:-1], 5, -1)              # (B, S, 5, lora)
+    mix = p["mu"] + jnp.einsum("bsfl,fld->bsfd", low, p["ddl_b"])
+    return x[..., None, :] + dx[..., None, :] * mix        # (B, S, 5, D)
+
+
+def _rwkv_chunk_scan(r, k, v, lw, u, S0, chunk: int):
+    """Chunkwise-parallel WKV6. r/k/v: (B, H, S, Dh); lw: log-decay (B, H, S,
+    Dh) (<=0); u: (H, Dh) bonus; S0: (B, H, Dh, Dh) initial state.
+    Returns out (B, H, S, Dh), S_final."""
+    B, H, S, Dh = r.shape
+    C = min(chunk, S)
+    assert S % C == 0
+    n = S // C
+    rc = r.reshape(B, H, n, C, Dh)
+    kc = k.reshape(B, H, n, C, Dh)
+    vc = v.reshape(B, H, n, C, Dh)
+    lwc = lw.reshape(B, H, n, C, Dh)
+
+    tri = jnp.tril(jnp.ones((C, C), bool), k=-1)           # strict lower
+
+    def body(S_prev, inp):
+        rb, kb, vb, lwb = inp                               # (B, H, C, Dh)
+        c_incl = jnp.cumsum(lwb, axis=2)                    # inclusive
+        c_prev = c_incl - lwb                               # exclusive
+        r_tld = (rb * jnp.exp(c_prev)).astype(jnp.float32)
+        k_tld = (kb * jnp.exp(-c_incl)).astype(jnp.float32)
+        # intra-chunk: A[t,j] = sum_d r~[t,d] k~[j,d]  (j < t)
+        A = jnp.einsum("bhtd,bhjd->bhtj", r_tld, k_tld)
+        A = jnp.where(tri[None, None], A, 0.0)
+        intra = jnp.einsum("bhtj,bhjd->bhtd", A, vb.astype(jnp.float32))
+        # diagonal bonus term
+        diag = jnp.einsum("bhtd,bhtd->bht", rb.astype(jnp.float32),
+                          u[None, :, None, :] * kb.astype(jnp.float32))
+        intra = intra + diag[..., None] * vb.astype(jnp.float32)
+        # inter-chunk from carried state
+        inter = jnp.einsum("bhtd,bhdv->bhtv", r_tld, S_prev)
+        # state update
+        tot = c_incl[:, :, -1:, :]                          # (B, H, 1, Dh)
+        k_dec = (kb * jnp.exp(tot - c_incl)).astype(jnp.float32)
+        S_new = S_prev * jnp.exp(tot[:, :, 0, :])[..., None] + jnp.einsum(
+            "bhtd,bhtv->bhdv", k_dec, vb.astype(jnp.float32))
+        return S_new, intra + inter
+
+    inp = (jnp.moveaxis(rc, 2, 0), jnp.moveaxis(kc, 2, 0),
+           jnp.moveaxis(vc, 2, 0), jnp.moveaxis(lwc, 2, 0))
+    S_f, outs = jax.lax.scan(body, S0.astype(jnp.float32), inp)
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, S, Dh)
+    return out, S_f
+
+
+def rwkv6_apply(p, x, *, cfg, mode: str, cache=None, chunk: int = 64):
+    """RWKV-6 time-mix block. cache: (shift (B, D), state (B, H, Dh, Dh))."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    Dh = D // H
+    if cache is None:
+        cache = (jnp.zeros((B, D), x.dtype),
+                 jnp.zeros((B, H, Dh, Dh), jnp.float32))
+    shift_in, S0 = cache
+    shifted = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    mixed = _rwkv_mix(p, x, shifted)                        # (B, S, 5, D)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+    lw = p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    lw = -jnp.exp(jnp.clip(lw.astype(jnp.float32), -8.0, 4.0))  # log-decay <= 0
+    lw = jnp.clip(lw, -8.0, -1e-4)
+
+    def heads(t):
+        return t.reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+
+    r = heads(xr @ p["w_r"])
+    k = heads(xk @ p["w_k"])
+    v = heads(xv @ p["w_v"])
+    g = jax.nn.silu(xg @ p["w_g"])
+    lwh = heads(lw)
+
+    if mode == "decode":
+        # single-step recurrence
+        rb, kb, vb = r[:, :, 0], k[:, :, 0], v[:, :, 0]     # (B, H, Dh)
+        u = p["bonus"]
+        wkv = S0 + u[None, :, :, None] * jnp.einsum("bhd,bhv->bhdv",
+                                                    kb.astype(jnp.float32),
+                                                    vb.astype(jnp.float32))
+        out = jnp.einsum("bhd,bhdv->bhv", rb.astype(jnp.float32), wkv)
+        S_new = S0 * jnp.exp(lwh[:, :, 0])[..., None] + jnp.einsum(
+            "bhd,bhv->bhdv", kb.astype(jnp.float32), vb.astype(jnp.float32))
+        out = out[:, :, None]                               # (B, H, 1, Dh)
+    else:
+        out, S_new = _rwkv_chunk_scan(r, k, v, lwh, p["bonus"], S0, chunk)
+
+    out = rmsnorm({"scale": p["ln_scale"]},
+                  out.transpose(0, 2, 1, 3)).reshape(B, S, D)
+    y = ((out.astype(x.dtype) * g) @ p["w_o"]).astype(x.dtype)
+    new_cache = (x[:, -1], S_new)
+    return y, new_cache

@@ -1,0 +1,576 @@
+"""Model assembly: decoder LMs, enc-dec, MoE/MLA/recurrent mixers, frontends.
+
+Layers are grouped into *segments* — (pattern, repeats) pairs where a pattern
+is a short tuple of layer descriptors and the segment lowers to one
+``lax.scan`` over the stacked pattern parameters (HLO size is O(|pattern|),
+not O(n_layers); deepseek-v3's 61 layers compile as 2 scanned bodies). Every
+mode (train / prefill / decode) walks the same segment structure; caches are
+pytrees stacked along the scan dimension.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import recurrent as rec
+from .common import (chunked_softmax_xent, embed, embed_meta, logits_fn, make_norm,
+                     mlp, mlp_meta, unembed_meta)
+from .params import ParamMeta, init_tree, is_meta, meta, shape_dtype_tree
+
+
+# ---------------- layer descriptors & segments ----------------
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    mixer: str     # attn | attn_local | rg | rwkv | mla
+    mlp: str       # dense | moe
+    cross: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: Tuple[LayerDesc, ...]
+    repeats: int
+
+
+def layer_descs(cfg: ModelConfig, cross: bool = False) -> List[LayerDesc]:
+    kinds = cfg.layer_kinds()
+    descs = []
+    for i, k in enumerate(kinds):
+        if cfg.use_mla and k == "attn":
+            k = "mla"
+        mlp_kind = "moe" if (cfg.n_experts and i >= cfg.first_dense_layers) else "dense"
+        descs.append(LayerDesc(k, mlp_kind, cross))
+    return descs
+
+
+def make_segments(descs: Sequence[LayerDesc]) -> List[Segment]:
+    """Greedy periodic segmentation: find the shortest repeating unit of the
+    remaining prefix, take as many whole repeats as possible."""
+    segs: List[Segment] = []
+    i = 0
+    n = len(descs)
+    while i < n:
+        best = (1, 1)  # fall back to a single unrolled layer
+        for plen in range(1, min(8, (n - i) // 2) + 1):
+            pat = descs[i:i + plen]
+            reps = 1
+            while descs[i + reps * plen: i + (reps + 1) * plen] == pat:
+                reps += 1
+            # only repeating units are worth a scan; unrolled singletons
+            # otherwise (keeps heterogeneous prefixes like deepseek's 3 dense
+            # layers out of wide unrolled patterns)
+            if reps >= 2 and reps * plen > best[0] * best[1]:
+                best = (plen, reps)
+        plen, reps = best
+        segs.append(Segment(tuple(descs[i:i + plen]), reps))
+        i += plen * reps
+    return segs
+
+
+# ---------------- per-layer params ----------------
+def _mixer_meta(cfg: ModelConfig, kind: str, dtype):
+    if kind in ("attn", "attn_local"):
+        return attn.attn_meta(cfg, dtype)
+    if kind == "mla":
+        return attn.mla_meta(cfg, dtype)
+    if kind == "rg":
+        return rec.rglru_meta(cfg, dtype)
+    if kind == "rwkv":
+        return rec.rwkv6_meta(cfg, dtype)
+    raise ValueError(kind)
+
+
+def layer_meta(cfg: ModelConfig, desc: LayerDesc):
+    norm_meta_fn, _ = make_norm(cfg)
+    dtype = cfg.pdtype
+    p = {
+        "norm1": norm_meta_fn(cfg.d_model, dtype),
+        "mixer": _mixer_meta(cfg, desc.mixer, dtype),
+        "norm2": norm_meta_fn(cfg.d_model, dtype),
+        "mlp": (moe_mod.moe_meta(cfg, dtype) if desc.mlp == "moe"
+                else mlp_meta(cfg.d_model, cfg.d_ff, dtype, bias=False)),
+    }
+    if desc.cross:
+        p["norm_cross"] = norm_meta_fn(cfg.d_model, dtype)
+        p["cross"] = attn.attn_meta(cfg, dtype)
+    return p
+
+
+def _stack_meta(tree, n: int):
+    return jax.tree.map(
+        lambda m: ParamMeta((n,) + m.shape, ("stack",) + m.axes, m.dtype,
+                            m.init, m.scale),
+        tree, is_leaf=is_meta)
+
+
+def segment_meta(cfg: ModelConfig, seg: Segment):
+    pat = {f"L{j}": layer_meta(cfg, d) for j, d in enumerate(seg.pattern)}
+    return _stack_meta(pat, seg.repeats) if seg.repeats > 1 else pat
+
+
+# ---------------- layer forward ----------------
+def _theta_window(cfg: ModelConfig, desc: LayerDesc):
+    if desc.mixer == "attn_local":
+        return cfg.rope_theta, cfg.window
+    theta = cfg.rope_theta_global or cfg.rope_theta
+    return theta, None
+
+
+def layer_apply(lp, x, desc: LayerDesc, *, cfg: ModelConfig, mode: str,
+                cache, positions, cur_pos, mesh, batch_axes,
+                cross_memory=None, kv_len=None):
+    _, norm = make_norm(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if desc.cross and isinstance(cache, dict):
+        mixer_cache, cross_cache = cache["self"], cache["cross"]
+    else:
+        mixer_cache, cross_cache = cache, None
+    h = norm(lp["norm1"], x)
+    if desc.mixer in ("attn", "attn_local"):
+        theta, window = _theta_window(cfg, desc)
+        h, new_cache = attn.attn_apply(
+            lp["mixer"], h, cfg=cfg, rope_theta=theta, window=window,
+            positions=positions, mode=mode, cache=mixer_cache, cur_pos=cur_pos,
+            kv_len=kv_len, causal=cfg.causal)
+    elif desc.mixer == "mla":
+        h, new_cache = attn.mla_apply(lp["mixer"], h, cfg=cfg,
+                                      positions=positions, mode=mode,
+                                      cache=mixer_cache, cur_pos=cur_pos)
+    elif desc.mixer == "rg":
+        h, new_cache = rec.rglru_apply(lp["mixer"], h, cfg=cfg, mode=mode,
+                                       cache=mixer_cache)
+    elif desc.mixer == "rwkv":
+        h, new_cache = rec.rwkv6_apply(lp["mixer"], h, cfg=cfg, mode=mode,
+                                       cache=mixer_cache, chunk=cfg.rwkv_chunk)
+    else:
+        raise ValueError(desc.mixer)
+    x = x + h
+
+    if desc.cross:
+        h = norm(lp["norm_cross"], x)
+        h, new_cross = attn.attn_apply(
+            lp["cross"], h, cfg=cfg, rope_theta=cfg.rope_theta, window=None,
+            positions=positions, mode=mode, cache=cross_cache,
+            cur_pos=cur_pos, cross_memory=cross_memory, is_cross=True)
+        x = x + h
+        new_cache = {"self": new_cache, "cross": new_cross}
+
+    h = norm(lp["norm2"], x)
+    if desc.mlp == "moe":
+        h, aux = moe_mod.moe_apply(lp["mlp"], h, cfg=cfg, mesh=mesh,
+                                   batch_axes=batch_axes,
+                                   capacity_factor=cfg.capacity_factor,
+                                   mode=mode)
+    else:
+        h = mlp(lp["mlp"], h, cfg.act)
+    x = x + h
+    return x, new_cache, aux
+
+
+# ---------------- cache construction ----------------
+def cache_meta_for_desc(cfg: ModelConfig, desc: LayerDesc, batch: int,
+                        max_len: int, enc_len: int = 0):
+    """ShapeDtypeStruct tree for one layer's decode cache."""
+    ad = cfg.adtype
+    D = cfg.d_model
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+    if desc.mixer in ("attn", "attn_local"):
+        _, window = _theta_window(cfg, desc)
+        M = min(max_len, window) if window else max_len
+        kv = sds((batch, M, cfg.n_kv_heads, cfg.head_dim), ad)
+        base = (kv, kv)
+    elif desc.mixer == "mla":
+        base = (sds((batch, max_len, cfg.kv_lora_rank), ad),
+                sds((batch, max_len, cfg.qk_rope_dim), ad))
+    elif desc.mixer == "rg":
+        base = (sds((batch, cfg.conv_width - 1, cfg.lru_width), ad),
+                sds((batch, cfg.lru_width), jnp.float32))
+    elif desc.mixer == "rwkv":
+        Dh = D // cfg.n_heads
+        base = (sds((batch, D), ad),
+                sds((batch, cfg.n_heads, Dh, Dh), jnp.float32))
+    else:
+        raise ValueError(desc.mixer)
+    if desc.cross:
+        ckv = sds((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), ad)
+        return {"self": base, "cross": (ckv, ckv)}
+    return base
+
+
+def cache_meta(cfg: ModelConfig, segments: Sequence[Segment], batch: int,
+               max_len: int, enc_len: int = 0):
+    out = []
+    for seg in segments:
+        unit = {f"L{j}": cache_meta_for_desc(cfg, d, batch, max_len, enc_len)
+                for j, d in enumerate(seg.pattern)}
+        if seg.repeats > 1:
+            unit = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((seg.repeats,) + s.shape, s.dtype),
+                unit)
+        out.append(unit)
+    return out
+
+
+def zeros_like_meta(tree):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+
+# ---------------- segment walk ----------------
+def segment_apply(seg_p, x, seg: Segment, *, cfg: ModelConfig, mode: str,
+                  caches, positions, cur_pos, mesh, batch_axes,
+                  cross_memory=None, kv_len=None, unshard=None):
+    """Run one segment. caches: stacked cache pytree or None (train).
+
+    ``unshard``: optional NamedSharding tree (one unit, unstacked) applied to
+    the layer's parameters before use — the explicit FSDP unshard. Without it
+    XLA may resolve the weight-over-data x batch-over-data conflict by
+    all-reducing activations (orders of magnitude more collective bytes, see
+    EXPERIMENTS.md §Perf iteration 1); constraining the per-layer weight slice
+    to its data-replicated spec forces the per-layer weight all-gather
+    (forward) / gradient reduce-scatter (backward) instead. MoE expert weights
+    keep their FSDP spec — the MoE block gathers them itself."""
+
+    def unit(lp, xx, cache_unit):
+        if unshard is not None:
+            lp = jax.tree.map(jax.lax.with_sharding_constraint, lp, unshard)
+        aux = jnp.zeros((), jnp.float32)
+        new_c = {}
+        for j, d in enumerate(seg.pattern):
+            c = cache_unit[f"L{j}"] if cache_unit is not None else None
+            xx, nc, a = layer_apply(lp[f"L{j}"], xx, d, cfg=cfg, mode=mode,
+                                    cache=c, positions=positions,
+                                    cur_pos=cur_pos, mesh=mesh,
+                                    batch_axes=batch_axes,
+                                    cross_memory=cross_memory, kv_len=kv_len)
+            new_c[f"L{j}"] = nc
+            aux = aux + a
+        return xx, new_c, aux
+
+    if seg.repeats == 1:
+        return unit(seg_p, x, caches)
+
+    if not cfg.scan_layers:
+        # unrolled walk over the stacked params (used by the roofline's
+        # scan-count correction; lax.scan bodies are costed once by XLA)
+        aux = jnp.zeros((), jnp.float32)
+        ncs = []
+        for r in range(seg.repeats):
+            lp = jax.tree.map(lambda t: t[r], seg_p)
+            cu = (jax.tree.map(lambda t: t[r], caches)
+                  if caches is not None else None)
+            x, nc, a = unit(lp, x, cu)
+            ncs.append(nc)
+            aux = aux + a
+        new_caches = (jax.tree.map(lambda *ts: jnp.stack(ts), *ncs)
+                      if caches is not None else None)
+        return x, new_caches, aux
+
+    if mode == "train" and cfg.remat:
+        unit_fn = jax.checkpoint(lambda lp, xx: unit(lp, xx, None)[::2],
+                                 prevent_cse=False)
+
+        def body(carry, lp):
+            xx, aux = carry
+            xx, a = unit_fn(lp, xx)
+            return (xx, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), seg_p)
+        return x, None, aux
+
+    def body(carry, inp):
+        xx, aux = carry
+        lp, cu = inp
+        xx, nc, a = unit(lp, xx, cu)
+        return (xx, aux + a), nc
+
+    xs = (seg_p, caches) if caches is not None else (seg_p, None)
+    if caches is None:
+        def body_nc(carry, lp):
+            xx, aux = carry
+            xx, nc, a = unit(lp, xx, None)
+            return (xx, aux + a), nc
+        (x, aux), new_caches = jax.lax.scan(
+            body_nc, (x, jnp.zeros((), jnp.float32)), seg_p)
+    else:
+        (x, aux), new_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, new_caches, aux
+
+
+# ---------------- the model ----------------
+class LM:
+    """Decoder-only / enc-dec language model with pluggable mixers."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.descs = layer_descs(cfg, cross=cfg.n_enc_layers > 0)
+        self.segments = make_segments(self.descs)
+        self.enc_cfg = None
+        self.enc_segments = None
+        if cfg.n_enc_layers:
+            self.enc_cfg = dataclasses.replace(cfg, causal=False,
+                                               n_layers=cfg.n_enc_layers,
+                                               n_experts=0, use_mla=False,
+                                               block_pattern=(),
+                                               local_per_global=0)
+            self.enc_segments = make_segments(layer_descs(self.enc_cfg))
+
+    # ----- params -----
+    def abstract_params(self):
+        cfg = self.cfg
+        norm_meta_fn, _ = make_norm(cfg)
+        p: Dict[str, Any] = {
+            "embed": embed_meta(cfg.vocab, cfg.d_model, cfg.pdtype),
+            "final_norm": norm_meta_fn(cfg.d_model, cfg.pdtype),
+            "head": unembed_meta(cfg.vocab, cfg.d_model, cfg.pdtype,
+                                 cfg.tie_embeddings),
+            "segments": [segment_meta(cfg, s) for s in self.segments],
+        }
+        if self.enc_cfg is not None:
+            p["encoder"] = {
+                "segments": [segment_meta(self.enc_cfg, s)
+                             for s in self.enc_segments],
+                "final_norm": norm_meta_fn(cfg.d_model, cfg.pdtype),
+            }
+        if cfg.frontend in ("vision_stub", "audio_stub") and cfg.frontend_dim:
+            p["frontend_proj"] = {
+                "w": meta((cfg.frontend_dim, cfg.d_model), (None, "embed"),
+                          cfg.pdtype)}
+        if cfg.mtp:
+            p["mtp"] = {
+                "proj": meta((2 * cfg.d_model, cfg.d_model), (None, "embed"),
+                             cfg.pdtype),
+                "norm_h": norm_meta_fn(cfg.d_model, cfg.pdtype),
+                "norm_e": norm_meta_fn(cfg.d_model, cfg.pdtype),
+                "layer": layer_meta(cfg, LayerDesc(
+                    "mla" if cfg.use_mla else "attn",
+                    "moe" if cfg.n_experts else "dense")),
+            }
+        return p
+
+    def init(self, key):
+        return init_tree(self.abstract_params(), key)
+
+    # ----- explicit FSDP unshard specs (see segment_apply docstring) -----
+    def _unit_unshard(self, seg: Segment, mesh, cfg):
+        if mesh is None:
+            return None
+        from jax.sharding import NamedSharding
+        from . import params as pr
+        pat = {f"L{j}": layer_meta(cfg, d) for j, d in enumerate(seg.pattern)}
+
+        def f(m):
+            keep_fsdp = any(a in ("expert", "expert_mlp") for a in m.axes)
+            rules = pr.DEFAULT_RULES if keep_fsdp else pr.SERVE_RULES
+            return NamedSharding(mesh, pr.spec_for(m, mesh, rules))
+
+        return pr.map_tree(f, pat)
+
+    def _gather_embed(self, params, mesh):
+        """Strip the FSDP ('data') axis from the embedding/head weights once
+        per step (they are reused by every loss chunk)."""
+        if mesh is None:
+            return params
+        from jax.sharding import NamedSharding
+        from . import params as pr
+        out = dict(params)
+        emb_meta = embed_meta(self.cfg.vocab, self.cfg.d_model, self.cfg.pdtype)
+        out["embed"] = {"table": jax.lax.with_sharding_constraint(
+            params["embed"]["table"],
+            NamedSharding(mesh, pr.spec_for(emb_meta["table"], mesh,
+                                            pr.SERVE_RULES)))}
+        if not self.cfg.tie_embeddings and params.get("head"):
+            hm = unembed_meta(self.cfg.vocab, self.cfg.d_model,
+                              self.cfg.pdtype, False)
+            out["head"] = {"w_out": jax.lax.with_sharding_constraint(
+                params["head"]["w_out"],
+                NamedSharding(mesh, pr.spec_for(hm["w_out"], mesh,
+                                                pr.SERVE_RULES)))}
+        return out
+
+    def param_count(self) -> int:
+        from .params import count_params
+        return count_params(self.abstract_params())
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top_k of routed experts)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if not cfg.n_experts:
+            return total
+        from .params import count_params
+        moe_layers = sum(1 for d in self.descs if d.mlp == "moe")
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        total -= moe_layers * (cfg.n_experts - cfg.top_k) * per_expert
+        return total
+
+    # ----- embedding -----
+    def _embed_tokens(self, params, tokens):
+        x = embed(params["embed"], tokens).astype(self.cfg.adtype)
+        if self.cfg.embed_scale:
+            x = x * jnp.sqrt(jnp.asarray(self.cfg.d_model, jnp.float32)
+                             ).astype(x.dtype)
+        return x
+
+    def _frontend(self, params, batch, tokens_x):
+        """Prepend projected patch/frame embeddings (vlm stub)."""
+        emb = batch["patches"].astype(self.cfg.adtype)
+        if "frontend_proj" in params:
+            emb = emb @ params["frontend_proj"]["w"].astype(emb.dtype)
+        return jnp.concatenate([emb, tokens_x], axis=1)
+
+    def _encode(self, params, frames, mesh, batch_axes):
+        cfg = self.enc_cfg
+        x = frames.astype(cfg.adtype)
+        if "frontend_proj" in params:
+            x = x @ params["frontend_proj"]["w"].astype(x.dtype)
+        positions = jnp.arange(x.shape[1])
+        aux = jnp.zeros((), jnp.float32)
+        for sp, seg in zip(params["encoder"]["segments"], self.enc_segments):
+            x, _, a = segment_apply(sp, x, seg, cfg=cfg, mode="train",
+                                    caches=None, positions=positions,
+                                    cur_pos=None, mesh=mesh,
+                                    batch_axes=batch_axes,
+                                    unshard=self._unit_unshard(seg, mesh, cfg))
+            aux = aux + a
+        _, norm = make_norm(cfg)
+        return norm(params["encoder"]["final_norm"], x), aux
+
+    # ----- train -----
+    def train_loss(self, params, batch, *, mesh=None, batch_axes=("data",)):
+        cfg = self.cfg
+        params = self._gather_embed(params, mesh)
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        x = self._embed_tokens(params, tokens)
+        cross_memory = None
+        aux_total = jnp.zeros((), jnp.float32)
+        if self.enc_cfg is not None:
+            cross_memory, a = self._encode(params, batch["frames"], mesh,
+                                           batch_axes)
+            aux_total += a
+        if cfg.frontend == "vision_stub":
+            x = self._frontend(params, batch, x)
+            pad = jnp.full((labels.shape[0], batch["patches"].shape[1]), -1,
+                           labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        positions = jnp.arange(x.shape[1])
+        for sp, seg in zip(params["segments"], self.segments):
+            x, _, a = segment_apply(sp, x, seg, cfg=cfg, mode="train",
+                                    caches=None, positions=positions,
+                                    cur_pos=None, mesh=mesh,
+                                    batch_axes=batch_axes,
+                                    cross_memory=cross_memory,
+                                    unshard=self._unit_unshard(seg, mesh, cfg))
+            aux_total += a
+        _, norm = make_norm(cfg)
+        x = norm(params["final_norm"], x)
+        mask = (labels >= 0).astype(jnp.float32)
+        lab = jnp.maximum(labels, 0)
+        lf = lambda xc: logits_fn(params.get("head", {}), params["embed"], xc,
+                                  cfg.tie_embeddings)
+        loss, denom = chunked_softmax_xent(lf, x, lab, mask)
+        metrics = {"xent": loss, "aux": aux_total, "tokens": denom}
+        if cfg.mtp:
+            mtp_loss = self._mtp_loss(params, x, tokens, labels, mesh,
+                                      batch_axes, positions)
+            metrics["mtp"] = mtp_loss
+            loss = loss + 0.3 * mtp_loss
+        if cfg.n_experts:
+            loss = loss + 0.01 * aux_total
+        return loss, metrics
+
+    def _mtp_loss(self, params, h, tokens, labels, mesh, batch_axes, positions):
+        """DeepSeek-V3 multi-token prediction: one extra block predicts t+2
+        from [h_t ; emb(token_{t+1})]."""
+        cfg = self.cfg
+        _, norm = make_norm(cfg)
+        h_in = norm(params["mtp"]["norm_h"], h[:, :-1])
+        e_in = norm(params["mtp"]["norm_e"],
+                    self._embed_tokens(params, tokens[:, 1:]))
+        x = jnp.concatenate([h_in, e_in], axis=-1) @ params["mtp"]["proj"].astype(h.dtype)
+        desc = LayerDesc("mla" if cfg.use_mla else "attn",
+                         "moe" if cfg.n_experts else "dense")
+        lp = params["mtp"]["layer"]
+        if mesh is not None:
+            us = self._unit_unshard(Segment((desc,), 1), mesh, cfg)["L0"]
+            lp = jax.tree.map(jax.lax.with_sharding_constraint, lp, us)
+        x, _, _ = layer_apply(lp, x, desc, cfg=cfg, mode="train", cache=None,
+                              positions=positions[:-1], cur_pos=None,
+                              mesh=mesh, batch_axes=batch_axes)
+        x = norm(params["final_norm"], x)
+        lab = labels[:, 1:]
+        mask = (lab >= 0).astype(jnp.float32)
+        lf = lambda xc: logits_fn(params.get("head", {}), params["embed"], xc,
+                                  cfg.tie_embeddings)
+        loss, _ = chunked_softmax_xent(lf, x, jnp.maximum(lab, 0), mask)
+        return loss
+
+    # ----- prefill -----
+    def prefill(self, params, batch, *, mesh=None, batch_axes=("data",),
+                max_len: Optional[int] = None):
+        """Full-prompt forward; returns (last_logits, caches).
+
+        Prefill caches are emitted at prompt length; the decode cache layout
+        (``cache_meta``) is seeded from them by the serving engine."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_tokens(params, tokens)
+        cross_memory = None
+        if self.enc_cfg is not None:
+            cross_memory, _ = self._encode(params, batch["frames"], mesh,
+                                           batch_axes)
+        if cfg.frontend == "vision_stub":
+            x = self._frontend(params, batch, x)
+        positions = jnp.arange(x.shape[1])
+        caches = []
+        for sp, seg in zip(params["segments"], self.segments):
+            x, nc, _ = segment_apply(sp, x, seg, cfg=cfg, mode="prefill",
+                                     caches=None, positions=positions,
+                                     cur_pos=None, mesh=mesh,
+                                     batch_axes=batch_axes,
+                                     cross_memory=cross_memory)
+            caches.append(nc)
+        _, norm = make_norm(cfg)
+        x = norm(params["final_norm"], x)
+        last = x[:, -1:]
+        logits = logits_fn(params.get("head", {}), params["embed"], last,
+                           cfg.tie_embeddings)
+        return logits, caches
+
+    # ----- decode -----
+    def decode_step(self, params, caches, tokens, cur_pos, *, mesh=None,
+                    batch_axes=("data",), cross_memory=None):
+        """One token for every sequence. tokens: (B, 1); cur_pos: scalar."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens)
+        positions = jnp.asarray(cur_pos)[None]
+        new_caches = []
+        for sp, seg, cu in zip(params["segments"], self.segments, caches):
+            x, nc, _ = segment_apply(sp, x, seg, cfg=cfg, mode="decode",
+                                     caches=cu, positions=positions,
+                                     cur_pos=cur_pos, mesh=mesh,
+                                     batch_axes=batch_axes,
+                                     cross_memory=cross_memory)
+            new_caches.append(nc)
+        _, norm = make_norm(cfg)
+        x = norm(params["final_norm"], x)
+        logits = logits_fn(params.get("head", {}), params["embed"], x,
+                           cfg.tie_embeddings)
+        return logits, new_caches
+
+    # ----- shapes -----
+    def decode_cache_meta(self, batch: int, max_len: int, enc_len: int = 0):
+        return cache_meta(self.cfg, self.segments, batch, max_len, enc_len)

@@ -1,0 +1,121 @@
+"""Serving: cache seeding (prefill -> decode layout), greedy generation, and a
+batched request engine that pairs LM embedding with MSTG retrieval (the
+paper's deployment: RR-filtered vector search behind a model endpoint)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import LM, Segment
+
+
+def _seed_leaf(prefill_leaf, target_sds, prompt_len: int):
+    """Place a prefill cache leaf into its decode-capacity layout."""
+    z = jnp.zeros(target_sds.shape, target_sds.dtype)
+    if prefill_leaf is None:
+        return z
+    x = prefill_leaf.astype(target_sds.dtype)
+    if x.shape == tuple(target_sds.shape):
+        return x
+    # sequence-extendable leaves: (B, P, ...) -> (B, M, ...)
+    M = target_sds.shape[1]
+    P = x.shape[1]
+    if P <= M:
+        return jax.lax.dynamic_update_slice_in_dim(z, x, 0, 1)
+    # ring cache smaller than the prompt: keep the last M entries at their
+    # ring slots (slot = pos % M)
+    tail = x[:, P - M:]
+    pos = np.arange(P - M, P)
+    slots = pos % M
+    return z.at[:, slots].set(tail)
+
+
+def seed_caches(lm: LM, prefill_caches, batch: int, max_len: int,
+                prompt_len: int, enc_len: int = 0):
+    """Convert prefill caches (prompt-length kv / recurrent states) into the
+    decode cache layout from ``lm.decode_cache_meta``."""
+    metas = lm.decode_cache_meta(batch, max_len, enc_len)
+    out = []
+    for seg_meta, seg_cache in zip(metas, prefill_caches):
+        out.append(jax.tree.map(
+            lambda sds, leaf: _seed_leaf(leaf, sds, prompt_len),
+            seg_meta, seg_cache))
+    return out
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray        # (B, n_new)
+    logits_last: np.ndarray
+
+
+class ServeEngine:
+    """Batched greedy decoding over the LM API (single host; the distributed
+    decode path is exercised by launch/dryrun.py shardings)."""
+
+    def __init__(self, lm: LM, params, mesh=None, batch_axes=("data",)):
+        self.lm = lm
+        self.params = params
+        self.mesh = mesh
+        self.batch_axes = batch_axes
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(p, c, t, pos, mesh=mesh,
+                                                batch_axes=batch_axes))
+
+    def generate(self, batch: Dict[str, Any], n_new: int, max_len: int
+                 ) -> GenerationResult:
+        lm = self.lm
+        tokens = batch["tokens"]
+        B, P = tokens.shape
+        logits, prefill_caches = lm.prefill(self.params, batch, mesh=self.mesh,
+                                            batch_axes=self.batch_axes)
+        enc_len = batch["frames"].shape[1] if "frames" in batch else 0
+        prompt_len = P + (batch["patches"].shape[1] if "patches" in batch else 0)
+        caches = seed_caches(lm, prefill_caches, B, max_len, prompt_len, enc_len)
+        out = []
+        cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        for i in range(n_new):
+            out.append(np.asarray(cur))
+            logits, caches = self._decode(self.params, caches, cur,
+                                          jnp.asarray(prompt_len + i, jnp.int32))
+            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return GenerationResult(tokens=np.concatenate(out, 1),
+                                logits_last=np.asarray(logits))
+
+
+class RetrievalServer:
+    """The paper's serving scenario: requests carry (text -> query vector via
+    the LM's embedding table pooling) + an RR predicate; answers come from the
+    MSTG searcher. Batched: requests are queued and executed per tick."""
+
+    def __init__(self, searcher, embed_fn, k: int = 10, ef: int = 64):
+        self.searcher = searcher
+        self.embed_fn = embed_fn
+        self.k = k
+        self.ef = ef
+        self.queue: List[Tuple[Any, float, float, int]] = []
+
+    def submit(self, item, qlo: float, qhi: float, mask: int):
+        self.queue.append((item, qlo, qhi, mask))
+
+    def tick(self):
+        """Execute all queued requests, grouped by predicate mask."""
+        results = {}
+        by_mask: Dict[int, List[int]] = {}
+        for i, (_, _, _, mask) in enumerate(self.queue):
+            by_mask.setdefault(mask, []).append(i)
+        for mask, idxs in by_mask.items():
+            vecs = np.stack([self.embed_fn(self.queue[i][0]) for i in idxs])
+            qlo = np.array([self.queue[i][1] for i in idxs])
+            qhi = np.array([self.queue[i][2] for i in idxs])
+            ids, d = self.searcher.search(vecs, qlo, qhi, mask, k=self.k,
+                                          ef=self.ef)
+            for j, i in enumerate(idxs):
+                results[i] = (ids[j], d[j])
+        self.queue.clear()
+        return results

@@ -1,0 +1,4 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from .train_loop import make_train_step, TrainLoop, StragglerWatchdog
+from .grad_compression import (compressed_grad_sync, compressed_mean,
+                               init_residuals, quantize_int8, dequantize_int8)

@@ -1,0 +1,24 @@
+import os
+import sys
+
+# NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
+# benches must see the real single CPU device; only launch/dryrun.py forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+from repro.data import make_range_dataset
+
+
+@pytest.fixture(scope="session")
+def small_ds():
+    return make_range_dataset(n=600, d=16, n_queries=12, quantize=32, seed=0)
+
+
+@pytest.fixture(scope="session")
+def built_index(small_ds):
+    from repro.core import MSTGIndex
+    ds = small_ds
+    return MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp", "Tpp"),
+                     m=8, ef_con=40)

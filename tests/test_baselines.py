@@ -1,0 +1,79 @@
+"""Baselines return valid, predicate-satisfying results with sane recall."""
+import numpy as np
+import pytest
+
+from repro.core import ANY_OVERLAP, intervals as iv
+from repro.core.baselines import (Prefiltering, Postfiltering, AcornLike,
+                                  IRangeGraphLike, TSGraphLike, HiPNGLike)
+from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_range_dataset(n=500, d=16, n_queries=10, quantize=32, seed=9)
+
+
+def test_prefiltering_exact(ds):
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=1)
+    tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                 qlo, qhi, ANY_OVERLAP, 10)
+    b = Prefiltering(ds.vectors, ds.lo, ds.hi)
+    ids, d = b.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=10)
+    assert recall_at_k(ids, tids) == 1.0
+    assert b.last_dist_evals > 0
+
+
+@pytest.mark.parametrize("cls,kw", [(Postfiltering, {}), (AcornLike, {})])
+def test_graph_baselines_recall_and_validity(ds, cls, kw):
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.3, seed=2)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                               qlo, qhi, ANY_OVERLAP, 10)
+    b = cls(ds.vectors, ds.lo, ds.hi, m=8, ef_con=40, **kw)
+    ids, d = b.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=10, ef=80)
+    assert recall_at_k(ids, tids) >= 0.55  # baselines are *worse*, not broken
+    for qi in range(ids.shape[0]):
+        got = ids[qi][ids[qi] >= 0]
+        sel = np.asarray(iv.eval_predicate(ANY_OVERLAP, ds.lo[got], ds.hi[got],
+                                           qlo[qi], qhi[qi]))
+        assert sel.all()
+    assert b.index_bytes() > 0
+
+
+def test_irangegraph_rfann(ds):
+    attr = (ds.lo + ds.hi) / 2
+    b = IRangeGraphLike(ds.vectors, attr, m=8, ef_con=40)
+    qlo = np.quantile(attr, 0.2) * np.ones(10)
+    qhi = np.quantile(attr, 0.6) * np.ones(10)
+    tids, _ = brute_force_topk(ds.vectors, attr, attr, ds.queries,
+                               qlo, qhi, iv.RFANN_MASK, 10)
+    ids, d = b.search(ds.queries, qlo, qhi, k=10, ef=64)
+    assert recall_at_k(ids, tids) >= 0.85
+    for qi in range(ids.shape[0]):
+        got = ids[qi][ids[qi] >= 0]
+        assert ((attr[got] >= qlo[qi]) & (attr[got] <= qhi[qi])).all()
+
+
+def test_tsgraph_tsann(ds):
+    b = TSGraphLike(ds.vectors, ds.lo, ds.hi, n_buckets=8, m=8, ef_con=40)
+    t = float(np.median((ds.lo + ds.hi) / 2))
+    qlo = np.full(10, t)
+    qhi = np.full(10, t)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                               qlo, qhi, iv.TSANN_MASK, 10)
+    ids, _ = b.search(ds.queries, qlo, qhi, k=10, ef=64)
+    assert recall_at_k(ids, tids) >= 0.6
+    for qi in range(ids.shape[0]):
+        got = ids[qi][ids[qi] >= 0]
+        assert ((ds.lo[got] <= t) & (ds.hi[got] >= t)).all()
+
+
+def test_hipng_ifann(ds):
+    b = HiPNGLike(ds.vectors, ds.lo, ds.hi, leaf_size=48, m=8, ef_con=40)
+    qlo, qhi = make_queries(ds, iv.IFANN_MASK, 0.25, seed=3)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                               qlo, qhi, iv.IFANN_MASK, 10)
+    ids, _ = b.search(ds.queries, qlo, qhi, k=10, ef=80)
+    assert recall_at_k(ids, tids) >= 0.6
+    for qi in range(ids.shape[0]):
+        got = ids[qi][ids[qi] >= 0]
+        assert ((ds.lo[got] >= qlo[qi]) & (ds.hi[got] <= qhi[qi])).all()

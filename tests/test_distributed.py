@@ -1,0 +1,82 @@
+"""Distributed top-k: single-device meshes inline; an 8-device fake mesh runs
+in a subprocess (XLA device count must be fixed before jax init)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import ANY_OVERLAP
+from repro.distributed import sharded_flat_topk
+from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
+
+
+def test_sharded_flat_single_device(small_ds):
+    ds = small_ds
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=5)
+    # corpus size must divide the shard count (1) — always true
+    ids, d = sharded_flat_topk(mesh, jnp.asarray(ds.vectors),
+                               jnp.asarray(ds.lo, jnp.float32),
+                               jnp.asarray(ds.hi, jnp.float32),
+                               jnp.asarray(ds.queries),
+                               jnp.asarray(qlo, jnp.float32),
+                               jnp.asarray(qhi, jnp.float32),
+                               mask=ANY_OVERLAP, k=10)
+    tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                 qlo, qhi, ANY_OVERLAP, 10)
+    np.testing.assert_allclose(np.sort(np.asarray(d), 1), np.sort(tds, 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+_SUBPROCESS_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.core import ANY_OVERLAP, QUERY_CONTAINED
+    from repro.distributed import sharded_flat_topk
+    from repro.data import make_range_dataset, make_queries, brute_force_topk
+
+    ds = make_range_dataset(n=512, d=16, n_queries=8, quantize=32, seed=1)
+    for mask in (ANY_OVERLAP, QUERY_CONTAINED):
+        qlo, qhi = make_queries(ds, mask, 0.25, seed=2)
+        tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                     qlo, qhi, mask, 10)
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+        for merge in ("all_gather", "tournament"):
+            ids, d = sharded_flat_topk(
+                mesh, jnp.asarray(ds.vectors), jnp.asarray(ds.lo, jnp.float32),
+                jnp.asarray(ds.hi, jnp.float32), jnp.asarray(ds.queries),
+                jnp.asarray(qlo, jnp.float32), jnp.asarray(qhi, jnp.float32),
+                mask=mask, k=10, merge=merge)
+            np.testing.assert_allclose(np.sort(np.asarray(d), 1), np.sort(tds, 1),
+                                       rtol=1e-4, atol=1e-4)
+            # ids must be correctly rebased to global
+            got = set(int(x) for x in np.asarray(ids)[0] if x >= 0)
+            want = set(int(x) for x in tids[0] if x >= 0)
+            dmat = np.sort(np.asarray(d)[0])
+            tmat = np.sort(tds[0])
+            ok = np.allclose(dmat, tmat, rtol=1e-4, atol=1e-4)
+            assert ok, (merge, mask)
+    print("OK-8DEV")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_flat_8dev_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_PROG],
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."), env=env)
+    assert "OK-8DEV" in r.stdout, r.stdout + r.stderr

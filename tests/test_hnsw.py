@@ -1,0 +1,88 @@
+"""Labeled HNSW build invariants incl. Theorem D.1 (label losslessness)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core.hnsw import LabeledLevelGraph, PlainHNSW, rng_prune, l2sq, OPEN
+
+
+def _rand_vectors(n, d, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0, 1, (n, d)).astype(np.float32)
+
+
+def test_rng_prune_keeps_closest_and_caps():
+    V = _rand_vectors(64, 8, 0)
+    base = 0
+    cand = np.arange(1, 64)
+    dists = l2sq(V[cand], V[base])
+    kept = rng_prune(V, base, cand, dists, m=6)
+    assert len(kept) <= 6
+    assert kept[0] == cand[np.argmin(dists)]  # the closest always survives
+
+
+@settings(max_examples=10, deadline=None)
+@given(hst.integers(0, 10_000))
+def test_theorem_d1_label_losslessness(seed):
+    """Induced subgraph at version x == live graph snapshot after inserting
+    the version-x prefix (the paper's Theorem D.1)."""
+    V = _rand_vectors(80, 8, seed)
+    g = LabeledLevelGraph(V, m=4, ef_con=16)
+    rng = np.random.default_rng(seed)
+    versions = np.sort(rng.integers(0, 10, 80))
+    snapshot_at = int(versions[40])
+    snap = None
+    for u in range(80):
+        if snap is None and versions[u] > snapshot_at:
+            snap = {w: list(g.open_adj.get(w, ())) for w in range(u)}
+        g.insert(u, node_idx=0, version=int(versions[u]))
+    if snap is None:
+        snap = {w: list(g.open_adj.get(w, ())) for w in range(80)}
+    for u, live in snap.items():
+        induced = g.induced_adjacency(u, snapshot_at)
+        assert sorted(induced) == sorted(live), f"vertex {u} @ v{snapshot_at}"
+
+
+def test_freeze_roundtrip():
+    V = _rand_vectors(50, 8, 1)
+    g = LabeledLevelGraph(V, m=4, ef_con=16)
+    for u in range(50):
+        g.insert(u, node_idx=0, version=u)
+    tgt, b, e = g.freeze(50)
+    for u in range(50):
+        frozen = [(int(t), int(bb), int(ee)) for t, bb, ee in zip(tgt[u], b[u], e[u])
+                  if t >= 0]
+        assert sorted(frozen) == sorted(g.edge_log(u))
+
+
+def test_plain_hnsw_recall():
+    V = _rand_vectors(400, 16, 2)
+    h = PlainHNSW(V, m=8, ef_con=48).build(range(400))
+    rng = np.random.default_rng(3)
+    ok = 0
+    for _ in range(20):
+        q = V[rng.integers(0, 400)] + 0.01 * rng.normal(0, 1, 16).astype(np.float32)
+        ids, _ = h.search(q, k=10, ef=48)
+        true = np.argsort(l2sq(V, q))[:10]
+        ok += len(set(ids.tolist()) & set(true.tolist()))
+    assert ok / 200 >= 0.9
+
+
+def test_filtered_traversal_only_returns_matching():
+    V = _rand_vectors(300, 8, 4)
+    h = PlainHNSW(V, m=8, ef_con=32).build(range(300))
+    allowed = set(range(0, 300, 3))
+    ids, _ = h.search(V[7], k=10, ef=64, predicate=lambda u: u in allowed)
+    assert all(int(u) in allowed for u in ids)
+
+
+def test_same_version_prune_edge_never_existed():
+    """An edge born and pruned within one version must not appear at any
+    version (the paper's intra-version consistency)."""
+    V = _rand_vectors(60, 4, 5)
+    g = LabeledLevelGraph(V, m=3, ef_con=8)
+    for u in range(60):
+        g.insert(u, node_idx=0, version=0)  # everything at version 0
+    for u in range(60):
+        for (v, b, e) in g.edge_log(u):
+            assert e >= b

@@ -1,0 +1,99 @@
+"""Predicate semantics + Theorem 4.1 planner correctness (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import intervals as iv
+
+
+ATOMIC_MASKS = list(range(1, 16))
+
+
+def test_atomic_truth_table():
+    # object [2, 5]
+    lo, hi = 2.0, 5.0
+    cases = [
+        (iv.LEFT_OVERLAP, 3.0, 8.0, True),     # lo<=3<=5<=8
+        (iv.LEFT_OVERLAP, 0.0, 8.0, False),    # ql < lo
+        (iv.QUERY_CONTAINED, 3.0, 4.0, True),
+        (iv.QUERY_CONTAINED, 1.0, 4.0, False),
+        (iv.RIGHT_OVERLAP, 1.0, 3.0, True),    # 1<=2<=3<=5
+        (iv.RIGHT_OVERLAP, 3.0, 4.0, False),
+        (iv.QUERY_CONTAINING, 1.0, 6.0, True),
+        (iv.QUERY_CONTAINING, 3.0, 6.0, False),
+        (iv.BEFORE, 0.0, 1.0, True),
+        (iv.BEFORE, 0.0, 2.0, False),
+        (iv.AFTER, 6.0, 7.0, True),
+        (iv.AFTER, 5.0, 7.0, False),
+    ]
+    for mask, ql, qh, want in cases:
+        got = bool(iv.eval_predicate(mask, np.array([lo]), np.array([hi]), ql, qh)[0])
+        assert got == want, (iv.mask_name(mask), ql, qh)
+
+
+def test_any_overlap_equals_intersection():
+    rng = np.random.default_rng(0)
+    lo = rng.uniform(0, 10, 500)
+    hi = lo + rng.uniform(0, 5, 500)
+    ql, qh = 3.0, 6.0
+    got = iv.eval_predicate(iv.ANY_OVERLAP, lo, hi, ql, qh)
+    want = (lo <= qh) & (hi >= ql)
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=120, deadline=None)
+@given(hst.integers(1, 15), hst.integers(2, 40), hst.data())
+def test_planner_cover_exact(mask, K, data):
+    """Union of planned task candidate sets == predicate-satisfying set."""
+    rng = np.random.default_rng(data.draw(hst.integers(0, 2**31)))
+    n = 200
+    rl = rng.integers(0, K, n)
+    rr = rl + rng.integers(0, K, n)
+    rr = np.minimum(rr, K - 1)
+    fl = data.draw(hst.integers(-1, K - 1))
+    # derive consistent (fl, cl) pair: either exact rank or between ranks
+    exact_l = data.draw(hst.booleans())
+    cl = fl if (exact_l and fl >= 0) else fl + 1
+    fr = data.draw(hst.integers(max(fl, 0) if cl > fl else fl, K - 1))
+    exact_r = data.draw(hst.booleans())
+    cr = fr if (exact_r and fr >= cl) else fr + 1
+    # ensure query lo <= hi in interpolated coordinates
+    if iv._rank_interp(fl, cl) > iv._rank_interp(fr, cr):
+        return
+    tasks = [t for t in iv.plan_searches_ranked(mask, fl, cl, fr, cr, K)
+             if not t.is_empty(K)]
+    assert len(tasks) <= 2
+    assert iv.check_plan_cover(mask, tasks, rl, rr, fl, cl, fr, cr, K)
+
+
+def test_plan_searches_float_domain():
+    dom = iv.AttributeDomain(np.array([1.0, 2.0, 5.0, 9.0]))
+    # query [1.5, 6.0]: contained objects need lo<=1.5 (rank<=0), hi>=6 (rank>=3)
+    tasks = iv.plan_searches(dom, iv.QUERY_CONTAINED, 1.5, 6.0)
+    assert len(tasks) == 1
+    t = tasks[0]
+    assert t.variant == iv.VARIANT_T and t.version == 0 and t.key_lo == 3
+
+
+def test_variants_required():
+    assert iv.variants_required(iv.QUERY_CONTAINED) == ["T"]
+    assert set(iv.variants_required(iv.ANY_OVERLAP)) == {"T", "Tp"}
+    assert set(iv.variants_required(iv.QUERY_CONTAINING)) == {"Tpp"}
+
+
+def test_planner_max_two_tasks_all_masks():
+    dom = iv.AttributeDomain(np.arange(16.0))
+    for mask in ATOMIC_MASKS:
+        tasks = iv.plan_searches(dom, mask, 3.0, 11.0)
+        assert len(tasks) <= 2, iv.mask_name(mask)
+
+
+def test_allen_disjoint_filters():
+    dom = iv.AttributeDomain(np.arange(10.0))
+    rl = np.arange(10, dtype=np.int64)
+    rr = np.minimum(rl + 2, 9)
+    for mask in (iv.BEFORE, iv.AFTER):
+        tasks = iv.plan_searches(dom, mask, 3.0, 5.0)
+        assert len(tasks) == 1
+        got = iv.check_plan_cover(mask, tasks, rl, rr, 3, 3, 5, 5, 10)
+        assert got

@@ -1,0 +1,152 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+import jax.numpy as jnp
+
+from repro.core import intervals as iv
+from repro.kernels import ops
+from repro.kernels.pairwise_l2 import pairwise_l2_masked
+from repro.kernels.gathered_l2 import gathered_l2, gathered_l2_dot
+from repro.kernels.ref import pairwise_l2_masked_ref, gathered_l2_ref
+
+MASKS = [iv.ANY_OVERLAP, iv.QUERY_CONTAINED, iv.QUERY_CONTAINING,
+         iv.LEFT_OVERLAP | iv.RIGHT_OVERLAP]
+
+
+def _mk(Q, N, d, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(0, 1, (Q, d)).astype(dtype)
+    c = rng.normal(0, 1, (N, d)).astype(dtype)
+    lo = rng.uniform(0, 100, N).astype(np.float32)
+    hi = lo + rng.uniform(0, 30, N).astype(np.float32)
+    ql = rng.uniform(0, 100, Q).astype(np.float32)
+    qh = ql + rng.uniform(0, 30, Q).astype(np.float32)
+    return q, c, lo, hi, ql, qh
+
+
+@pytest.mark.parametrize("mask", MASKS, ids=iv.mask_name)
+@pytest.mark.parametrize("shape", [(3, 5, 8), (16, 130, 32), (9, 257, 17)])
+def test_pairwise_l2_masked_matches_ref(mask, shape):
+    Q, N, d = shape
+    q, c, lo, hi, ql, qh = _mk(Q, N, d, np.float32)
+    got = pairwise_l2_masked(q, c, lo, hi, ql, qh, mask, bq=8, bn=128,
+                             interpret=True)
+    want = pairwise_l2_masked_ref(jnp.asarray(q), jnp.asarray(c),
+                                  jnp.asarray(lo), jnp.asarray(hi),
+                                  jnp.asarray(ql), jnp.asarray(qh), mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hst.integers(1, 12), hst.integers(1, 200), hst.integers(1, 48),
+       hst.sampled_from([np.float32, np.float16]),
+       hst.sampled_from(MASKS), hst.integers(0, 2**30))
+def test_pairwise_l2_masked_hypothesis(Q, N, d, dtype, mask, seed):
+    q, c, lo, hi, ql, qh = _mk(Q, N, d, dtype, seed)
+    got = pairwise_l2_masked(q, c, lo, hi, ql, qh, mask, bq=8, bn=128,
+                             interpret=True)
+    want = pairwise_l2_masked_ref(jnp.asarray(q), jnp.asarray(c),
+                                  jnp.asarray(lo), jnp.asarray(hi),
+                                  jnp.asarray(ql), jnp.asarray(qh), mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(hst.integers(1, 12), hst.integers(1, 40), hst.integers(1, 64),
+       hst.sampled_from([np.float32, np.float16]), hst.integers(0, 2**30))
+def test_gathered_l2_hypothesis(Q, S, d, dtype, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(0, 1, (Q, d)).astype(dtype)
+    cv = rng.normal(0, 1, (Q, S, d)).astype(dtype)
+    want = gathered_l2_ref(jnp.asarray(q), jnp.asarray(cv))
+    for fn in (gathered_l2, gathered_l2_dot):
+        got = fn(q, cv, bq=4, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_bf16_accumulation_is_fp32():
+    """bf16 inputs must not lose the fp32 accumulation contract."""
+    rng = np.random.default_rng(0)
+    q = rng.normal(0, 1, (4, 256)).astype(np.float32)
+    c = rng.normal(0, 1, (8, 256)).astype(np.float32)
+    qb = jnp.asarray(q, jnp.bfloat16)
+    cb = jnp.asarray(c, jnp.bfloat16)
+    lo = np.zeros(8, np.float32); hi = np.ones(8, np.float32)
+    ql = np.zeros(4, np.float32); qh = np.ones(4, np.float32)
+    got = pairwise_l2_masked(qb, cb, lo, hi, ql, qh, iv.ANY_OVERLAP,
+                             bq=8, bn=128, interpret=True)
+    want = pairwise_l2_masked_ref(qb, cb, jnp.asarray(lo), jnp.asarray(hi),
+                                  jnp.asarray(ql), jnp.asarray(qh), iv.ANY_OVERLAP)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2)
+
+
+def test_ops_dispatch_interpret_on_cpu():
+    q, c, lo, hi, ql, qh = _mk(4, 40, 16, np.float32)
+    got = ops.pairwise_l2_masked(q, c, lo, hi, ql, qh, iv.ANY_OVERLAP)
+    want = pairwise_l2_masked_ref(jnp.asarray(q), jnp.asarray(c),
+                                  jnp.asarray(lo), jnp.asarray(hi),
+                                  jnp.asarray(ql), jnp.asarray(qh), iv.ANY_OVERLAP)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_flat_engine_with_kernel_path(small_ds):
+    """flat_search(use_kernel=True) must equal the jnp path end to end."""
+    from repro.core.flat import flat_search
+    ds = small_ds
+    ql = np.quantile(ds.lo, 0.3) * np.ones(6, np.float32)
+    qh = np.quantile(ds.hi, 0.7) * np.ones(6, np.float32)
+    a = flat_search(jnp.asarray(ds.vectors), jnp.asarray(ds.lo, jnp.float32),
+                    jnp.asarray(ds.hi, jnp.float32), jnp.asarray(ds.queries[:6]),
+                    jnp.asarray(ql), jnp.asarray(qh), mask=iv.ANY_OVERLAP, k=10,
+                    use_kernel=True)
+    b = flat_search(jnp.asarray(ds.vectors), jnp.asarray(ds.lo, jnp.float32),
+                    jnp.asarray(ds.hi, jnp.float32), jnp.asarray(ds.queries[:6]),
+                    jnp.asarray(ql), jnp.asarray(qh), mask=iv.ANY_OVERLAP, k=10,
+                    use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mask", MASKS[:2], ids=iv.mask_name)
+@pytest.mark.parametrize("shape", [(4, 300, 16), (8, 1030, 32)])
+def test_fused_topk_matches_bruteforce(mask, shape):
+    """The single-kernel filtered k-NN (grid-accumulated running top-k)."""
+    from repro.kernels.fused_topk import fused_topk_l2
+    from repro.kernels.ref import pairwise_l2_masked_ref
+    Q, N, d = shape
+    q, c, lo, hi, ql, qh = _mk(Q, N, d, np.float32, seed=7)
+    ids, dd = fused_topk_l2(jnp.asarray(q), jnp.asarray(c), jnp.asarray(lo),
+                            jnp.asarray(hi), jnp.asarray(ql), jnp.asarray(qh),
+                            mask, k=5, bn=256, interpret=True)
+    ref = pairwise_l2_masked_ref(jnp.asarray(q), jnp.asarray(c),
+                                 jnp.asarray(lo), jnp.asarray(hi),
+                                 jnp.asarray(ql), jnp.asarray(qh), mask)
+    want = np.sort(np.asarray(ref), axis=1)[:, :5]
+    np.testing.assert_allclose(np.sort(np.asarray(dd), 1), want,
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(hst.integers(1, 6), hst.integers(1, 400), hst.integers(1, 24),
+       hst.integers(1, 8), hst.integers(0, 2**30))
+def test_fused_topk_hypothesis(Q, N, d, k, seed):
+    from repro.kernels.fused_topk import fused_topk_l2
+    from repro.kernels.ref import pairwise_l2_masked_ref
+    q, c, lo, hi, ql, qh = _mk(Q, N, d, np.float32, seed)
+    ids, dd = fused_topk_l2(jnp.asarray(q), jnp.asarray(c), jnp.asarray(lo),
+                            jnp.asarray(hi), jnp.asarray(ql), jnp.asarray(qh),
+                            iv.ANY_OVERLAP, k=k, bn=128, interpret=True)
+    ref = np.asarray(pairwise_l2_masked_ref(
+        jnp.asarray(q), jnp.asarray(c), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(ql), jnp.asarray(qh), iv.ANY_OVERLAP))
+    want = np.sort(ref, axis=1)[:, :k]
+    if want.shape[1] < k:  # k > N: pad ground truth with +inf
+        want = np.pad(want, ((0, 0), (0, k - want.shape[1])),
+                      constant_values=np.inf)
+    np.testing.assert_allclose(np.sort(np.asarray(dd), 1), want,
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,157 @@
+"""MSTG end-to-end: exactness of flat/pruned engines, recall of the graph
+engine, index accounting, and plan/batch machinery (paper §4, §5)."""
+import numpy as np
+import pytest
+
+from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, QUERY_CONTAINING,
+                        LEFT_OVERLAP, RIGHT_OVERLAP, MSTGIndex, MSTGSearcher,
+                        FlatSearcher, intervals as iv)
+from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
+
+MASKS = [
+    ANY_OVERLAP,
+    QUERY_CONTAINED,
+    QUERY_CONTAINING,
+    LEFT_OVERLAP,
+    RIGHT_OVERLAP,
+    LEFT_OVERLAP | RIGHT_OVERLAP,
+    QUERY_CONTAINED | QUERY_CONTAINING,
+    LEFT_OVERLAP | QUERY_CONTAINED | RIGHT_OVERLAP,
+]
+
+
+@pytest.fixture(scope="module")
+def setup(small_ds, built_index):
+    return small_ds, built_index
+
+
+@pytest.mark.parametrize("mask", MASKS, ids=iv.mask_name)
+def test_flat_engines_exact(setup, mask):
+    ds, idx = setup
+    qlo, qhi = make_queries(ds, mask, 0.15, seed=7)
+    tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi, mask, 10)
+    fs = FlatSearcher(idx)
+    fids, fds = fs.search(ds.queries, qlo, qhi, mask, k=10)
+    np.testing.assert_allclose(np.sort(fds, axis=1), np.sort(tds, axis=1),
+                               rtol=1e-4, atol=1e-4)
+    pids, pds = fs.search_pruned(ds.queries, qlo, qhi, mask, k=10)
+    np.testing.assert_allclose(np.sort(pds, axis=1), np.sort(tds, axis=1),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mask", MASKS, ids=iv.mask_name)
+def test_graph_engine_recall(setup, mask):
+    ds, idx = setup
+    qlo, qhi = make_queries(ds, mask, 0.15, seed=11)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi, mask, 10)
+    ss = MSTGSearcher(idx)
+    gids, _ = ss.search(ds.queries, qlo, qhi, mask, k=10, ef=48)
+    assert recall_at_k(gids, tids) >= 0.85, iv.mask_name(mask)
+
+
+def test_graph_engine_never_returns_nonqualifying(setup):
+    """The paper's core guarantee: search traverses only qualifying objects."""
+    ds, idx = setup
+    for mask in MASKS:
+        qlo, qhi = make_queries(ds, mask, 0.1, seed=13)
+        ss = MSTGSearcher(idx)
+        ids, d = ss.search(ds.queries, qlo, qhi, mask, k=10, ef=32)
+        for qi in range(ids.shape[0]):
+            got = ids[qi][ids[qi] >= 0]
+            sel = np.asarray(iv.eval_predicate(mask, ds.lo[got], ds.hi[got],
+                                               qlo[qi], qhi[qi]))
+            assert sel.all(), iv.mask_name(mask)
+
+
+def test_recall_improves_with_ef(setup):
+    ds, idx = setup
+    mask = ANY_OVERLAP
+    qlo, qhi = make_queries(ds, mask, 0.2, seed=17)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi, mask, 10)
+    ss = MSTGSearcher(idx)
+    recalls = []
+    for ef in (12, 32, 96):
+        gids, _ = ss.search(ds.queries, qlo, qhi, mask, k=10, ef=ef)
+        recalls.append(recall_at_k(gids, tids))
+    assert recalls[-1] >= recalls[0]
+    assert recalls[-1] >= 0.95
+
+
+def test_empty_predicate_returns_empty(setup):
+    ds, idx = setup
+    # query range outside any object: QUERY_CONTAINED impossible
+    qlo = np.full(4, -50.0)
+    qhi = np.full(4, -40.0)
+    ss = MSTGSearcher(idx)
+    ids, d = ss.search(ds.queries[:4], qlo, qhi, QUERY_CONTAINED, k=5, ef=16)
+    assert (ids < 0).all() and np.isinf(d).all()
+
+
+def test_point_specializations(setup):
+    """RFANN/TSANN/IFANN are special cases (paper Table 1)."""
+    ds, idx = setup
+    # TSANN: point query t inside object range
+    t = float(np.median(ds.lo))
+    qlo = np.full(8, t)
+    qhi = np.full(8, t)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries[:8],
+                               qlo, qhi, iv.TSANN_MASK, 10)
+    ss = MSTGSearcher(idx)
+    gids, _ = ss.search(ds.queries[:8], qlo, qhi, iv.TSANN_MASK, k=10, ef=48)
+    assert recall_at_k(gids, tids) >= 0.85
+
+
+def test_index_accounting(built_index):
+    idx = built_index
+    assert set(idx.variants) == {"T", "Tp", "Tpp"}
+    for fv in idx.variants.values():
+        assert fv.nbr.shape == fv.lab_b.shape == fv.lab_e.shape
+        assert fv.live_edges() > 0
+    assert idx.index_bytes() > 0
+    assert all(t > 0 for t in idx.build_seconds.values())
+
+
+def test_plan_batch_alignment(built_index):
+    idx = built_index
+    qlo = np.array([10.0, 500.0, 900.0])
+    qhi = np.array([20.0, 700.0, 990.0])
+    plans = idx.plan_batch(ANY_OVERLAP, qlo, qhi)
+    assert [p[0] for p in plans] == ["T", "Tp"]
+    for _, ver, klo, khi in plans:
+        assert ver.shape == (3,)
+
+
+def test_blocked_flat_matches_full(setup):
+    """§Perf iteration 6 engine: scanned running top-k == full brute force."""
+    import jax.numpy as jnp
+    from repro.core.flat import flat_search, flat_search_blocked
+    ds, idx = setup
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=23)
+    args = (jnp.asarray(ds.vectors), jnp.asarray(ds.lo, jnp.float32),
+            jnp.asarray(ds.hi, jnp.float32), jnp.asarray(ds.queries),
+            jnp.asarray(qlo, jnp.float32), jnp.asarray(qhi, jnp.float32))
+    a = flat_search(*args, mask=ANY_OVERLAP, k=10)
+    b = flat_search_blocked(*args, mask=ANY_OVERLAP, k=10, block=128)
+    np.testing.assert_allclose(np.sort(np.asarray(a[1]), 1),
+                               np.sort(np.asarray(b[1]), 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("fanout", [2, 4])
+def test_graph_engine_fanout_recall(setup, fanout):
+    """§Perf iteration 3: multi-expansion keeps (or improves) recall."""
+    ds, idx = setup
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=29)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                               qlo, qhi, ANY_OVERLAP, 10)
+    ss = MSTGSearcher(idx)
+    base, _ = ss.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=10, ef=48)
+    fast, _ = ss.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=10, ef=48,
+                        fanout=fanout)
+    assert recall_at_k(fast, tids) >= recall_at_k(base, tids) - 0.05
+    # fanout results still satisfy the predicate
+    for qi in range(fast.shape[0]):
+        got = fast[qi][fast[qi] >= 0]
+        sel = np.asarray(iv.eval_predicate(ANY_OVERLAP, ds.lo[got], ds.hi[got],
+                                           qlo[qi], qhi[qi]))
+        assert sel.all()

@@ -1,0 +1,80 @@
+"""Segment-tree decomposition invariants (host + JAX parity)."""
+import numpy as np
+from hypothesis import given, settings, strategies as hst
+
+import jax.numpy as jnp
+
+from repro.core import segment_tree as st
+
+
+@settings(max_examples=150, deadline=None)
+@given(hst.integers(1, 9), hst.data())
+def test_decompose_canonical(logk, data):
+    Kpad = 1 << logk
+    lo = data.draw(hst.integers(0, Kpad - 1))
+    hi = data.draw(hst.integers(0, Kpad - 1))
+    nodes = st.decompose(lo, hi, Kpad)
+    if lo > hi:
+        assert nodes == []
+        return
+    covered = np.zeros(Kpad, bool)
+    per_level = {}
+    for lvl, idx in nodes:
+        a, b = st.node_range(lvl, idx, Kpad)
+        assert not covered[a:b + 1].any(), "nodes overlap"
+        covered[a:b + 1] = True
+        per_level[lvl] = per_level.get(lvl, 0) + 1
+    want = np.zeros(Kpad, bool)
+    want[lo:hi + 1] = True
+    assert np.array_equal(covered, want), "cover is not exact"
+    assert all(c <= 2 for c in per_level.values()), "more than 2 nodes per level"
+
+
+@settings(max_examples=80, deadline=None)
+@given(hst.integers(1, 8), hst.data())
+def test_decompose_jax_matches_host(logk, data):
+    Kpad = 1 << logk
+    lo = data.draw(hst.integers(-2, Kpad + 2))
+    hi = data.draw(hst.integers(-2, Kpad + 2))
+    levels, idxs, valid = st.decompose_jax(jnp.int32(lo), jnp.int32(hi), Kpad)
+    got = sorted((int(l), int(i)) for l, i, v in
+                 zip(levels, idxs, valid) if bool(v))
+    lo_c, hi_c = max(lo, 0), min(hi, Kpad - 1)
+    want = sorted(st.decompose(lo_c, hi_c, Kpad)) if lo_c <= hi_c and lo <= hi else []
+    assert got == want
+
+
+def test_leaf_path():
+    Kpad = 16
+    nodes = st.leaf_path_nodes(13, Kpad)
+    assert nodes[0] == (0, 0)
+    assert nodes[-1] == (st.num_levels(Kpad) - 1, 13)
+    for lvl, idx in nodes:
+        a, b = st.node_range(lvl, idx, Kpad)
+        assert a <= 13 <= b
+
+
+def test_vertex_levels_for_cover():
+    Kpad = 16
+    lo, hi = 3, 12
+    nodes = st.decompose(lo, hi, Kpad)
+    P = st.max_cover_nodes(Kpad)
+    levels = np.zeros(P, np.int32)
+    idxs = np.zeros(P, np.int32)
+    valid = np.zeros(P, bool)
+    for i, (l, j) in enumerate(nodes):
+        levels[i], idxs[i], valid[i] = l, j, True
+    tkeys = jnp.arange(Kpad, dtype=jnp.int32)
+    lv = st.vertex_levels_for_cover(tkeys, jnp.asarray(levels), jnp.asarray(idxs),
+                                    jnp.asarray(valid), Kpad)
+    for key in range(Kpad):
+        if lo <= key <= hi:
+            l = int(lv[key])
+            a, b = None, None
+            for (nl, nj) in nodes:
+                ra, rb = st.node_range(nl, nj, Kpad)
+                if ra <= key <= rb:
+                    assert nl == l
+                    break
+        else:
+            assert int(lv[key]) == -1
