@@ -9,7 +9,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import ANY_OVERLAP, MSTGIndex
+from repro.core import ANY_OVERLAP, MSTGIndex, QueryEngine
 from repro.data import make_range_dataset
 
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
@@ -35,6 +35,14 @@ def bench_index(ds=None, variants=("T", "Tp", "Tpp"), m=12, ef_con=64):
     if key not in _cache:
         _cache[key] = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=variants,
                                 m=m, ef_con=ef_con)
+    return _cache[key]
+
+
+def bench_engine(idx=None, route: str = "auto", **kw):
+    idx = idx or bench_index()
+    key = ("engine", id(idx), route, tuple(sorted(kw.items())))
+    if key not in _cache:
+        _cache[key] = QueryEngine(idx, route=route, **kw)
     return _cache[key]
 
 

@@ -1,12 +1,12 @@
 """Exp. 1 (Fig. 3/4): RRANN QPS vs recall — MSTG engines vs baselines."""
 import numpy as np
 
-from repro.core import ANY_OVERLAP, MSTGSearcher, FlatSearcher
+from repro.core import ANY_OVERLAP
 from repro.core.baselines import Prefiltering, Postfiltering, AcornLike
 from repro.data import (make_queries, brute_force_topk, recall_at_k,
                         relative_distance_error)
 
-from .common import Q, K, bench_dataset, bench_index, emit, time_call
+from .common import Q, K, bench_dataset, bench_engine, bench_index, emit, time_call
 
 
 def run():
@@ -16,15 +16,16 @@ def run():
         qlo, qhi = make_queries(ds, ANY_OVERLAP, sel, seed=11)
         tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
                                      qlo, qhi, ANY_OVERLAP, K)
-        gs = MSTGSearcher(idx)
-        fs = FlatSearcher(idx)
+        eng = bench_engine(idx)
         rows = [
-            ("mstg_graph", lambda: gs.search(ds.queries, qlo, qhi, ANY_OVERLAP,
-                                             k=K, ef=64)),
-            ("mstg_flat", lambda: fs.search(ds.queries, qlo, qhi, ANY_OVERLAP,
-                                            k=K)),
-            ("mstg_pruned", lambda: fs.search_pruned(ds.queries, qlo, qhi,
-                                                     ANY_OVERLAP, k=K)),
+            ("engine_auto", lambda: eng.search(ds.queries, qlo, qhi,
+                                               ANY_OVERLAP, k=K, ef=64)),
+            ("mstg_graph", lambda: eng.search_graph(ds.queries, qlo, qhi,
+                                                    ANY_OVERLAP, k=K, ef=64)),
+            ("mstg_flat", lambda: eng.search_flat(ds.queries, qlo, qhi,
+                                                  ANY_OVERLAP, k=K)),
+            ("mstg_pruned", lambda: eng.search_pruned(ds.queries, qlo, qhi,
+                                                      ANY_OVERLAP, k=K)),
         ]
         base = [
             ("prefilter", Prefiltering(ds.vectors, ds.lo, ds.hi), {}),

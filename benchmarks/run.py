@@ -1,10 +1,30 @@
 """Benchmark harness — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV. BENCH_QUICK=1 shrinks sizes."""
+
+Default mode prints ``name,us_per_call,derived`` CSV for every experiment
+(BENCH_QUICK=1 shrinks sizes). ``--smoke`` instead runs the tiny CI lane
+(exp1 + kernel bench + planner microbenchmark) and writes BENCH_smoke.json.
+"""
+import argparse
+import os
 import sys
 import traceback
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI lane; writes a JSON perf artifact")
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="output path for --smoke (default: BENCH_smoke.json)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        from .smoke import run_smoke
+        run_smoke(out_path=args.out)
+        return
+
     from . import (exp1_rrann, exp2_index_cost, exp3_rfann, exp4_ifann,
                    exp5_tsann, exp6_scalability, exp7_selectivity,
                    exp8_distributions, exp9_oracle, exp10_params, kernel_bench)

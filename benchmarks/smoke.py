@@ -1,0 +1,144 @@
+"""``--smoke`` lane: tiny end-to-end benchmark that writes BENCH_smoke.json.
+
+Runs on CPU JAX in CI so the perf trajectory (build time, QPS, recall@10,
+planner µs/query) accumulates as an artifact over time. Includes a planner
+microbenchmark at Q=1024 against a faithful reimplementation of the seed's
+per-query scalar loop — the acceptance gate for the vectorized planner is a
+>= 10x speedup, recorded in the JSON.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+import numpy as np
+
+from repro.core import ANY_OVERLAP, MSTGIndex, QueryEngine, intervals as iv
+from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
+
+from .common import time_call
+
+
+def _plan_batch_scalar(index: MSTGIndex, mask: int, ql, qh):
+    """The seed repo's planner: one ``plan_searches_ranked`` call per query
+    per task slot. Kept verbatim as the microbenchmark baseline."""
+    domain = index.domain
+    ql = np.asarray(ql, dtype=np.float64)
+    qh = np.asarray(qh, dtype=np.float64)
+    Q = ql.shape[0]
+    tmpl = iv.plan_searches_ranked(mask, 0, 0, domain.K - 1, domain.K - 1,
+                                   domain.K)
+    fl = domain.floor_rank(ql)
+    cl = domain.ceil_rank(ql)
+    fr = domain.floor_rank(qh)
+    cr = domain.ceil_rank(qh)
+    out = []
+    for slot, t0 in enumerate(tmpl):
+        versions = np.empty(Q, np.int64)
+        klo = np.empty(Q, np.int64)
+        khi = np.empty(Q, np.int64)
+        for qi in range(Q):
+            t = iv.plan_searches_ranked(mask, int(fl[qi]), int(cl[qi]),
+                                        int(fr[qi]), int(cr[qi]), domain.K)[slot]
+            versions[qi], klo[qi], khi[qi] = t.version, t.key_lo, t.key_hi
+        out.append((t0.variant, versions, klo, khi))
+    return out
+
+
+def planner_microbench(index: MSTGIndex, Q: int = 1024, mask: int = ANY_OVERLAP,
+                       repeats: int = 5) -> dict:
+    rng = np.random.default_rng(3)
+    span = index.domain.values[-1] - index.domain.values[0]
+    qlo = index.domain.values[0] + rng.uniform(0, 0.6, Q) * span
+    qhi = qlo + rng.uniform(0, 0.4, Q) * span
+
+    dt_vec, plans_vec = time_call(index.plan_batch, mask, qlo, qhi,
+                                  repeats=repeats)
+    dt_scalar, plans_ref = time_call(_plan_batch_scalar, index, mask, qlo, qhi,
+                                     repeats=repeats)
+    # sanity: the two planners must agree slot for slot
+    assert len(plans_vec) == len(plans_ref)
+    for s, (variant, ver, klo, khi) in zip(plans_vec, plans_ref):
+        assert s.variant == variant
+        assert (np.array_equal(s.version, ver) and np.array_equal(s.key_lo, klo)
+                and np.array_equal(s.key_hi, khi))
+    return {
+        "Q": Q,
+        "mask": iv.mask_name(mask),
+        "vectorized_us_per_query": dt_vec / Q * 1e6,
+        "scalar_us_per_query": dt_scalar / Q * 1e6,
+        "speedup": dt_scalar / dt_vec,
+    }
+
+
+def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
+              n_queries: int = 16, k: int = 10) -> dict:
+    report: dict = {
+        "schema": 1,
+        "unix_time": time.time(),
+        "platform": platform.platform(),
+        "sizes": {"n": n, "d": d, "queries": n_queries, "k": k},
+    }
+
+    ds = make_range_dataset(n=n, d=d, n_queries=n_queries, quantize=128,
+                            dist="uniform", seed=0)
+    t0 = time.perf_counter()
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp", "Tpp"),
+                    m=12, ef_con=64)
+    report["build_seconds"] = {**{k_: round(v, 4) for k_, v in
+                                  idx.build_seconds.items()},
+                               "total": round(time.perf_counter() - t0, 4)}
+    report["index_bytes"] = idx.index_bytes()
+
+    # exp1 (RRANN): engine QPS + recall at two selectivities
+    eng = QueryEngine(idx)
+    rrann = {}
+    for sel in (0.05, 0.10):
+        qlo, qhi = make_queries(ds, ANY_OVERLAP, sel, seed=11)
+        tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                   qlo, qhi, ANY_OVERLAP, k)
+        row = {}
+        for name, fn in (
+                ("engine_auto", lambda: eng.search(ds.queries, qlo, qhi,
+                                                   ANY_OVERLAP, k=k, ef=64)),
+                ("graph", lambda: eng.search_graph(ds.queries, qlo, qhi,
+                                                   ANY_OVERLAP, k=k, ef=64)),
+                ("pruned", lambda: eng.search_pruned(ds.queries, qlo, qhi,
+                                                     ANY_OVERLAP, k=k))):
+            dt, (ids, _) = time_call(fn)
+            row[name] = {"qps": round(n_queries / dt, 1),
+                         "recall_at_10": round(recall_at_k(ids, tids), 4)}
+        rrann[f"sel_{int(sel * 100):02d}"] = row
+    report["exp1_rrann"] = rrann
+
+    # planner microbenchmark (acceptance: >= 10x over the seed scalar loop)
+    report["planner"] = {k_: (round(v, 4) if isinstance(v, float) else v)
+                         for k_, v in planner_microbench(idx).items()}
+
+    # kernel bench (interpret mode on CPU: correctness-path timing only)
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels.ref import pairwise_l2_masked_ref
+    rng = np.random.default_rng(0)
+    Qn, Nn, dk = 8, 512, 32
+    q = rng.normal(0, 1, (Qn, dk)).astype(np.float32)
+    c = rng.normal(0, 1, (Nn, dk)).astype(np.float32)
+    lo = rng.uniform(0, 100, Nn).astype(np.float32)
+    hi = lo + 10
+    ql = np.full(Qn, 20, np.float32)
+    qh = np.full(Qn, 60, np.float32)
+    dt_ref, _ = time_call(lambda: np.asarray(pairwise_l2_masked_ref(
+        jnp.asarray(q), jnp.asarray(c), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(ql), jnp.asarray(qh), ANY_OVERLAP)))
+    dt_pal, _ = time_call(lambda: np.asarray(ops.pairwise_l2_masked(
+        q, c, lo, hi, ql, qh, ANY_OVERLAP)))
+    report["kernel"] = {"pairwise_ref_us": round(dt_ref * 1e6, 1),
+                       "pairwise_pallas_interpret_us": round(dt_pal * 1e6, 1)}
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    print(json.dumps(report["planner"], indent=2))
+    return report

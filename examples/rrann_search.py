@@ -10,7 +10,7 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import (MSTGIndex, MSTGSearcher, FlatSearcher, intervals as iv)
+from repro.core import MSTGIndex, QueryEngine, intervals as iv
 from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
 
 
@@ -18,7 +18,7 @@ def main():
     ds = make_range_dataset(n=1500, d=32, n_queries=12, quantize=64, seed=1)
     idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp", "Tpp"),
                     m=12, ef_con=64)
-    gs = MSTGSearcher(idx)
+    gs = QueryEngine(idx)  # auto-routes graph vs exact-pruned by selectivity
 
     cases = [
         ("1 query-left-overlap", iv.LEFT_OVERLAP),
@@ -35,8 +35,10 @@ def main():
         tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
                                    qlo, qhi, mask, 10)
         plan = idx.plan(mask, float(qlo[0]), float(qhi[0]))
+        route = gs.route_for(mask, qlo, qhi)
         ids, _ = gs.search(ds.queries, qlo, qhi, mask, k=10, ef=64)
-        print(f"{nm}  searches={len(plan)}  recall@10={recall_at_k(ids, tids):.3f}")
+        print(f"{nm}  searches={len(plan)}  route={route:<6}  "
+              f"recall@10={recall_at_k(ids, tids):.3f}")
 
     # table-1 specializations
     print("\nspecializations:")
@@ -46,8 +48,8 @@ def main():
     qhi = np.quantile(attr, 0.5) * np.ones(12)
     tids, _ = brute_force_topk(ds.vectors, attr, attr, ds.queries, qlo, qhi,
                                iv.RFANN_MASK, 10)
-    ids, _ = MSTGSearcher(rf).search(ds.queries, qlo, qhi, iv.RFANN_MASK,
-                                     k=10, ef=64)
+    ids, _ = QueryEngine(rf).search(ds.queries, qlo, qhi, iv.RFANN_MASK,
+                                    k=10, ef=64)
     print(f"  RFANN recall@10 = {recall_at_k(ids, tids):.3f}")
     t = float(np.median(attr))
     qlo = np.full(12, t); qhi = np.full(12, t)

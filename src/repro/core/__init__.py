@@ -3,8 +3,9 @@ from . import intervals, segment_tree
 from .intervals import (LEFT_OVERLAP, QUERY_CONTAINED, RIGHT_OVERLAP,
                         QUERY_CONTAINING, BEFORE, AFTER, ANY_OVERLAP,
                         RFANN_MASK, IFANN_MASK, TSANN_MASK,
-                        AttributeDomain, SearchTask, plan_searches,
-                        eval_predicate)
+                        AttributeDomain, SearchTask, PlanSlot, plan_searches,
+                        plan_batch_ranked, eval_predicate)
 from .mstg import MSTGIndex, FrozenVariant, build_variant
-from .search import MSTGSearcher, mstg_graph_search, merge_topk
-from .flat import FlatSearcher, flat_search
+from .search import mstg_graph_search, merge_topk
+from .flat import flat_search
+from .engine import QueryEngine, MSTGSearcher, FlatSearcher

@@ -1,0 +1,332 @@
+"""QueryEngine — the unified execution facade over a built MSTG index.
+
+One object owns everything a query batch needs:
+
+* **device staging** — graph arrays (:class:`repro.core.search.DeviceVariant`)
+  and the pruned-scan member arrays are staged exactly once and shared by
+  every path;
+* **plan execution** — a batch is planned with the vectorized Theorem 4.1
+  planner (:func:`repro.core.intervals.plan_batch_ranked`), every task slot is
+  executed on its variant, and slot results are merged with
+  :func:`repro.core.search.merge_topk`;
+* **routing** — ``route="auto"`` estimates predicate selectivity from a fixed
+  corpus sample and sends low-selectivity batches to the exact pruned scan
+  (work ∝ selectivity, recall 1.0) and everything else to the TPU beam search;
+* **jit-cache reuse** — query batches are padded up to power-of-two buckets so
+  a serving process sees one trace per (mask, route, k, ef, bucket) instead of
+  one per distinct batch size; padded queries carry empty tasks and cost no
+  search steps.
+
+``MSTGSearcher`` (the historical graph-path API) is a thin wrapper kept for
+compatibility; new code should use :class:`QueryEngine` directly.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from . import intervals as iv
+from .flat import _pruned_search_variant, flat_search
+from .hnsw import NO_EDGE
+from .mstg import MSTGIndex
+from .search import DeviceVariant, merge_topk, mstg_graph_search
+
+ROUTE_AUTO = "auto"
+ROUTE_GRAPH = "graph"
+ROUTE_PRUNED = "pruned"
+ROUTE_FLAT = "flat"
+_ROUTES = (ROUTE_AUTO, ROUTE_GRAPH, ROUTE_PRUNED, ROUTE_FLAT)
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def _empty_result(Q: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    return (np.full((Q, k), NO_EDGE, np.int32),
+            np.full((Q, k), np.inf, np.float32))
+
+
+class QueryEngine:
+    """Unified search facade: plan once, execute on the best engine.
+
+    Parameters
+    ----------
+    index : MSTGIndex
+        Built index; whichever variants it has bound the masks it can serve.
+    use_kernel : bool
+        Route distance evaluation through the Pallas kernels.
+    route : str
+        Default routing policy: ``auto`` | ``graph`` | ``pruned`` | ``flat``.
+    flat_threshold : float
+        ``auto`` sends a batch to the exact pruned scan when its mean
+        estimated selectivity is at or below this fraction of the corpus.
+    selectivity_sample : int
+        Corpus sample size for the selectivity estimator (whole corpus when
+        smaller, making the estimate exact).
+    pad_queries : bool
+        Pad batches to power-of-two sizes so jit traces are reused across
+        ragged serving batches.
+    """
+
+    def __init__(self, index: MSTGIndex, use_kernel: bool = False,
+                 route: str = ROUTE_AUTO, flat_threshold: float = 0.05,
+                 selectivity_sample: int = 2048, pad_queries: bool = True):
+        if route not in _ROUTES:
+            raise ValueError(f"route must be one of {_ROUTES}, got {route!r}")
+        self.index = index
+        self.use_kernel = use_kernel
+        self.default_route = route
+        self.flat_threshold = float(flat_threshold)
+        self.pad_queries = pad_queries
+
+        self.corpus = jnp.asarray(index.vectors, jnp.float32)
+        self.lo = jnp.asarray(index.lo, jnp.float32)
+        self.hi = jnp.asarray(index.hi, jnp.float32)
+        # per-route device staging is lazy (first use) so graph-only callers
+        # never upload pruned member arrays and vice versa
+        self._graph_dev: Dict[str, DeviceVariant] = {}
+        self._pruned_dev: Dict[str, dict] = {}
+        self._sorted_rank: Dict[str, np.ndarray] = {}
+
+        n = index.vectors.shape[0]
+        m = min(n, int(selectivity_sample))
+        sel = (np.arange(n) if m == n
+               else np.random.default_rng(0).choice(n, size=m, replace=False))
+        self._sample_lo = np.asarray(index.lo)[sel]
+        self._sample_hi = np.asarray(index.hi)[sel]
+        self.route_counts: Dict[str, int] = {ROUTE_GRAPH: 0, ROUTE_PRUNED: 0,
+                                             ROUTE_FLAT: 0}
+
+    # ---- device staging (lazy, cached per variant) ----
+    def graph_dev(self, variant: str) -> DeviceVariant:
+        if variant not in self._graph_dev:
+            self._graph_dev[variant] = DeviceVariant(
+                self.index.variants[variant], self.corpus)
+        return self._graph_dev[variant]
+
+    def pruned_dev(self, variant: str) -> dict:
+        if variant not in self._pruned_dev:
+            fv = self.index.variants[variant]
+            self._pruned_dev[variant] = dict(
+                vectors=self.corpus,
+                members=jnp.asarray(fv.members),
+                member_ver=jnp.asarray(fv.member_ver),
+                node_off=jnp.asarray(fv.node_off))
+        return self._pruned_dev[variant]
+
+    def _sorted_sort_rank(self, variant: str) -> np.ndarray:
+        if variant not in self._sorted_rank:
+            self._sorted_rank[variant] = np.sort(
+                self.index.variants[variant].sort_rank)
+        return self._sorted_rank[variant]
+
+    # ---- planning / routing ----
+    def plan(self, mask: int, qlo: np.ndarray, qhi: np.ndarray) -> List[iv.PlanSlot]:
+        return self.index.plan_batch(mask, qlo, qhi)
+
+    def estimate_selectivity(self, mask: int, qlo, qhi) -> np.ndarray:
+        """(Q,) estimated fraction of the corpus each query's predicate keeps
+        (exact when the sample covers the corpus)."""
+        ql = np.asarray(qlo, np.float64)[:, None]
+        qh = np.asarray(qhi, np.float64)[:, None]
+        hit = iv.eval_predicate(mask, self._sample_lo[None, :],
+                                self._sample_hi[None, :], ql, qh)
+        return np.asarray(hit, np.float64).mean(axis=1)
+
+    def route_for(self, mask: int, qlo, qhi, route: Optional[str] = None) -> str:
+        route = route or self.default_route
+        if route != ROUTE_AUTO:
+            return route
+        est = self.estimate_selectivity(mask, qlo, qhi)
+        return ROUTE_PRUNED if float(est.mean()) <= self.flat_threshold else ROUTE_GRAPH
+
+    # ---- execution ----
+    def search(self, queries: np.ndarray, qlo: np.ndarray, qhi: np.ndarray,
+               mask: int, k: int = 10, ef: int = 64,
+               max_steps: Optional[int] = None, fanout: int = 1,
+               route: Optional[str] = None) -> Tuple[np.ndarray, np.ndarray]:
+        """Filtered top-k for a query batch: (Q, k) ids (NO_EDGE pad) and
+        squared distances (+inf pad)."""
+        queries = np.ascontiguousarray(queries, np.float32)
+        qlo = np.asarray(qlo, np.float64)
+        qhi = np.asarray(qhi, np.float64)
+        Q = queries.shape[0]
+        if Q == 0:
+            return _empty_result(0, k)
+        route = self.route_for(mask, qlo, qhi, route)
+        self.route_counts[route] = self.route_counts.get(route, 0) + 1
+        if route == ROUTE_FLAT:
+            ids, d = self._run_flat(queries, qlo, qhi, mask, k)
+        elif route == ROUTE_PRUNED:
+            ids, d = self._run_pruned(queries, qlo, qhi, mask, k)
+        elif route == ROUTE_GRAPH:
+            ids, d = self._run_graph(queries, qlo, qhi, mask, k, ef,
+                                     max_steps, fanout)
+        else:
+            raise ValueError(f"unknown route {route!r}")
+        return np.asarray(ids[:Q]), np.asarray(d[:Q])
+
+    # Convenience fixed-route entry points.
+    def search_graph(self, queries, qlo, qhi, mask, k=10, ef=64,
+                     max_steps=None, fanout=1):
+        return self.search(queries, qlo, qhi, mask, k=k, ef=ef,
+                           max_steps=max_steps, fanout=fanout,
+                           route=ROUTE_GRAPH)
+
+    def search_pruned(self, queries, qlo, qhi, mask, k=10, block: int = 256,
+                      max_candidates: Optional[int] = None):
+        queries = np.ascontiguousarray(queries, np.float32)
+        qlo = np.asarray(qlo, np.float64)
+        qhi = np.asarray(qhi, np.float64)
+        Q = queries.shape[0]
+        if Q == 0:
+            return _empty_result(0, k)
+        self.route_counts[ROUTE_PRUNED] = self.route_counts.get(ROUTE_PRUNED, 0) + 1
+        ids, d = self._run_pruned(queries, qlo, qhi, mask, k, block=block,
+                                  max_candidates=max_candidates)
+        return np.asarray(ids[:Q]), np.asarray(d[:Q])
+
+    def search_flat(self, queries, qlo, qhi, mask, k=10):
+        return self.search(queries, qlo, qhi, mask, k=k, route=ROUTE_FLAT)
+
+    # ---- internals ----
+    def _padded(self, queries: np.ndarray, qlo: np.ndarray, qhi: np.ndarray):
+        """Pad the batch to a power-of-two bucket; padded rows use the
+        impossible query range [0, -1] so no predicate bit can select them."""
+        Q = queries.shape[0]
+        if not self.pad_queries:
+            return queries, qlo, qhi
+        Qp = max(_next_pow2(Q), 8)
+        if Qp == Q:
+            return queries, qlo, qhi
+        pad = Qp - Q
+        queries = np.concatenate(
+            [queries, np.zeros((pad, queries.shape[1]), np.float32)])
+        qlo = np.concatenate([qlo, np.zeros(pad)])
+        qhi = np.concatenate([qhi, np.full(pad, -1.0)])
+        return queries, qlo, qhi
+
+    def _padded_slots(self, slots: List[iv.PlanSlot], Qp: int) -> List[iv.PlanSlot]:
+        """Extend each slot's per-query arrays with empty tasks (version=-1,
+        key_lo>key_hi): padded queries start with an empty pool and terminate
+        on the first loop-condition check."""
+        out = []
+        for s in slots:
+            pad = Qp - s.version.shape[0]
+            if pad <= 0:
+                out.append(s)
+                continue
+            out.append(iv.PlanSlot(
+                s.variant,
+                np.concatenate([s.version, np.full(pad, -1, np.int64)]),
+                np.concatenate([s.key_lo, np.ones(pad, np.int64)]),
+                np.concatenate([s.key_hi, np.zeros(pad, np.int64)])))
+        return out
+
+    def _run_graph(self, queries, qlo, qhi, mask, k, ef, max_steps, fanout):
+        slots = self.plan(mask, qlo, qhi)
+        queries_p, _, _ = self._padded(queries, qlo, qhi)
+        slots = self._padded_slots(slots, queries_p.shape[0])
+        steps = max_steps or ((4 * ef + 64) // max(fanout, 1) + 8)
+        qdev = jnp.asarray(queries_p)
+        res = None
+        for s in slots:
+            dv = self.graph_dev(s.variant)
+            ids, d = mstg_graph_search(
+                dv.tree(), qdev, jnp.asarray(s.version, jnp.int32),
+                jnp.asarray(s.key_lo, jnp.int32),
+                jnp.asarray(s.key_hi, jnp.int32),
+                k=k, ef=ef, max_steps=steps, Kpad=dv.meta.Kpad,
+                use_kernel=self.use_kernel, fanout=fanout)
+            res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
+        if res is None:
+            return _empty_result(queries_p.shape[0], k)
+        return res
+
+    def _run_pruned(self, queries, qlo, qhi, mask, k, block: int = 256,
+                    max_candidates: Optional[int] = None):
+        slots = self.plan(mask, qlo, qhi)
+        n = self.index.vectors.shape[0]
+        queries_p, qlo_p, qhi_p = self._padded(queries, qlo, qhi)
+        slots = self._padded_slots(slots, queries_p.shape[0])
+        qdev = jnp.asarray(queries_p)
+        qlo_j = jnp.asarray(qlo_p, jnp.float32)
+        qhi_j = jnp.asarray(qhi_p, jnp.float32)
+        res = None
+        for s in slots:
+            fv = self.index.variants[s.variant]
+            # exact candidate upper bound for this slot: objects with
+            # sort_rank <= max version (key-range pruning only shrinks it),
+            # rounded to a power of two so max_blocks hits the jit cache —
+            # never truncates, so the pruned route stays recall-1.0
+            if max_candidates is not None:
+                cap = min(n, int(max_candidates))
+            else:
+                hi_ver = int(s.version.max(initial=-1))
+                cap = int(np.searchsorted(self._sorted_sort_rank(s.variant),
+                                          hi_ver, side="right"))
+                cap = min(n, _next_pow2(cap)) if cap else 0
+            if cap == 0:
+                continue  # every query's task in this slot is empty
+            ids, d = _pruned_search_variant(
+                self.pruned_dev(s.variant), self.lo, self.hi, qdev,
+                qlo_j, qhi_j, jnp.asarray(s.version, jnp.int32),
+                jnp.asarray(s.key_lo, jnp.int32), jnp.asarray(s.key_hi, jnp.int32),
+                pred_mask_bits=mask, k=k, Kpad=fv.Kpad, block=block,
+                max_blocks=-(-cap // block))
+            res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
+        if res is None:
+            return _empty_result(queries_p.shape[0], k)
+        return res
+
+    def _run_flat(self, queries, qlo, qhi, mask, k):
+        queries_p, qlo_p, qhi_p = self._padded(queries, qlo, qhi)
+        return flat_search(self.corpus, self.lo, self.hi, jnp.asarray(queries_p),
+                           jnp.asarray(qlo_p, jnp.float32),
+                           jnp.asarray(qhi_p, jnp.float32),
+                           mask=mask, k=k, use_kernel=self.use_kernel)
+
+
+class MSTGSearcher:
+    """Compatibility wrapper: the historical graph-path API, now a fixed-route
+    view over :class:`QueryEngine`."""
+
+    def __init__(self, index: MSTGIndex, use_kernel: bool = False,
+                 engine: Optional[QueryEngine] = None):
+        self.index = index
+        self.use_kernel = use_kernel
+        self.engine = engine or QueryEngine(index, use_kernel=use_kernel,
+                                            route=ROUTE_GRAPH)
+
+    def search(self, queries, qlo, qhi, mask, k: int = 10, ef: int = 64,
+               max_steps: Optional[int] = None, fanout: int = 1
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        return self.engine.search_graph(queries, qlo, qhi, mask, k=k, ef=ef,
+                                        max_steps=max_steps, fanout=fanout)
+
+
+class FlatSearcher:
+    """Compatibility wrapper: the exact engines (full brute force + tree-pruned
+    scan) as a fixed-route view over :class:`QueryEngine`."""
+
+    def __init__(self, index: MSTGIndex, use_kernel: bool = False,
+                 engine: Optional[QueryEngine] = None):
+        self.index = index
+        self.use_kernel = use_kernel
+        self.engine = engine or QueryEngine(index, use_kernel=use_kernel,
+                                            route=ROUTE_FLAT)
+
+    def search(self, queries, qlo, qhi, mask: int, k: int = 10):
+        """Full-corpus fused brute force (ground-truth grade)."""
+        return self.engine.search_flat(queries, qlo, qhi, mask, k=k)
+
+    def search_pruned(self, queries, qlo, qhi, mask: int, k: int = 10,
+                      block: int = 256, max_candidates: Optional[int] = None):
+        """Tree-pruned exact search: work ∝ selectivity."""
+        return self.engine.search_pruned(queries, qlo, qhi, mask, k=k,
+                                         block=block,
+                                         max_candidates=max_candidates)

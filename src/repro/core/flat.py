@@ -27,7 +27,6 @@ import jax.numpy as jnp
 from . import intervals as iv
 from . import segment_tree as st
 from .hnsw import NO_EDGE
-from .mstg import MSTGIndex
 
 INF = jnp.inf
 
@@ -175,53 +174,5 @@ def _pruned_search_variant(arrays: dict, lo_attr, hi_attr, queries, ql, qh,
     return top_i, top_d
 
 
-class FlatSearcher:
-    """Exact engines over a built MSTGIndex."""
-
-    def __init__(self, index: MSTGIndex, use_kernel: bool = False):
-        self.index = index
-        self.use_kernel = use_kernel
-        self.corpus = jnp.asarray(index.vectors)
-        self.lo = jnp.asarray(index.lo, jnp.float32)
-        self.hi = jnp.asarray(index.hi, jnp.float32)
-        self.dev = {}
-        for name, fv in index.variants.items():
-            self.dev[name] = dict(
-                vectors=self.corpus,
-                members=jnp.asarray(fv.members),
-                member_ver=jnp.asarray(fv.member_ver),
-                node_off=jnp.asarray(fv.node_off))
-
-    def search(self, queries, qlo, qhi, mask: int, k: int = 10):
-        """Full-corpus fused brute force (ground-truth grade)."""
-        ids, d = flat_search(self.corpus, self.lo, self.hi,
-                             jnp.asarray(queries, jnp.float32),
-                             jnp.asarray(qlo, jnp.float32),
-                             jnp.asarray(qhi, jnp.float32),
-                             mask=mask, k=k, use_kernel=self.use_kernel)
-        return np.asarray(ids), np.asarray(d)
-
-    def search_pruned(self, queries, qlo, qhi, mask: int, k: int = 10,
-                      block: int = 256, max_candidates: int | None = None):
-        """Tree-pruned exact search: work ∝ selectivity."""
-        queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
-        qlo_j = jnp.asarray(qlo, jnp.float32)
-        qhi_j = jnp.asarray(qhi, jnp.float32)
-        plans = self.index.plan_batch(mask, qlo, qhi)
-        n = self.index.vectors.shape[0]
-        cap = max_candidates or n
-        max_blocks = int(np.ceil(cap / block))
-        res = None
-        from .search import merge_topk
-        for variant, versions, klo, khi in plans:
-            fv = self.index.variants[variant]
-            ids, d = _pruned_search_variant(
-                self.dev[variant], self.lo, self.hi, queries, qlo_j, qhi_j,
-                jnp.asarray(versions, jnp.int32), jnp.asarray(klo, jnp.int32),
-                jnp.asarray(khi, jnp.int32), pred_mask_bits=mask,
-                k=k, Kpad=fv.Kpad, block=block, max_blocks=max_blocks)
-            res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
-        if res is None:
-            Q = queries.shape[0]
-            return (np.full((Q, k), NO_EDGE, np.int32), np.full((Q, k), np.inf, np.float32))
-        return np.asarray(res[0]), np.asarray(res[1])
+# FlatSearcher (the host-facing exact-search API) lives in repro.core.engine,
+# built on the QueryEngine facade; this module keeps the jitted engines.

@@ -20,7 +20,7 @@ mapped with searchsorted so predicate evaluation is exact.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, NamedTuple, Sequence
 
 import numpy as np
 
@@ -219,6 +219,106 @@ def plan_searches_ranked(mask: int, fl: int, cl: int, fr: int, cr: int, K: int) 
         T(top, 0, hi_rank)
 
     return tasks
+
+
+class PlanSlot(NamedTuple):
+    """One task slot of a batched plan: ``version``/``key_lo``/``key_hi`` are
+    (Q,) int64 arrays; a query's slot is empty when ``version < 0`` or
+    ``key_lo > key_hi`` (same convention as :class:`SearchTask`)."""
+
+    variant: str
+    version: np.ndarray
+    key_lo: np.ndarray
+    key_hi: np.ndarray
+
+    def empty_mask(self, K: int) -> np.ndarray:
+        return (self.version < 0) | (self.key_lo > self.key_hi) | (self.key_lo >= K)
+
+
+def plan_batch_ranked(mask: int, fl, cl, fr, cr, K: int) -> List[PlanSlot]:
+    """Vectorized Theorem 4.1 planner over (Q,) rank-bound arrays.
+
+    Array-native twin of :func:`plan_searches_ranked`: for a fixed ``mask`` the
+    task sequence (variant per slot) is query-independent, so every slot's
+    ``(version, key_lo, key_hi)`` is a pure arithmetic function of the per-query
+    rank bounds ``fl``/``cl``/``fr``/``cr`` — no per-query Python. Slot order
+    and per-slot values agree exactly with the scalar planner (property-tested
+    in tests/test_engine.py); per-query-empty tasks keep their slot.
+    """
+    fl = np.asarray(fl, dtype=np.int64)
+    cl = np.asarray(cl, dtype=np.int64)
+    fr = np.asarray(fr, dtype=np.int64)
+    cr = np.asarray(cr, dtype=np.int64)
+    shape = np.broadcast_shapes(fl.shape, cl.shape, fr.shape, cr.shape)
+    top = K - 1
+    atomic = mask & ANY_OVERLAP
+    slots: List[PlanSlot] = []
+
+    def _b(x) -> np.ndarray:
+        return np.broadcast_to(np.asarray(x, dtype=np.int64), shape).copy()
+
+    def T(version, key_lo, key_hi):
+        slots.append(PlanSlot(VARIANT_T, _b(version), _b(key_lo), _b(key_hi)))
+
+    def Tp(version, key_lo, key_hi):
+        slots.append(PlanSlot(VARIANT_TP, _b(version), _b(key_lo), _b(key_hi)))
+
+    def Tpp(version, key_lo, key_hi):
+        slots.append(PlanSlot(VARIANT_TPP, _b(version), _b(key_lo), _b(key_hi)))
+
+    # -- the 15 non-empty atomic combinations (same dispatch as the scalar
+    #    planner; expressions are element-wise so they broadcast over (Q,)) --
+    if atomic == QUERY_CONTAINED:                       # {2}
+        T(fl, cr, top)
+    elif atomic == LEFT_OVERLAP:                        # {1}
+        T(fl, cl, fr)
+    elif atomic == RIGHT_OVERLAP:                       # {3}
+        Tp(top - cr, cl, fr)
+    elif atomic == QUERY_CONTAINING:                    # {4}
+        Tpp(top - cl, 0, fr)
+    elif atomic == LEFT_OVERLAP | QUERY_CONTAINED:      # {1,2}
+        T(fl, cl, top)
+    elif atomic == QUERY_CONTAINED | RIGHT_OVERLAP:     # {2,3}
+        T(fr, cr, top)
+    elif atomic == RIGHT_OVERLAP | QUERY_CONTAINING:    # {3,4}
+        Tp(top - cl, cl, fr)
+    elif atomic == LEFT_OVERLAP | RIGHT_OVERLAP:        # {1,3}
+        T(fl, cl, fr)
+        Tp(top - cr, cl, fr)
+    elif atomic == LEFT_OVERLAP | QUERY_CONTAINING:     # {1,4}
+        T(fl, cl, fr)
+        Tpp(top - cl, 0, fr)
+    elif atomic == QUERY_CONTAINED | QUERY_CONTAINING:  # {2,4}
+        T(fl, cr, top)
+        Tpp(top - cl, 0, fr)
+    elif atomic == LEFT_OVERLAP | QUERY_CONTAINED | RIGHT_OVERLAP:      # {1,2,3}
+        T(fl, cl, top)
+        Tp(top - cr, cl, fr)
+    elif atomic == LEFT_OVERLAP | QUERY_CONTAINED | QUERY_CONTAINING:   # {1,2,4}
+        T(fl, cl, top)
+        Tpp(top - cl, 0, fr)
+    elif atomic == LEFT_OVERLAP | RIGHT_OVERLAP | QUERY_CONTAINING:     # {1,3,4}
+        T(fl, cl, fr)
+        Tp(top - cl, cl, fr)
+    elif atomic == QUERY_CONTAINED | RIGHT_OVERLAP | QUERY_CONTAINING:  # {2,3,4}
+        T(fr, cr, top)
+        Tpp(top - cl, 0, fr)
+    elif atomic == ANY_OVERLAP:                         # {1,2,3,4}
+        T(fl, cl, top)
+        Tp(top - cl, cl, fr)
+    elif atomic != 0:
+        raise AssertionError(f"unhandled atomic mask {atomic}")
+
+    # -- Allen disjoint relations: the scalar planner's conditionals become
+    #    np.where over the exact-endpoint predicate --
+    if mask & BEFORE:   # l_i > qh
+        lo_rank = np.where(cr == fr, fr + 1, cr)
+        Tpp(top - lo_rank, 0, top)
+    if mask & AFTER:    # r_i < ql
+        hi_rank = np.where(cl == fl, cl - 1, fl)
+        T(top, 0, hi_rank)
+
+    return slots
 
 
 def check_plan_cover(mask: int, tasks: Sequence[SearchTask], rl: np.ndarray,

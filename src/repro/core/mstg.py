@@ -174,32 +174,25 @@ class MSTGIndex:
                              f"built: {sorted(self.variants)}")
         return tasks
 
-    def plan_batch(self, mask: int, ql: np.ndarray, qh: np.ndarray):
+    def plan_batch(self, mask: int, ql: np.ndarray, qh: np.ndarray) -> List[iv.PlanSlot]:
         """Vectorized planning: for a fixed mask the task *templates* (variant
         sequence) are query-independent; versions/key bounds vary per query.
-        Returns a list of (variant, version(Q,), key_lo(Q,), key_hi(Q,))."""
+        Returns a list of :class:`repro.core.intervals.PlanSlot` — tuples of
+        (variant, version(Q,), key_lo(Q,), key_hi(Q,)) with no per-query
+        Python (all searchsorted + arithmetic on (Q,) arrays)."""
         ql = np.asarray(ql, dtype=np.float64)
         qh = np.asarray(qh, dtype=np.float64)
-        Q = ql.shape[0]
-        tmpl = iv.plan_searches_ranked(mask, 0, 0, self.domain.K - 1,
-                                       self.domain.K - 1, self.domain.K)
-        fl = self.domain.floor_rank(ql)
-        cl = self.domain.ceil_rank(ql)
-        fr = self.domain.floor_rank(qh)
-        cr = self.domain.ceil_rank(qh)
-        out = []
-        for slot, t0 in enumerate(tmpl):
-            versions = np.empty(Q, np.int64)
-            klo = np.empty(Q, np.int64)
-            khi = np.empty(Q, np.int64)
-            for qi in range(Q):
-                # the task sequence is mask-determined, so slots align per query
-                t = iv.plan_searches_ranked(mask, int(fl[qi]), int(cl[qi]),
-                                            int(fr[qi]), int(cr[qi]), self.domain.K)[slot]
-                assert t.variant == t0.variant
-                versions[qi], klo[qi], khi[qi] = t.version, t.key_lo, t.key_hi
-            out.append((t0.variant, versions, klo, khi))
-        return out
+        if np.any(ql > qh):
+            raise ValueError("query ranges must satisfy ql <= qh")
+        slots = iv.plan_batch_ranked(mask, self.domain.floor_rank(ql),
+                                     self.domain.ceil_rank(ql),
+                                     self.domain.floor_rank(qh),
+                                     self.domain.ceil_rank(qh), self.domain.K)
+        missing = {s.variant for s in slots} - set(self.variants)
+        if missing:
+            raise ValueError(f"mask {iv.mask_name(mask)} needs variants {missing}; "
+                             f"built: {sorted(self.variants)}")
+        return slots
 
     def index_bytes(self) -> int:
         return sum(v.nbytes() for v in self.variants.values())

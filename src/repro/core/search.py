@@ -17,7 +17,7 @@ expanded. Results for two-task plans (Theorem 4.1) are merged with id-dedupe.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import numpy as np
 
@@ -26,7 +26,7 @@ import jax.numpy as jnp
 
 from . import segment_tree as st
 from .hnsw import NO_EDGE
-from .mstg import FrozenVariant, MSTGIndex
+from .mstg import FrozenVariant
 
 INF = jnp.inf
 
@@ -211,32 +211,5 @@ def merge_topk(ids_a, d_a, ids_b, d_b, k: int):
     return jnp.take_along_axis(ids, order, 1), jnp.take_along_axis(d, order, 1)
 
 
-class MSTGSearcher:
-    """Host-facing search API over a built MSTGIndex (graph engine)."""
-
-    def __init__(self, index: MSTGIndex, use_kernel: bool = False):
-        self.index = index
-        self.use_kernel = use_kernel
-        self.dev = {name: DeviceVariant(fv, index.vectors)
-                    for name, fv in index.variants.items()}
-
-    def search(self, queries: np.ndarray, qlo: np.ndarray, qhi: np.ndarray,
-               mask: int, k: int = 10, ef: int = 64,
-               max_steps: Optional[int] = None,
-               fanout: int = 1) -> Tuple[np.ndarray, np.ndarray]:
-        queries = jnp.asarray(np.ascontiguousarray(queries, np.float32))
-        plans = self.index.plan_batch(mask, qlo, qhi)
-        steps = max_steps or ((4 * ef + 64) // max(fanout, 1) + 8)
-        res = None
-        for variant, versions, klo, khi in plans:
-            dv = self.dev[variant]
-            ids, d = mstg_graph_search(
-                dv.tree(), queries, jnp.asarray(versions, jnp.int32),
-                jnp.asarray(klo, jnp.int32), jnp.asarray(khi, jnp.int32),
-                k=k, ef=ef, max_steps=steps, Kpad=dv.meta.Kpad,
-                use_kernel=self.use_kernel, fanout=fanout)
-            res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
-        if res is None:
-            Q = queries.shape[0]
-            return (np.full((Q, k), NO_EDGE, np.int32), np.full((Q, k), np.inf, np.float32))
-        return np.asarray(res[0]), np.asarray(res[1])
+# MSTGSearcher (the host-facing graph-path API) lives in repro.core.engine,
+# built on the QueryEngine facade; this module keeps the device-level pieces.

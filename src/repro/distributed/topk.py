@@ -26,6 +26,16 @@ from repro.core.flat import flat_search
 from repro.core.hnsw import NO_EDGE
 
 
+def _axis_size(axis: str) -> int:
+    """Static size of a named mesh axis inside shard_map.
+
+    jax.lax.axis_size only exists on newer JAX; on 0.4.x the axis env exposes
+    the (already static) size via jax.core.axis_frame."""
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis))
+    return int(jax.core.axis_frame(axis))
+
+
 def global_topk_merge(ids, dists, k: int, axis: str):
     """all_gather merge inside shard_map: (Q, k) local -> (Q, k) global."""
     all_ids = jax.lax.all_gather(ids, axis)     # (D, Q, k)
@@ -43,7 +53,7 @@ def tournament_topk_merge(ids, dists, k: int, axis: str):
 
     After round r, device i holds the merged top-k of its 2^(r+1)-device
     group; all devices finish with the global top-k (butterfly exchange)."""
-    D = jax.lax.axis_size(axis)
+    D = _axis_size(axis)
     rounds = int(np.log2(D))
     assert (1 << rounds) == D, "tournament merge needs power-of-two shards"
     for r in range(rounds):

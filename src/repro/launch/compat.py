@@ -1,0 +1,12 @@
+"""Small shims over XLA/JAX API drift so the launch tooling runs on both the
+pinned 0.4.x environment and current JAX."""
+from __future__ import annotations
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a one-element list of dicts on
+    jax 0.4.x and a plain dict on newer versions; normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

@@ -133,7 +133,8 @@ def run_cell(mesh_kind: str, merge: str, artifact_dir: str, force=False):
     t0 = time.time()
     with mesh:
         compiled = jax.jit(fn).lower(*args).compile()
-    ca = compiled.cost_analysis()
+    from .compat import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     mem = compiled.memory_analysis()
     colls, wire, counts = collective_bytes(compiled.as_text(), ndev)
     flops = float(ca.get("flops", 0))

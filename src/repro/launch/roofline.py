@@ -57,7 +57,8 @@ def _measure(cfg, shape_name, mesh, repeats):
                            out_shardings=bundle.out_shardings,
                            donate_argnums=bundle.donate
                            ).lower(*bundle.args).compile()
-    ca = compiled.cost_analysis()
+    from .compat import cost_analysis_dict
+    ca = cost_analysis_dict(compiled)
     ndev = int(np.prod(list(mesh.shape.values())))
     colls, wire, _ = collective_bytes(compiled.as_text(), ndev)
     return {"flops": float(ca.get("flops", 0.0)),

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
-from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, MSTGIndex, MSTGSearcher,
+from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, MSTGIndex, QueryEngine,
                         intervals as iv)
 from repro.data import make_range_dataset, make_queries
 from repro.models.transformer import LM
@@ -38,7 +38,7 @@ def main():
     t0 = time.time()
     idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
                     m=12, ef_con=64)
-    searcher = MSTGSearcher(idx)
+    qengine = QueryEngine(idx)
     print(f"MSTG built: n={args.n} K={idx.domain.K} "
           f"bytes={idx.index_bytes()/1e6:.1f}MB in {time.time()-t0:.1f}s")
 
@@ -61,7 +61,7 @@ def main():
 
     # 3) batched retrieval serving
     embed_fn = lambda item: ds.queries[item]  # stub embedding: query vectors
-    server = RetrievalServer(searcher, embed_fn, k=args.k, ef=64)
+    server = RetrievalServer(qengine, embed_fn, k=args.k, ef=64)
     qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=2)
     for i in range(args.requests):
         mask = ANY_OVERLAP if i % 2 == 0 else QUERY_CONTAINED
@@ -71,7 +71,8 @@ def main():
     dt = time.time() - t0
     ok = sum(1 for ids, _ in results.values() if (ids >= 0).any())
     print(f"served {len(results)} requests in {dt*1e3:.1f} ms "
-          f"({len(results)/dt:.1f} qps); {ok} non-empty")
+          f"({len(results)/dt:.1f} qps); {ok} non-empty; "
+          f"routes={qengine.route_counts}")
     for i in list(results)[:3]:
         ids, d = results[i]
         print(f"  req {i}: top ids {ids[:5].tolist()}")

@@ -91,14 +91,23 @@ class ServeEngine:
 class RetrievalServer:
     """The paper's serving scenario: requests carry (text -> query vector via
     the LM's embedding table pooling) + an RR predicate; answers come from the
-    MSTG searcher. Batched: requests are queued and executed per tick."""
+    :class:`repro.core.QueryEngine`. Batched: requests are queued and executed
+    per tick, grouped by predicate mask so each group hits one vectorized plan
+    and one jit-cached trace (the engine pads ragged groups to bucket sizes)."""
 
-    def __init__(self, searcher, embed_fn, k: int = 10, ef: int = 64):
-        self.searcher = searcher
+    def __init__(self, engine, embed_fn, k: int = 10, ef: int = 64):
+        # ``engine`` is a QueryEngine (or anything with its .search signature;
+        # the legacy MSTGSearcher wrapper still works).
+        self.engine = engine
         self.embed_fn = embed_fn
         self.k = k
         self.ef = ef
         self.queue: List[Tuple[Any, float, float, int]] = []
+
+    @classmethod
+    def from_index(cls, index, embed_fn, k: int = 10, ef: int = 64, **engine_kw):
+        from repro.core import QueryEngine
+        return cls(QueryEngine(index, **engine_kw), embed_fn, k=k, ef=ef)
 
     def submit(self, item, qlo: float, qhi: float, mask: int):
         self.queue.append((item, qlo, qhi, mask))
@@ -113,8 +122,8 @@ class RetrievalServer:
             vecs = np.stack([self.embed_fn(self.queue[i][0]) for i in idxs])
             qlo = np.array([self.queue[i][1] for i in idxs])
             qhi = np.array([self.queue[i][2] for i in idxs])
-            ids, d = self.searcher.search(vecs, qlo, qhi, mask, k=self.k,
-                                          ef=self.ef)
+            ids, d = self.engine.search(vecs, qlo, qhi, mask, k=self.k,
+                                        ef=self.ef)
             for j, i in enumerate(idxs):
                 results[i] = (ids[j], d[j])
         self.queue.clear()

@@ -29,14 +29,17 @@ def compressed_mean(x: jnp.ndarray, axis: str, residual: jnp.ndarray):
     Returns (mean, new_residual)."""
     x32 = x.astype(jnp.float32) + residual
     q, scale = quantize_int8(x32)
-    deq_local = dequantize_int8(q, scale)
-    new_residual = x32 - deq_local
     # int8 payload summed in int32 to avoid overflow across shards
     summed = jax.lax.psum(q.astype(jnp.int32), axis)
-    n = jax.lax.axis_size(axis)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis).astype(jnp.float32)
     # scales differ per shard -> reduce them too (mean of scales is a standard
     # approximation; exactness is restored over steps by error feedback)
     scale_mean = jax.lax.pmean(scale, axis)
+    # residual accounting: what this shard actually contributed to the global
+    # mean is q * scale_mean (receivers dequantize with the reduced scale),
+    # so that — not the locally-scaled dequant — is what error feedback must
+    # subtract; otherwise the scale mismatch accumulates as bias.
+    new_residual = x32 - dequantize_int8(q, scale_mean)
     return summed.astype(jnp.float32) * scale_mean / n, new_residual
 
 

@@ -1,9 +1,24 @@
+import importlib.util
 import os
 import sys
 
 # NOTE: do NOT set XLA_FLAGS / device-count overrides here — smoke tests and
 # benches must see the real single CPU device; only launch/dryrun.py forces 512.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Property tests use hypothesis; offline containers can't pip install it, so
+# fall back to the minimal random-sampling shim (tests/_hypothesis_fallback.py)
+# when the real package is absent. CI installs real hypothesis and skips this.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 import numpy as np
 import pytest

@@ -1,0 +1,154 @@
+"""Vectorized planner (property-based vs the scalar Theorem 4.1 reference)
+and the QueryEngine facade (routing, padding, end-to-end recall)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, QUERY_CONTAINING,
+                        MSTGIndex, QueryEngine, intervals as iv)
+from repro.core import FlatSearcher
+from repro.core.engine import ROUTE_GRAPH, ROUTE_PRUNED, _next_pow2
+from repro.data import make_queries, brute_force_topk, recall_at_k
+
+
+# ---- plan_batch_ranked vs scalar plan_searches_ranked ----
+
+@settings(max_examples=150, deadline=None)
+@given(hst.integers(1, 63), hst.integers(2, 40), hst.data())
+def test_plan_batch_ranked_matches_scalar(mask, K, data):
+    """Slot-for-slot agreement on random rank bounds, including the Allen
+    BEFORE/AFTER bits and exact-vs-between endpoint encodings."""
+    rng = np.random.default_rng(data.draw(hst.integers(0, 2**31)))
+    Q = 32
+    fl = rng.integers(-1, K, Q)
+    exact_l = rng.integers(0, 2, Q).astype(bool) & (fl >= 0)
+    cl = np.where(exact_l, fl, fl + 1)
+    fr = np.maximum(fl, rng.integers(-1, K, Q))
+    exact_r = rng.integers(0, 2, Q).astype(bool) & (fr >= cl)
+    cr = np.where(exact_r, fr, fr + 1)
+
+    slots = iv.plan_batch_ranked(mask, fl, cl, fr, cr, K)
+    for qi in range(Q):
+        ref = iv.plan_searches_ranked(mask, int(fl[qi]), int(cl[qi]),
+                                      int(fr[qi]), int(cr[qi]), K)
+        assert len(slots) == len(ref)
+        for s, t in zip(slots, ref):
+            assert s.variant == t.variant
+            got = (int(s.version[qi]), int(s.key_lo[qi]), int(s.key_hi[qi]))
+            assert got == (t.version, t.key_lo, t.key_hi), (
+                iv.mask_name(mask), qi, got, t)
+
+
+def test_plan_batch_ranked_empty_mask_and_shapes():
+    slots = iv.plan_batch_ranked(0, np.zeros(4, np.int64), np.zeros(4, np.int64),
+                                 np.ones(4, np.int64), np.ones(4, np.int64), 8)
+    assert slots == []
+    slots = iv.plan_batch_ranked(ANY_OVERLAP, np.zeros(5, np.int64),
+                                 np.zeros(5, np.int64), np.full(5, 3),
+                                 np.full(5, 3), 8)
+    assert [s.variant for s in slots] == [iv.VARIANT_T, iv.VARIANT_TP]
+    for s in slots:
+        assert s.version.shape == s.key_lo.shape == s.key_hi.shape == (5,)
+
+
+def test_plan_batch_rejects_inverted_ranges(built_index):
+    with pytest.raises(ValueError):
+        built_index.plan_batch(ANY_OVERLAP, np.array([5.0]), np.array([1.0]))
+
+
+def test_plan_batch_rejects_missing_variant(small_ds):
+    ds = small_ds
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T",), m=8, ef_con=40)
+    with pytest.raises(ValueError, match="needs variants"):
+        idx.plan_batch(QUERY_CONTAINING, np.array([1.0]), np.array([2.0]))
+
+
+# ---- QueryEngine ----
+
+def test_engine_graph_matches_flat_ground_truth(small_ds, built_index):
+    """End-to-end: graph path vs flat_search ground truth at high recall."""
+    ds = small_ds
+    eng = QueryEngine(built_index)
+    fs = FlatSearcher(built_index)
+    for mask in (ANY_OVERLAP, QUERY_CONTAINED, QUERY_CONTAINING):
+        qlo, qhi = make_queries(ds, mask, 0.15, seed=31)
+        tids, _ = fs.search(ds.queries, qlo, qhi, mask, k=10)
+        gids, _ = eng.search_graph(ds.queries, qlo, qhi, mask, k=10, ef=96)
+        assert recall_at_k(gids, np.asarray(tids)) >= 0.9, iv.mask_name(mask)
+
+
+def test_engine_routes_agree_and_pruned_is_exact(small_ds, built_index):
+    ds = small_ds
+    eng = QueryEngine(built_index)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.1, seed=37)
+    tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                 qlo, qhi, ANY_OVERLAP, 10)
+    pids, pds = eng.search_pruned(ds.queries, qlo, qhi, ANY_OVERLAP, k=10)
+    np.testing.assert_allclose(np.sort(pds, 1), np.sort(tds, 1),
+                               rtol=1e-4, atol=1e-4)
+    fids, fds = eng.search_flat(ds.queries, qlo, qhi, ANY_OVERLAP, k=10)
+    np.testing.assert_allclose(np.sort(fds, 1), np.sort(tds, 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_engine_auto_routing_by_selectivity(small_ds, built_index):
+    ds = small_ds
+    eng = QueryEngine(built_index, flat_threshold=0.15)
+    # narrow query -> low selectivity -> pruned; wide -> graph
+    qlo_n, qhi_n = make_queries(ds, ANY_OVERLAP, 0.02, seed=41)
+    qlo_w, qhi_w = make_queries(ds, ANY_OVERLAP, 0.6, seed=41)
+    est_n = eng.estimate_selectivity(ANY_OVERLAP, qlo_n, qhi_n)
+    est_w = eng.estimate_selectivity(ANY_OVERLAP, qlo_w, qhi_w)
+    assert est_n.mean() < est_w.mean()
+    assert eng.route_for(ANY_OVERLAP, qlo_n, qhi_n) == ROUTE_PRUNED
+    assert eng.route_for(ANY_OVERLAP, qlo_w, qhi_w) == ROUTE_GRAPH
+    # selectivity estimate is exact here (sample == corpus)
+    want = np.stack([np.asarray(iv.eval_predicate(
+        ANY_OVERLAP, ds.lo, ds.hi, qlo_n[i], qhi_n[i])).mean()
+        for i in range(len(qlo_n))])
+    np.testing.assert_allclose(est_n, want, atol=1e-12)
+
+
+def test_engine_padding_is_invisible(small_ds, built_index):
+    """Bucketed (padded) batches return exactly what unpadded batches do."""
+    ds = small_ds
+    eng_pad = QueryEngine(built_index, pad_queries=True)
+    eng_raw = QueryEngine(built_index, pad_queries=False)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=43)
+    for Q in (1, 3, 7):  # all pad up to buckets
+        a_ids, a_d = eng_pad.search(ds.queries[:Q], qlo[:Q], qhi[:Q],
+                                    ANY_OVERLAP, k=10, route=ROUTE_GRAPH)
+        b_ids, b_d = eng_raw.search(ds.queries[:Q], qlo[:Q], qhi[:Q],
+                                    ANY_OVERLAP, k=10, route=ROUTE_GRAPH)
+        assert a_ids.shape == (Q, 10)
+        np.testing.assert_allclose(np.sort(a_d, 1), np.sort(b_d, 1),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_engine_pruned_exact_despite_bad_estimator(small_ds, built_index):
+    """The pruned candidate cap comes from the plan (exact bound), not the
+    sampled selectivity estimate — a pathological estimator must not cause
+    truncation (regression: cap used to be 2x the sampled selectivity)."""
+    ds = small_ds
+    eng = QueryEngine(built_index, selectivity_sample=4)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.05, seed=47)
+    tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                 qlo, qhi, ANY_OVERLAP, 10)
+    pids, pds = eng.search_pruned(ds.queries, qlo, qhi, ANY_OVERLAP, k=10)
+    np.testing.assert_allclose(np.sort(pds, 1), np.sort(tds, 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_engine_empty_batch_and_empty_predicate(built_index, small_ds):
+    eng = QueryEngine(built_index)
+    ids, d = eng.search(np.zeros((0, small_ds.d), np.float32),
+                        np.zeros(0), np.zeros(0), ANY_OVERLAP, k=5)
+    assert ids.shape == (0, 5) and d.shape == (0, 5)
+    qlo = np.full(3, -50.0)
+    qhi = np.full(3, -40.0)
+    ids, d = eng.search(small_ds.queries[:3], qlo, qhi, QUERY_CONTAINED, k=5)
+    assert (ids < 0).all() and np.isinf(d).all()
+
+
+def test_next_pow2():
+    assert [_next_pow2(x) for x in (1, 2, 3, 7, 8, 9)] == [1, 2, 4, 8, 8, 16]
