@@ -9,7 +9,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import ANY_OVERLAP, MSTGIndex, QueryEngine
+from repro.core import ANY_OVERLAP, MSTGIndex, QueryEngine, SearchRequest
 from repro.data import make_range_dataset
 
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
@@ -44,6 +44,13 @@ def bench_engine(idx=None, route: str = "auto", **kw):
     if key not in _cache:
         _cache[key] = QueryEngine(idx, route=route, **kw)
     return _cache[key]
+
+
+def request(queries, qlo, qhi, predicate=ANY_OVERLAP, k=K, ef=64, route=None):
+    """Declarative-API request used by every experiment (route=None -> the
+    engine's default; experiments pin "graph"/"pruned"/"flat" explicitly)."""
+    return SearchRequest(queries, (qlo, qhi), predicate, k=k, ef=ef,
+                         route=route)
 
 
 def time_call(fn, *args, repeats: int = 3, **kw):

@@ -2,56 +2,57 @@
 (ef_con / M build params) — parameter-robustness of MSTG."""
 import numpy as np
 
-from repro.core import ANY_OVERLAP, MSTGIndex, MSTGSearcher
+from repro.core import MSTGIndex, Overlaps, QueryEngine
 from repro.data import (make_range_dataset, make_queries, brute_force_topk,
-                        recall_at_k, relative_distance_error)
+                        relative_distance_error)
 
-from .common import Q, QUICK, emit, time_call
+from .common import Q, QUICK, emit, request, time_call
 
 
 def run():
+    pred = Overlaps()
     # Exp.10: attribute cardinality |A|
     for K in ((32, 128) if QUICK else (32, 128, 512)):
         ds = make_range_dataset(n=1500, d=32, n_queries=Q, quantize=K, seed=31)
         idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
                         m=12, ef_con=64)
-        gs = MSTGSearcher(idx)
-        qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.1, seed=32)
+        eng = QueryEngine(idx)
+        qlo, qhi = make_queries(ds, pred.mask, 0.1, seed=32)
         tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                     qlo, qhi, ANY_OVERLAP, 10)
-        dt, (ids, dd) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
-                                                    ANY_OVERLAP, k=10, ef=64))
+                                     qlo, qhi, pred.mask, 10)
+        req = request(ds.queries, qlo, qhi, pred, k=10, route="graph")
+        dt, res = time_call(eng.search, req)
         emit(f"exp10/cardA{idx.domain.K}", dt / Q * 1e6,
-             f"recall@10={recall_at_k(np.asarray(ids), tids):.3f};"
-             f"rde={relative_distance_error(np.asarray(dd), tds):.4f};"
+             f"recall@10={res.recall_vs(tids):.3f};"
+             f"rde={relative_distance_error(np.asarray(res.dists), tds):.4f};"
              f"levels={idx.variants['T'].Lv}")
 
     # Exp.11: k sweep (fixed index)
     ds = make_range_dataset(n=1500, d=32, n_queries=Q, quantize=128, seed=33)
     idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
                     m=12, ef_con=64)
-    gs = MSTGSearcher(idx)
-    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=34)
+    eng = QueryEngine(idx)
+    qlo, qhi = make_queries(ds, pred.mask, 0.15, seed=34)
     for k in (1, 10, 50):
         tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                   qlo, qhi, ANY_OVERLAP, k)
-        dt, (ids, _) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
-                                                   ANY_OVERLAP, k=k,
-                                                   ef=max(64, 2 * k)))
+                                   qlo, qhi, pred.mask, k)
+        req = request(ds.queries, qlo, qhi, pred, k=k, ef=max(64, 2 * k),
+                      route="graph")
+        dt, res = time_call(eng.search, req)
         emit(f"exp11/k{k}", dt / Q * 1e6,
-             f"recall@{k}={recall_at_k(np.asarray(ids), tids):.3f}")
+             f"recall@{k}={res.recall_vs(tids):.3f}")
 
     # Exp.12/13: build params M (out-degree) and ef_con
     if not QUICK:
         tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                   qlo, qhi, ANY_OVERLAP, 10)
+                                   qlo, qhi, pred.mask, 10)
         for m, efc in ((8, 32), (12, 64), (16, 96)):
             idx2 = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
                              m=m, ef_con=efc)
-            gs2 = MSTGSearcher(idx2)
-            dt, (ids, _) = time_call(lambda: gs2.search(
-                ds.queries, qlo, qhi, ANY_OVERLAP, k=10, ef=64))
+            eng2 = QueryEngine(idx2)
+            req = request(ds.queries, qlo, qhi, pred, k=10, route="graph")
+            dt, res = time_call(eng2.search, req)
             emit(f"exp12/m{m}_efcon{efc}", dt / Q * 1e6,
-                 f"recall@10={recall_at_k(np.asarray(ids), tids):.3f};"
+                 f"recall@10={res.recall_vs(tids):.3f};"
                  f"build_s={sum(idx2.build_seconds.values()):.1f};"
                  f"bytes={idx2.index_bytes()}")

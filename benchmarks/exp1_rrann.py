@@ -1,32 +1,37 @@
 """Exp. 1 (Fig. 3/4): RRANN QPS vs recall — MSTG engines vs baselines."""
 import numpy as np
 
-from repro.core import ANY_OVERLAP
+from repro.core import Overlaps
 from repro.core.baselines import Prefiltering, Postfiltering, AcornLike
 from repro.data import (make_queries, brute_force_topk, recall_at_k,
                         relative_distance_error)
 
-from .common import Q, K, bench_dataset, bench_engine, bench_index, emit, time_call
+from .common import (Q, K, bench_dataset, bench_engine, bench_index, emit,
+                     request, time_call)
 
 
 def run():
     ds = bench_dataset()
     idx = bench_index(ds)
+    pred = Overlaps()
     for sel in (0.05, 0.10):
-        qlo, qhi = make_queries(ds, ANY_OVERLAP, sel, seed=11)
+        qlo, qhi = make_queries(ds, pred.mask, sel, seed=11)
         tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                     qlo, qhi, ANY_OVERLAP, K)
+                                     qlo, qhi, pred.mask, K)
         eng = bench_engine(idx)
         rows = [
-            ("engine_auto", lambda: eng.search(ds.queries, qlo, qhi,
-                                               ANY_OVERLAP, k=K, ef=64)),
-            ("mstg_graph", lambda: eng.search_graph(ds.queries, qlo, qhi,
-                                                    ANY_OVERLAP, k=K, ef=64)),
-            ("mstg_flat", lambda: eng.search_flat(ds.queries, qlo, qhi,
-                                                  ANY_OVERLAP, k=K)),
-            ("mstg_pruned", lambda: eng.search_pruned(ds.queries, qlo, qhi,
-                                                      ANY_OVERLAP, k=K)),
+            ("engine_auto", None),
+            ("mstg_graph", "graph"),
+            ("mstg_flat", "flat"),
+            ("mstg_pruned", "pruned"),
         ]
+        for name, route in rows:
+            req = request(ds.queries, qlo, qhi, pred, route=route)
+            dt, res = time_call(eng.search, req)
+            rde = relative_distance_error(np.asarray(res.dists), tds)
+            emit(f"exp1/{name}/sel{int(sel*100)}", dt / Q * 1e6,
+                 f"recall@10={res.recall_vs(tids):.3f};qps={Q/dt:.1f};"
+                 f"rde={rde:.4f}")
         base = [
             ("prefilter", Prefiltering(ds.vectors, ds.lo, ds.hi), {}),
             ("postfilter", Postfiltering(ds.vectors, ds.lo, ds.hi, m=12,
@@ -34,15 +39,9 @@ def run():
             ("acorn", AcornLike(ds.vectors, ds.lo, ds.hi, m=12, ef_con=64),
              dict(ef=64)),
         ]
-        for name, fn in rows:
-            dt, (ids, dd) = time_call(fn)
-            r = recall_at_k(np.asarray(ids), tids)
-            rde = relative_distance_error(np.asarray(dd), tds)
-            emit(f"exp1/{name}/sel{int(sel*100)}", dt / Q * 1e6,
-                 f"recall@10={r:.3f};qps={Q/dt:.1f};rde={rde:.4f}")
         for name, b, kw in base:
             dt, (ids, _) = time_call(
-                lambda: b.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=K, **kw))
+                lambda: b.search(ds.queries, qlo, qhi, pred.mask, k=K, **kw))
             r = recall_at_k(ids, tids)
             emit(f"exp1/{name}/sel{int(sel*100)}", dt / Q * 1e6,
                  f"recall@10={r:.3f};qps={Q/dt:.1f}")

@@ -1,12 +1,12 @@
 """Exp. 3 (Fig. 6): RFANN — MSTG vs an iRangeGraph-style index."""
 import numpy as np
 
-from repro.core import MSTGSearcher, intervals as iv
+from repro.core import QueryEngine, intervals as iv
 from repro.core.baselines import IRangeGraphLike
 from repro.core.mstg import MSTGIndex
 from repro.data import brute_force_topk, recall_at_k
 
-from .common import Q, K, bench_dataset, emit, time_call
+from .common import Q, K, bench_dataset, emit, request, time_call
 
 
 def run():
@@ -19,11 +19,11 @@ def run():
     tids, _ = brute_force_topk(ds.vectors, attr, attr, ds.queries, qlo, qhi,
                                iv.RFANN_MASK, K)
     mstg = MSTGIndex(ds.vectors, attr, attr, variants=("Tpp",), m=12, ef_con=64)
-    gs = MSTGSearcher(mstg)
-    dt, (ids, _) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
-                                               iv.RFANN_MASK, k=K, ef=64))
+    eng = QueryEngine(mstg)
+    req = request(ds.queries, qlo, qhi, iv.RFANN_MASK, route="graph")
+    dt, res = time_call(eng.search, req)
     emit("exp3/mstg", dt / Q * 1e6,
-         f"recall@10={recall_at_k(np.asarray(ids), tids):.3f};qps={Q/dt:.1f}")
+         f"recall@10={res.recall_vs(tids):.3f};qps={Q/dt:.1f}")
     irg = IRangeGraphLike(ds.vectors, attr, m=12, ef_con=64)
     dt, (ids, _) = time_call(lambda: irg.search(ds.queries, qlo, qhi, k=K, ef=64))
     emit("exp3/irangegraph", dt / Q * 1e6,

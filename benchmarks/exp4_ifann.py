@@ -1,11 +1,12 @@
 """Exp. 4 (Fig. 8): IFANN — MSTG vs a Hi-PNG-style quadtree."""
 import numpy as np
 
-from repro.core import MSTGSearcher, intervals as iv
+from repro.core import intervals as iv
 from repro.core.baselines import HiPNGLike
 from repro.data import make_queries, brute_force_topk, recall_at_k
 
-from .common import Q, K, bench_dataset, bench_index, emit, time_call
+from .common import (Q, K, bench_dataset, bench_engine, bench_index, emit,
+                     request, time_call)
 
 
 def run():
@@ -14,11 +15,11 @@ def run():
     qlo, qhi = make_queries(ds, iv.IFANN_MASK, 0.15, seed=13)
     tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi,
                                iv.IFANN_MASK, K)
-    gs = MSTGSearcher(idx)
-    dt, (ids, _) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
-                                               iv.IFANN_MASK, k=K, ef=64))
+    eng = bench_engine(idx)
+    req = request(ds.queries, qlo, qhi, iv.IFANN_MASK, route="graph")
+    dt, res = time_call(eng.search, req)
     emit("exp4/mstg", dt / Q * 1e6,
-         f"recall@10={recall_at_k(np.asarray(ids), tids):.3f};qps={Q/dt:.1f}")
+         f"recall@10={res.recall_vs(tids):.3f};qps={Q/dt:.1f}")
     hp = HiPNGLike(ds.vectors, ds.lo, ds.hi, leaf_size=64, m=12, ef_con=48)
     dt, (ids, _) = time_call(lambda: hp.search(ds.queries, qlo, qhi, k=K, ef=64))
     emit("exp4/hipng", dt / Q * 1e6,

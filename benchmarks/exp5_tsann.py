@@ -1,11 +1,12 @@
 """Exp. 5 (Fig. 9): TSANN — MSTG vs a TS-Graph-style per-bucket index."""
 import numpy as np
 
-from repro.core import MSTGSearcher, intervals as iv
+from repro.core import intervals as iv
 from repro.core.baselines import TSGraphLike
 from repro.data import brute_force_topk, recall_at_k
 
-from .common import Q, K, bench_dataset, bench_index, emit, time_call
+from .common import (Q, K, bench_dataset, bench_engine, bench_index, emit,
+                     request, time_call)
 
 
 def run():
@@ -16,11 +17,11 @@ def run():
     qhi = np.full(Q, t)
     tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi,
                                iv.TSANN_MASK, K)
-    gs = MSTGSearcher(idx)
-    dt, (ids, _) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
-                                               iv.TSANN_MASK, k=K, ef=64))
+    eng = bench_engine(idx)
+    req = request(ds.queries, qlo, qhi, iv.TSANN_MASK, route="graph")
+    dt, res = time_call(eng.search, req)
     emit("exp5/mstg", dt / Q * 1e6,
-         f"recall@10={recall_at_k(np.asarray(ids), tids):.3f};qps={Q/dt:.1f}")
+         f"recall@10={res.recall_vs(tids):.3f};qps={Q/dt:.1f}")
     tsg = TSGraphLike(ds.vectors, ds.lo, ds.hi, n_buckets=16, m=12, ef_con=48)
     dt, (ids, _) = time_call(lambda: tsg.search(ds.queries, qlo, qhi, k=K, ef=64))
     emit("exp5/tsgraph", dt / Q * 1e6,

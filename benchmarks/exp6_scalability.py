@@ -1,24 +1,25 @@
 """Exp. 6 (Fig. 10): scalability in n (build cost + search latency)."""
 import numpy as np
 
-from repro.core import ANY_OVERLAP, MSTGIndex, MSTGSearcher
-from repro.data import make_queries, brute_force_topk, recall_at_k
+from repro.core import MSTGIndex, Overlaps, QueryEngine
+from repro.data import make_queries, brute_force_topk
 
-from .common import Q, K, QUICK, bench_dataset, emit, time_call
+from .common import Q, K, QUICK, bench_dataset, emit, request, time_call
 
 
 def run():
+    pred = Overlaps()
     for n in ((800, 1600) if QUICK else (1000, 2000, 4000)):
         ds = bench_dataset(n=n, seed=5)
         idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
                         m=12, ef_con=64)
-        qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.1, seed=6)
-        gs = MSTGSearcher(idx)
-        dt, (ids, _) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
-                                                   ANY_OVERLAP, k=K, ef=64))
+        qlo, qhi = make_queries(ds, pred.mask, 0.1, seed=6)
+        eng = QueryEngine(idx)
+        req = request(ds.queries, qlo, qhi, pred, route="graph")
+        dt, res = time_call(eng.search, req)
         tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                   qlo, qhi, ANY_OVERLAP, K)
+                                   qlo, qhi, pred.mask, K)
         emit(f"exp6/n{n}", dt / Q * 1e6,
-             f"recall@10={recall_at_k(np.asarray(ids), tids):.3f};"
+             f"recall@10={res.recall_vs(tids):.3f};"
              f"build_s={sum(idx.build_seconds.values()):.1f};"
              f"bytes={idx.index_bytes()}")

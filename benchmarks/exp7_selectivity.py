@@ -1,21 +1,23 @@
 """Exp. 7 (Fig. 12): query selectivity sweep."""
 import numpy as np
 
-from repro.core import ANY_OVERLAP, MSTGSearcher
-from repro.data import make_queries, brute_force_topk, recall_at_k
+from repro.core import Overlaps
+from repro.data import make_queries, brute_force_topk
 
-from .common import Q, K, bench_dataset, bench_index, emit, time_call
+from .common import (Q, K, bench_dataset, bench_engine, bench_index, emit,
+                     request, time_call)
 
 
 def run():
     ds = bench_dataset()
     idx = bench_index(ds)
-    gs = MSTGSearcher(idx)
+    eng = bench_engine(idx)
+    pred = Overlaps()
     for sel in (0.05, 0.1, 0.2, 0.4):
-        qlo, qhi = make_queries(ds, ANY_OVERLAP, sel, seed=17)
+        qlo, qhi = make_queries(ds, pred.mask, sel, seed=17)
         tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                   qlo, qhi, ANY_OVERLAP, K)
-        dt, (ids, _) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
-                                                   ANY_OVERLAP, k=K, ef=64))
+                                   qlo, qhi, pred.mask, K)
+        req = request(ds.queries, qlo, qhi, pred, route="graph")
+        dt, res = time_call(eng.search, req)
         emit(f"exp7/sel{int(sel*100)}", dt / Q * 1e6,
-             f"recall@10={recall_at_k(np.asarray(ids), tids):.3f};qps={Q/dt:.1f}")
+             f"recall@10={res.recall_vs(tids):.3f};qps={Q/dt:.1f}")

@@ -1,22 +1,23 @@
 """Exp. 8 (Fig. 13): attribute distribution robustness."""
 import numpy as np
 
-from repro.core import ANY_OVERLAP, MSTGIndex, MSTGSearcher
-from repro.data import make_queries, brute_force_topk, recall_at_k
+from repro.core import MSTGIndex, Overlaps, QueryEngine
+from repro.data import make_queries, brute_force_topk
 
-from .common import Q, K, bench_dataset, emit, time_call
+from .common import Q, K, bench_dataset, emit, request, time_call
 
 
 def run():
+    pred = Overlaps()
     for dist in ("uniform", "normal", "longtail", "zipf"):
         ds = bench_dataset(dist=dist, n=1500, seed=8)
         idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
                         m=12, ef_con=64)
-        gs = MSTGSearcher(idx)
-        qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.1, seed=9)
+        eng = QueryEngine(idx)
+        qlo, qhi = make_queries(ds, pred.mask, 0.1, seed=9)
         tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                   qlo, qhi, ANY_OVERLAP, K)
-        dt, (ids, _) = time_call(lambda: gs.search(ds.queries, qlo, qhi,
-                                                   ANY_OVERLAP, k=K, ef=64))
+                                   qlo, qhi, pred.mask, K)
+        req = request(ds.queries, qlo, qhi, pred, route="graph")
+        dt, res = time_call(eng.search, req)
         emit(f"exp8/{dist}", dt / Q * 1e6,
-             f"recall@10={recall_at_k(np.asarray(ids), tids):.3f}")
+             f"recall@10={res.recall_vs(tids):.3f}")

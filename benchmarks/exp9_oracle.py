@@ -1,32 +1,33 @@
 """Exp. 9 (Fig. 14): MSTG vs Oracle-HNSW (per-query index on O[R_q])."""
 import numpy as np
 
-from repro.core import ANY_OVERLAP, MSTGSearcher, intervals as iv
+from repro.core import Overlaps, intervals as iv
 from repro.core.hnsw import PlainHNSW
-from repro.data import make_queries, brute_force_topk, recall_at_k
+from repro.data import make_queries, brute_force_topk
 
-from .common import K, bench_dataset, bench_index, emit, time_call
+from .common import (K, bench_dataset, bench_engine, bench_index, emit,
+                     request, time_call)
 
 
 def run():
     ds = bench_dataset()
     idx = bench_index(ds)
-    gs = MSTGSearcher(idx)
+    eng = bench_engine(idx)
+    pred = Overlaps()
     nq = 6
-    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.1, n_queries=nq, seed=21)
+    qlo, qhi = make_queries(ds, pred.mask, 0.1, n_queries=nq, seed=21)
     tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries[:nq],
-                               qlo, qhi, ANY_OVERLAP, K)
-    dt, (ids, _) = time_call(lambda: gs.search(ds.queries[:nq], qlo, qhi,
-                                               ANY_OVERLAP, k=K, ef=64))
-    emit("exp9/mstg", dt / nq * 1e6,
-         f"recall@10={recall_at_k(np.asarray(ids), tids):.3f}")
+                               qlo, qhi, pred.mask, K)
+    req = request(ds.queries[:nq], qlo, qhi, pred, route="graph")
+    dt, res = time_call(eng.search, req)
+    emit("exp9/mstg", dt / nq * 1e6, f"recall@10={res.recall_vs(tids):.3f}")
     # oracle: per-query HNSW over exactly the qualifying subset (not practical,
     # upper bound only)
     hits = 0
     total = 0
     for qi in range(nq):
         sel = np.nonzero(np.asarray(iv.eval_predicate(
-            ANY_OVERLAP, ds.lo, ds.hi, qlo[qi], qhi[qi])))[0]
+            pred.mask, ds.lo, ds.hi, qlo[qi], qhi[qi])))[0]
         h = PlainHNSW(ds.vectors, m=12, ef_con=48)
         for u in sel:
             h.add(int(u))

@@ -18,11 +18,24 @@ def main() -> None:
                     help="tiny CI lane; writes a JSON perf artifact")
     ap.add_argument("--out", default="BENCH_smoke.json",
                     help="output path for --smoke (default: BENCH_smoke.json)")
+    ap.add_argument("--mask", default="any_overlap",
+                    help="RR predicate for the smoke lane, in any parse_mask "
+                         "spelling: 'any_overlap', '1|2|<', '2,4' (single "
+                         "digits are the paper's case numbers), or a "
+                         "multi-digit raw int mask like '15' "
+                         "(default: any_overlap)")
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help="append a one-line JSON record (keyed by commit) to "
+                         "PATH after --smoke, accumulating the bench "
+                         "trajectory across runs")
     args = ap.parse_args()
 
     if args.smoke:
+        from repro.core import parse_mask
+
         from .smoke import run_smoke
-        run_smoke(out_path=args.out)
+        run_smoke(out_path=args.out, mask=parse_mask(args.mask),
+                  history_path=args.history)
         return
 
     from . import (exp1_rrann, exp2_index_cost, exp3_rfann, exp4_ifann,

@@ -5,16 +5,22 @@ planner µs/query) accumulates as an artifact over time. Includes a planner
 microbenchmark at Q=1024 against a faithful reimplementation of the seed's
 per-query scalar loop — the acceptance gate for the vectorized planner is a
 >= 10x speedup, recorded in the JSON.
+
+``--history <path>`` additionally appends one compact JSON line per run,
+keyed by the commit (``GITHUB_SHA`` in CI), so the bench trajectory is a
+single greppable file rather than a pile of artifacts.
 """
 from __future__ import annotations
 
 import json
+import os
 import platform
 import time
 
 import numpy as np
 
-from repro.core import ANY_OVERLAP, MSTGIndex, QueryEngine, intervals as iv
+from repro.core import (ANY_OVERLAP, MSTGIndex, QueryEngine, SearchRequest,
+                        intervals as iv)
 from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
 
 from .common import time_call
@@ -72,12 +78,33 @@ def planner_microbench(index: MSTGIndex, Q: int = 1024, mask: int = ANY_OVERLAP,
     }
 
 
+def append_history(report: dict, history_path: str) -> dict:
+    """One compact JSON line per run, keyed by commit, appended so the bench
+    trajectory accumulates across scheduled CI runs."""
+    sel05 = report["exp1_rrann"].get("sel_05", {})
+    auto = sel05.get("engine_auto", {})
+    record = {
+        "commit": os.environ.get("GITHUB_SHA", "local")[:12],
+        "unix_time": round(report["unix_time"], 1),
+        "mask": report.get("mask", iv.mask_name(ANY_OVERLAP)),
+        "build_seconds": report["build_seconds"]["total"],
+        "planner_speedup": report["planner"]["speedup"],
+        "auto_qps": auto.get("qps"),
+        "auto_recall_at_10": auto.get("recall_at_10"),
+    }
+    with open(history_path, "a") as f:
+        f.write(json.dumps(record, sort_keys=True) + "\n")
+    return record
+
+
 def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
-              n_queries: int = 16, k: int = 10) -> dict:
+              n_queries: int = 16, k: int = 10, mask: int = ANY_OVERLAP,
+              history_path: str = None) -> dict:
     report: dict = {
-        "schema": 1,
+        "schema": 2,
         "unix_time": time.time(),
         "platform": platform.platform(),
+        "mask": iv.mask_name(mask),
         "sizes": {"n": n, "d": d, "queries": n_queries, "k": k},
     }
 
@@ -91,30 +118,35 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
                                "total": round(time.perf_counter() - t0, 4)}
     report["index_bytes"] = idx.index_bytes()
 
-    # exp1 (RRANN): engine QPS + recall at two selectivities
+    # exp1 (RRANN): engine QPS + recall at two selectivities, on the
+    # declarative SearchRequest surface
     eng = QueryEngine(idx)
     rrann = {}
     for sel in (0.05, 0.10):
-        qlo, qhi = make_queries(ds, ANY_OVERLAP, sel, seed=11)
+        qlo, qhi = make_queries(ds, mask, sel, seed=11)
         tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                   qlo, qhi, ANY_OVERLAP, k)
+                                   qlo, qhi, mask, k)
         row = {}
-        for name, fn in (
-                ("engine_auto", lambda: eng.search(ds.queries, qlo, qhi,
-                                                   ANY_OVERLAP, k=k, ef=64)),
-                ("graph", lambda: eng.search_graph(ds.queries, qlo, qhi,
-                                                   ANY_OVERLAP, k=k, ef=64)),
-                ("pruned", lambda: eng.search_pruned(ds.queries, qlo, qhi,
-                                                     ANY_OVERLAP, k=k))):
-            dt, (ids, _) = time_call(fn)
+        for name, route in (("engine_auto", None), ("graph", "graph"),
+                            ("pruned", "pruned")):
+            req = SearchRequest(ds.queries, (qlo, qhi), mask, k=k, ef=64,
+                                route=route)
+
+            def cold_search(req=req):
+                # auto-route pays selectivity estimation on every timed call
+                # (comparable with pre-cache history entries)
+                eng._sel_cache.clear()
+                return eng.search(req)
+
+            dt, res = time_call(cold_search)
             row[name] = {"qps": round(n_queries / dt, 1),
-                         "recall_at_10": round(recall_at_k(ids, tids), 4)}
+                         "recall_at_10": round(res.recall_vs(tids), 4)}
         rrann[f"sel_{int(sel * 100):02d}"] = row
     report["exp1_rrann"] = rrann
 
     # planner microbenchmark (acceptance: >= 10x over the seed scalar loop)
     report["planner"] = {k_: (round(v, 4) if isinstance(v, float) else v)
-                         for k_, v in planner_microbench(idx).items()}
+                         for k_, v in planner_microbench(idx, mask=mask).items()}
 
     # kernel bench (interpret mode on CPU: correctness-path timing only)
     import jax.numpy as jnp
@@ -130,9 +162,9 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
     qh = np.full(Qn, 60, np.float32)
     dt_ref, _ = time_call(lambda: np.asarray(pairwise_l2_masked_ref(
         jnp.asarray(q), jnp.asarray(c), jnp.asarray(lo), jnp.asarray(hi),
-        jnp.asarray(ql), jnp.asarray(qh), ANY_OVERLAP)))
+        jnp.asarray(ql), jnp.asarray(qh), mask)))
     dt_pal, _ = time_call(lambda: np.asarray(ops.pairwise_l2_masked(
-        q, c, lo, hi, ql, qh, ANY_OVERLAP)))
+        q, c, lo, hi, ql, qh, mask)))
     report["kernel"] = {"pairwise_ref_us": round(dt_ref * 1e6, 1),
                        "pairwise_pallas_interpret_us": round(dt_pal * 1e6, 1)}
 
@@ -140,5 +172,8 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"wrote {out_path}")
+    if history_path:
+        record = append_history(report, history_path)
+        print(f"appended {history_path}: {json.dumps(record, sort_keys=True)}")
     print(json.dumps(report["planner"], indent=2))
     return report

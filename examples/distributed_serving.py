@@ -1,6 +1,6 @@
 """Distributed RRANN serving (deliverable b): corpus sharded over 8 fake
 devices, exact filtered top-k with both merge schedules, plus the batched
-RetrievalServer front end.
+RetrievalServer front end driven by the declarative Predicate API.
 
     PYTHONPATH=src python examples/distributed_serving.py
 """
@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.core import ANY_OVERLAP, MSTGIndex, MSTGSearcher
+from repro.core import (IndexSpec, MSTGIndex, Overlaps, QueryEngine,
+                        SearchRequest)
 from repro.distributed import sharded_flat_topk
 from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
 from repro.serving import RetrievalServer
@@ -25,33 +26,38 @@ from repro.serving import RetrievalServer
 
 def main():
     ds = make_range_dataset(n=4096, d=32, n_queries=32, quantize=128, seed=0)
-    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.1, seed=1)
+    pred = Overlaps()
+    qlo, qhi = make_queries(ds, pred.mask, 0.1, seed=1)
     tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                 qlo, qhi, ANY_OVERLAP, 10)
+                                 qlo, qhi, pred.mask, 10)
     mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
     print(f"mesh: {mesh.shape}; corpus {ds.n} sharded 8-way")
     for merge in ("all_gather", "tournament"):
         args = (mesh, jnp.asarray(ds.vectors), jnp.asarray(ds.lo, jnp.float32),
                 jnp.asarray(ds.hi, jnp.float32), jnp.asarray(ds.queries),
                 jnp.asarray(qlo, jnp.float32), jnp.asarray(qhi, jnp.float32))
-        ids, d = sharded_flat_topk(*args, mask=ANY_OVERLAP, k=10, merge=merge)
+        ids, d = sharded_flat_topk(*args, mask=pred.mask, k=10, merge=merge)
         t0 = time.time()
-        ids, d = sharded_flat_topk(*args, mask=ANY_OVERLAP, k=10, merge=merge)
+        ids, d = sharded_flat_topk(*args, mask=pred.mask, k=10, merge=merge)
         dt = time.time() - t0
         r = recall_at_k(np.asarray(ids), tids)
         print(f"  merge={merge:11s} recall@10={r:.3f} "
               f"({len(qlo)/dt:.0f} qps on 8 shards)")
 
-    # batched serving front end on a single-host MSTG (graph engine)
-    idx = MSTGIndex(ds.vectors[:1500], ds.lo[:1500], ds.hi[:1500],
-                    variants=("T", "Tp"), m=12, ef_con=64)
-    server = RetrievalServer(MSTGSearcher(idx), lambda i: ds.queries[i], k=10)
+    # batched serving front end on a single-host MSTG engine: requests carry
+    # Predicate objects, the whole tick is embedded in one stacked call
+    idx = MSTGIndex.build(IndexSpec(predicate=pred, m=12, ef_con=64),
+                          ds.vectors[:1500], ds.lo[:1500], ds.hi[:1500])
+    server = RetrievalServer(QueryEngine(idx),
+                             embed_fn=lambda items: ds.queries[np.asarray(items)],
+                             k=10)
     for i in range(16):
-        server.submit(i, qlo[i], qhi[i], ANY_OVERLAP)
+        server.submit(i, qlo[i], qhi[i], pred)
     t0 = time.time()
     res = server.tick()
     print(f"  retrieval server: {len(res)} requests in "
-          f"{(time.time()-t0)*1e3:.0f} ms")
+          f"{(time.time()-t0)*1e3:.0f} ms "
+          f"(hit0 valid={int(res[0].valid.sum())}/{len(res[0].ids)})")
 
 
 if __name__ == "__main__":

@@ -1,43 +1,66 @@
-"""Quickstart: build an MSTG index, run all three search engines, check recall.
+"""Quickstart: the declarative RRANN API end to end — build an index from an
+IndexSpec, search with Predicate + SearchRequest on all three engines, then
+save/load the index and verify the serving artifact is bit-identical.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, MSTGIndex, MSTGSearcher,
-                        FlatSearcher, intervals as iv)
-from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
+from repro.core import (IndexSpec, LeftOverlap, MSTGIndex, Overlaps,
+                        QueryContained, QueryEngine, RightOverlap,
+                        SearchRequest)
+from repro.data import make_range_dataset, make_queries, brute_force_topk
 
 
 def main():
     # 1. a corpus of (vector, [lo, hi]) objects — e.g. products with price ranges
     ds = make_range_dataset(n=2000, d=32, n_queries=16, quantize=128, seed=0)
 
-    # 2. build the paper's index (variants cover any RR predicate disjunction)
+    # 2. declare what the index must serve; build derives the MSTG variants
+    spec = IndexSpec(predicate=Overlaps(), m=12, ef_con=64)
     t0 = time.time()
-    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp", "Tpp"),
-                    m=12, ef_con=64)
+    idx = MSTGIndex.build(spec, ds.vectors, ds.lo, ds.hi)
     print(f"built MSTG over n={ds.n} in {time.time()-t0:.1f}s "
-          f"({idx.index_bytes()/1e6:.1f} MB, |A|={idx.domain.K})")
+          f"({idx.index_bytes()/1e6:.1f} MB, |A|={idx.domain.K}, "
+          f"variants={sorted(idx.variants)})")
+    eng = QueryEngine(idx)
 
-    # 3. query: vectors + range + any RR predicate
-    for mask, nm in ((ANY_OVERLAP, "overlap (1|2|3|4)"),
-                     (QUERY_CONTAINED, "query-contained (2)"),
-                     (iv.LEFT_OVERLAP | iv.RIGHT_OVERLAP, "ends-overlap (1|3)")):
-        qlo, qhi = make_queries(ds, mask, 0.10, seed=3)
+    # 3. query: vectors + ranges + any predicate disjunction
+    for pred, nm in ((Overlaps(), "overlap (1|2|3|4)"),
+                     (QueryContained(), "query-contained (2)"),
+                     (LeftOverlap() | RightOverlap(), "ends-overlap (1|3)")):
+        qlo, qhi = make_queries(ds, pred.mask, 0.10, seed=3)
         tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                   qlo, qhi, mask, 10)
-        gs = MSTGSearcher(idx)
-        ids, dists = gs.search(ds.queries, qlo, qhi, mask, k=10, ef=64)
-        fs = FlatSearcher(idx)
-        fids, _ = fs.search_pruned(ds.queries, qlo, qhi, mask, k=10)
-        print(f"  {nm:24s} graph recall@10 = {recall_at_k(ids, tids):.3f}   "
-              f"pruned-exact recall@10 = {recall_at_k(fids, tids):.3f}")
+                                   qlo, qhi, pred.mask, 10)
+        graph = eng.search(SearchRequest(ds.queries, (qlo, qhi), pred,
+                                         k=10, ef=64, route="graph"))
+        pruned = eng.search(SearchRequest(ds.queries, (qlo, qhi), pred,
+                                          k=10, route="pruned"))
+        print(f"  {nm:24s} graph recall@10 = {graph.recall_vs(tids):.3f}   "
+              f"pruned-exact recall@10 = {pruned.recall_vs(tids):.3f}   "
+              f"slots={graph.report.slot_count}")
+
+    # 4. persist once, serve from the artifact (no rebuild)
+    with tempfile.TemporaryDirectory() as td:
+        path = idx.save(os.path.join(td, "mstg_index"))
+        print(f"saved -> {os.path.basename(path)} "
+              f"({os.path.getsize(path)/1e6:.1f} MB)")
+        served = QueryEngine(MSTGIndex.load(path))
+        qlo, qhi = make_queries(ds, Overlaps().mask, 0.10, seed=3)
+        req = SearchRequest(ds.queries, (qlo, qhi), Overlaps(), k=10)
+        a, b = eng.search(req), served.search(req)
+        same = (np.array_equal(a.ids, b.ids)
+                and np.array_equal(a.dists, b.dists))
+        print(f"loaded index bit-identical results: {same} "
+              f"(route={b.report.route}, "
+              f"mean est selectivity={b.report.mean_selectivity:.3f})")
 
 
 if __name__ == "__main__":

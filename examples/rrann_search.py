@@ -1,6 +1,7 @@
-"""RRANN end to end: every predicate family the paper supports, including the
-RFANN / IFANN / TSANN specializations (paper Table 1) and the Allen disjoint
-relations (Appendix A), against brute-force ground truth.
+"""RRANN end to end on the declarative API: every predicate family the paper
+supports — the atomic cases, disjunctions, the RFANN / IFANN / TSANN
+specializations (paper Table 1), and the Allen disjoint relations
+(Appendix A) — against brute-force ground truth.
 
     PYTHONPATH=src python examples/rrann_search.py
 """
@@ -10,58 +11,64 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import MSTGIndex, QueryEngine, intervals as iv
-from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
+from repro.core import (After, Before, ContainedBy, Contains, IndexSpec,
+                        LeftOverlap, MSTGIndex, Overlaps, QueryContained,
+                        QueryContaining, QueryEngine, RightOverlap,
+                        SearchRequest, intervals as iv)
+from repro.data import make_range_dataset, make_queries, brute_force_topk
 
 
 def main():
     ds = make_range_dataset(n=1500, d=32, n_queries=12, quantize=64, seed=1)
-    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp", "Tpp"),
-                    m=12, ef_con=64)
-    gs = QueryEngine(idx)  # auto-routes graph vs exact-pruned by selectivity
+    idx = MSTGIndex.build(IndexSpec(variants=("T", "Tp", "Tpp"), m=12,
+                                    ef_con=64), ds.vectors, ds.lo, ds.hi)
+    eng = QueryEngine(idx)  # auto-routes graph vs exact-pruned by selectivity
 
     cases = [
-        ("1 query-left-overlap", iv.LEFT_OVERLAP),
-        ("2 query-contained   ", iv.QUERY_CONTAINED),
-        ("3 query-right-overlap", iv.RIGHT_OVERLAP),
-        ("4 query-containing  ", iv.QUERY_CONTAINING),
-        ("1|2|3|4 any-overlap ", iv.ANY_OVERLAP),
-        ("2|4 containment-both", iv.QUERY_CONTAINED | iv.QUERY_CONTAINING),
-        ("< strictly-before   ", iv.BEFORE),
-        ("> strictly-after    ", iv.AFTER),
+        ("1 query-left-overlap", LeftOverlap()),
+        ("2 query-contained   ", QueryContained()),
+        ("3 query-right-overlap", RightOverlap()),
+        ("4 query-containing  ", QueryContaining()),
+        ("1|2|3|4 any-overlap ", Overlaps()),
+        ("2|4 containment-both", Contains() | ContainedBy()),
+        ("< strictly-before   ", Before()),
+        ("> strictly-after    ", After()),
     ]
-    for nm, mask in cases:
-        qlo, qhi = make_queries(ds, mask, 0.12, seed=5)
+    for nm, pred in cases:
+        qlo, qhi = make_queries(ds, pred.mask, 0.12, seed=5)
         tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                   qlo, qhi, mask, 10)
-        plan = idx.plan(mask, float(qlo[0]), float(qhi[0]))
-        route = gs.route_for(mask, qlo, qhi)
-        ids, _ = gs.search(ds.queries, qlo, qhi, mask, k=10, ef=64)
-        print(f"{nm}  searches={len(plan)}  route={route:<6}  "
-              f"recall@10={recall_at_k(ids, tids):.3f}")
+                                   qlo, qhi, pred.mask, 10)
+        res = eng.search(SearchRequest(ds.queries, (qlo, qhi), pred,
+                                       k=10, ef=64))
+        rep = res.report
+        print(f"{nm}  searches={rep.slot_count}  route={rep.route:<6}  "
+              f"recall@10={res.recall_vs(tids):.3f}")
 
     # table-1 specializations
     print("\nspecializations:")
     attr = (ds.lo + ds.hi) / 2
-    rf = MSTGIndex(ds.vectors, attr, attr, variants=("Tpp",), m=12, ef_con=64)
+    rf_idx = MSTGIndex.build(IndexSpec(predicate=iv.RFANN_MASK, m=12,
+                                       ef_con=64), ds.vectors, attr, attr)
     qlo = np.quantile(attr, 0.2) * np.ones(12)
     qhi = np.quantile(attr, 0.5) * np.ones(12)
     tids, _ = brute_force_topk(ds.vectors, attr, attr, ds.queries, qlo, qhi,
                                iv.RFANN_MASK, 10)
-    ids, _ = QueryEngine(rf).search(ds.queries, qlo, qhi, iv.RFANN_MASK,
-                                    k=10, ef=64)
-    print(f"  RFANN recall@10 = {recall_at_k(ids, tids):.3f}")
+    res = QueryEngine(rf_idx).search(SearchRequest(
+        ds.queries, (qlo, qhi), iv.RFANN_MASK, k=10, ef=64))
+    print(f"  RFANN recall@10 = {res.recall_vs(tids):.3f}")
     t = float(np.median(attr))
     qlo = np.full(12, t); qhi = np.full(12, t)
     tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi,
                                iv.TSANN_MASK, 10)
-    ids, _ = gs.search(ds.queries, qlo, qhi, iv.TSANN_MASK, k=10, ef=64)
-    print(f"  TSANN recall@10 = {recall_at_k(ids, tids):.3f}")
+    res = eng.search(SearchRequest(ds.queries, (qlo, qhi), iv.TSANN_MASK,
+                                   k=10, ef=64))
+    print(f"  TSANN recall@10 = {res.recall_vs(tids):.3f}")
     qlo, qhi = make_queries(ds, iv.IFANN_MASK, 0.15, seed=7)
     tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi,
                                iv.IFANN_MASK, 10)
-    ids, _ = gs.search(ds.queries, qlo, qhi, iv.IFANN_MASK, k=10, ef=64)
-    print(f"  IFANN recall@10 = {recall_at_k(ids, tids):.3f}")
+    res = eng.search(SearchRequest(ds.queries, (qlo, qhi), iv.IFANN_MASK,
+                                   k=10, ef=64))
+    print(f"  IFANN recall@10 = {res.recall_vs(tids):.3f}")
 
 
 if __name__ == "__main__":

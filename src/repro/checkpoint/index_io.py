@@ -1,0 +1,51 @@
+"""Single-file atomic ``.npz`` persistence for frozen index artifacts.
+
+Same durability conventions as :mod:`repro.checkpoint.checkpointer` (write to
+``<path>.tmp``, fsync, rename — a torn write never shadows a previous file),
+but for the MSTG serving artifact: one ``.npz`` holding every array plus a
+JSON metadata blob under the reserved key ``__meta__``. Kept free of any
+``repro.core`` import so the core index can depend on it without a cycle.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Tuple
+
+import numpy as np
+
+META_KEY = "__meta__"
+
+
+def save_npz_atomic(path: str, arrays: Dict[str, np.ndarray], meta: dict) -> str:
+    """Atomically write ``arrays`` + ``meta`` to one uncompressed ``.npz``."""
+    if META_KEY in arrays:
+        raise ValueError(f"array key {META_KEY!r} is reserved for metadata")
+    path = os.fspath(path)
+    if not path.endswith(".npz"):
+        path += ".npz"
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    tmp = path + ".tmp"
+    payload = dict(arrays)
+    payload[META_KEY] = np.frombuffer(
+        json.dumps(meta, sort_keys=True).encode("utf-8"), dtype=np.uint8)
+    with open(tmp, "wb") as f:
+        np.savez(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)  # atomic publish
+    return path
+
+
+def load_npz(path: str) -> Tuple[Dict[str, np.ndarray], dict]:
+    """Load a :func:`save_npz_atomic` file -> (arrays, meta)."""
+    path = os.fspath(path)
+    if not os.path.exists(path) and os.path.exists(path + ".npz"):
+        path += ".npz"
+    with np.load(path, allow_pickle=False) as z:
+        if META_KEY not in z.files:
+            raise ValueError(f"{path} is not an index artifact (no {META_KEY})")
+        meta = json.loads(bytes(z[META_KEY]).decode("utf-8"))
+        arrays = {k: z[k] for k in z.files if k != META_KEY}
+    return arrays, meta

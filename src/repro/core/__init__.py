@@ -1,11 +1,50 @@
-"""MSTG core — the paper's contribution (RRANN index + search engines)."""
+"""MSTG core — the paper's contribution (RRANN index + search engines).
+
+Public surface (the declarative API is the supported entry point):
+
+* predicate algebra  — :mod:`repro.core.predicates` (``Overlaps() | Before()``)
+* typed requests     — :class:`SearchRequest` -> :class:`SearchResult` with
+  :class:`RouteReport` diagnostics (:mod:`repro.core.api`)
+* index lifecycle    — :class:`IndexSpec`, ``MSTGIndex.build/save/load``
+* execution          — :class:`QueryEngine` (auto-routed graph / pruned / flat)
+
+``MSTGSearcher``/``FlatSearcher`` and raw int masks remain as deprecated
+shims for the tuple-era API.
+"""
 from . import intervals, segment_tree
 from .intervals import (LEFT_OVERLAP, QUERY_CONTAINED, RIGHT_OVERLAP,
                         QUERY_CONTAINING, BEFORE, AFTER, ANY_OVERLAP,
                         RFANN_MASK, IFANN_MASK, TSANN_MASK,
                         AttributeDomain, SearchTask, PlanSlot, plan_searches,
-                        plan_batch_ranked, eval_predicate)
+                        plan_batch_ranked, eval_predicate, mask_name,
+                        parse_mask)
+from .predicates import (Predicate, LeftOverlap, RightOverlap, QueryContained,
+                         QueryContaining, Contains, ContainedBy, Overlaps,
+                         Before, After, as_predicate, as_mask)
+from .api import (IndexSpec, QueryHit, RouteReport, SearchRequest,
+                  SearchResult)
 from .mstg import MSTGIndex, FrozenVariant, build_variant
 from .search import mstg_graph_search, merge_topk
 from .flat import flat_search
 from .engine import QueryEngine, MSTGSearcher, FlatSearcher
+
+__all__ = [
+    # predicate algebra
+    "Predicate", "LeftOverlap", "RightOverlap", "QueryContained",
+    "QueryContaining", "Contains", "ContainedBy", "Overlaps", "Before",
+    "After", "as_predicate", "as_mask",
+    # typed request/result surface
+    "SearchRequest", "SearchResult", "QueryHit", "RouteReport", "IndexSpec",
+    # index + engines
+    "MSTGIndex", "QueryEngine", "FrozenVariant", "build_variant",
+    "AttributeDomain", "mstg_graph_search", "merge_topk", "flat_search",
+    # planner internals
+    "SearchTask", "PlanSlot", "plan_searches", "plan_batch_ranked",
+    "eval_predicate", "mask_name", "parse_mask",
+    # legacy bitmask constants + shims
+    "LEFT_OVERLAP", "QUERY_CONTAINED", "RIGHT_OVERLAP", "QUERY_CONTAINING",
+    "BEFORE", "AFTER", "ANY_OVERLAP", "RFANN_MASK", "IFANN_MASK", "TSANN_MASK",
+    "MSTGSearcher", "FlatSearcher",
+    # submodules
+    "intervals", "segment_tree",
+]

@@ -1,0 +1,230 @@
+"""Typed request/result surface for RRANN search (the declarative API layer).
+
+``SearchRequest`` bundles everything one filtered top-k batch needs — query
+vectors, query ranges, a :class:`repro.core.predicates.Predicate` — and
+normalizes shapes/dtypes once at the boundary so engines never re-validate.
+``SearchResult`` replaces the bare ``(ids, dists)`` tuple: it knows which
+slots are real hits (``valid_mask``), iterates per query as
+:class:`QueryHit` records, computes recall against a reference, and carries a
+:class:`RouteReport` describing what the engine actually did (chosen route,
+estimated selectivity, plan slots, selectivity-cache traffic).
+
+``IndexSpec`` is the build-time counterpart: a frozen config a process can
+hand to :meth:`repro.core.mstg.MSTGIndex.build` and that travels inside the
+saved ``.npz`` so a loaded index knows how it was made.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, NamedTuple, Optional, Tuple, Union
+
+import numpy as np
+
+from .predicates import Predicate, as_predicate
+
+
+class QueryHit(NamedTuple):
+    """One query's top-k: ids padded with ``NO_EDGE`` (< 0), dists with +inf.
+
+    A NamedTuple, so it unpacks as the legacy ``(ids, dists)`` pair; use
+    ``n_valid`` for the real-hit count (``len()`` keeps tuple semantics)."""
+
+    ids: np.ndarray
+    dists: np.ndarray
+
+    @property
+    def valid(self) -> np.ndarray:
+        return self.ids >= 0
+
+    @property
+    def n_valid(self) -> int:
+        return int((self.ids >= 0).sum())
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SearchRequest:
+    """A filtered top-k batch: vectors + query ranges + a predicate.
+
+    ``ranges`` accepts either a ``(Q, 2)`` array (or nested list) of
+    ``[qlo, qhi]`` rows, or a 2-**tuple** ``(qlo, qhi)`` of ``(Q,)`` arrays —
+    the pair form must be a tuple so a two-row list of ranges is never
+    misread as a pair. ``predicate`` accepts a :class:`Predicate`, a raw int
+    mask, or a parseable string. Everything is normalized (float32 vectors,
+    float64 ranges) at construction.
+    """
+
+    vectors: np.ndarray
+    ranges: np.ndarray
+    predicate: Predicate
+    k: int = 10
+    ef: int = 64
+    route: Optional[str] = None
+    max_steps: Optional[int] = None
+    fanout: int = 1
+
+    def __post_init__(self):
+        vecs = np.ascontiguousarray(self.vectors, dtype=np.float32)
+        if vecs.ndim != 2:
+            raise ValueError(f"vectors must be (Q, d), got shape {vecs.shape}")
+        rng = self.ranges
+        if isinstance(rng, tuple) and len(rng) == 2:
+            rng = np.stack([np.asarray(rng[0], np.float64).ravel(),
+                            np.asarray(rng[1], np.float64).ravel()], axis=1)
+        else:
+            rng = np.asarray(rng, dtype=np.float64)
+        if rng.ndim != 2 or rng.shape[1] != 2:
+            raise ValueError(f"ranges must be (Q, 2), got shape {rng.shape}")
+        if rng.shape[0] != vecs.shape[0]:
+            raise ValueError(f"{vecs.shape[0]} vectors but {rng.shape[0]} ranges")
+        if np.any(rng[:, 0] > rng[:, 1]):
+            raise ValueError("query ranges must satisfy qlo <= qhi")
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
+        if self.ef < 1:
+            raise ValueError("ef must be >= 1")
+        object.__setattr__(self, "vectors", vecs)
+        object.__setattr__(self, "ranges", rng)
+        object.__setattr__(self, "predicate", as_predicate(self.predicate))
+
+    def __len__(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def qlo(self) -> np.ndarray:
+        return self.ranges[:, 0]
+
+    @property
+    def qhi(self) -> np.ndarray:
+        return self.ranges[:, 1]
+
+    @property
+    def mask(self) -> int:
+        return self.predicate.mask
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RouteReport:
+    """What the engine did with one request (diagnostics, not results).
+
+    route            : executed route ("graph" | "pruned" | "flat"); an
+                       empty (Q=0) request executes nothing and mirrors the
+                       requested value here (possibly "auto")
+    requested        : what the caller asked for (may be "auto")
+    est_selectivity  : (Q,) estimated predicate selectivity, when the auto
+                       router evaluated it (None for pinned routes)
+    slot_count       : number of Theorem 4.1 plan slots executed
+    variants         : MSTG variant of each slot, in execution order
+    cache_hits/misses: selectivity-cache traffic caused by this request
+    """
+
+    route: str
+    requested: str
+    est_selectivity: Optional[np.ndarray]
+    slot_count: int
+    variants: Tuple[str, ...]
+    cache_hits: int = 0
+    cache_misses: int = 0
+
+    @property
+    def mean_selectivity(self) -> Optional[float]:
+        if self.est_selectivity is None or self.est_selectivity.size == 0:
+            return None
+        return float(np.mean(self.est_selectivity))
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SearchResult:
+    """Filtered top-k results: ``(Q, k)`` ids (< 0 = empty slot) and squared
+    distances (+inf = empty slot), plus the engine's :class:`RouteReport`."""
+
+    ids: np.ndarray
+    dists: np.ndarray
+    report: Optional[RouteReport] = None
+
+    def __post_init__(self):
+        ids = np.asarray(self.ids)
+        dists = np.asarray(self.dists)
+        if ids.shape != dists.shape or ids.ndim != 2:
+            raise ValueError(f"ids {ids.shape} and dists {dists.shape} must be "
+                             "equal (Q, k) shapes")
+        object.__setattr__(self, "ids", ids)
+        object.__setattr__(self, "dists", dists)
+
+    # ---- shape / iteration ----
+    def __len__(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.ids.shape[1]
+
+    def __iter__(self) -> Iterator[QueryHit]:
+        for qi in range(self.ids.shape[0]):
+            yield QueryHit(self.ids[qi], self.dists[qi])
+
+    def __getitem__(self, qi) -> Union[QueryHit, "SearchResult"]:
+        if isinstance(qi, (int, np.integer)):
+            return QueryHit(self.ids[qi], self.dists[qi])
+        return SearchResult(self.ids[qi], self.dists[qi], self.report)
+
+    # ---- invariants / interop ----
+    @property
+    def valid_mask(self) -> np.ndarray:
+        """(Q, k) bool: which result slots hold a real neighbor."""
+        return self.ids >= 0
+
+    def astuple(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The legacy ``(ids, dists)`` pair (for tuple-era call sites)."""
+        return self.ids, self.dists
+
+    def recall_vs(self, reference) -> float:
+        """Recall@k against ``reference`` — a :class:`SearchResult` or a
+        ``(Q, k')`` id array (e.g. brute-force ground truth): |found ∩ true|
+        / |true| over queries with non-empty truth (the
+        :func:`repro.data.recall_at_k` metric, to which this delegates)."""
+        # deferred: repro.data imports repro.core at module import time
+        from repro.data.datasets import recall_at_k
+        true_ids = reference.ids if isinstance(reference, SearchResult) \
+            else np.asarray(reference)
+        if true_ids.shape[0] != self.ids.shape[0]:
+            raise ValueError("reference has a different number of queries")
+        return recall_at_k(self.ids, true_ids)
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Build configuration for :class:`repro.core.mstg.MSTGIndex`.
+
+    ``predicate`` decides which MSTG variants get built when ``variants`` is
+    None (via ``Predicate.variants_required``); the graph hyper-parameters
+    mirror the paper's (M, efConstruction, entry count). The spec is stored
+    on the index and persisted by ``save()``.
+    """
+
+    predicate: Predicate = None
+    variants: Optional[Tuple[str, ...]] = None
+    m: int = 16
+    ef_con: int = 100
+    m_max: Optional[int] = None
+    n_entries: int = 4
+
+    def __post_init__(self):
+        from . import intervals as iv
+        pred = self.predicate if self.predicate is not None else iv.ANY_OVERLAP
+        object.__setattr__(self, "predicate", as_predicate(pred))
+        if self.variants is not None:
+            object.__setattr__(self, "variants", tuple(self.variants))
+
+    def to_dict(self) -> dict:
+        return {"predicate": self.predicate.mask,
+                "variants": list(self.variants) if self.variants else None,
+                "m": self.m, "ef_con": self.ef_con, "m_max": self.m_max,
+                "n_entries": self.n_entries}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IndexSpec":
+        variants = d.get("variants")
+        return cls(predicate=Predicate(d["predicate"]),
+                   variants=tuple(variants) if variants else None,
+                   m=d["m"], ef_con=d["ef_con"], m_max=d["m_max"],
+                   n_entries=d["n_entries"])

@@ -1,6 +1,12 @@
 """QueryEngine — the unified execution facade over a built MSTG index.
 
-One object owns everything a query batch needs:
+The canonical entry point is the declarative one::
+
+    result = engine.search(SearchRequest(vectors, (qlo, qhi),
+                                         Overlaps() | Before(), k=10))
+    result.ids, result.dists, result.valid_mask, result.report
+
+One object owns everything a request needs:
 
 * **device staging** — graph arrays (:class:`repro.core.search.DeviceVariant`)
   and the pruned-scan member arrays are staged exactly once and shared by
@@ -10,28 +16,37 @@ One object owns everything a query batch needs:
   executed on its variant, and slot results are merged with
   :func:`repro.core.search.merge_topk`;
 * **routing** — ``route="auto"`` estimates predicate selectivity from a fixed
-  corpus sample and sends low-selectivity batches to the exact pruned scan
-  (work ∝ selectivity, recall 1.0) and everything else to the TPU beam search;
+  corpus sample (memoized per ``(mask, rank-quantized query range)`` so
+  repeated serving traffic never re-evaluates the sample predicate) and sends
+  low-selectivity batches to the exact pruned scan (work ∝ selectivity,
+  recall 1.0) and everything else to the TPU beam search;
 * **jit-cache reuse** — query batches are padded up to power-of-two buckets so
   a serving process sees one trace per (mask, route, k, ef, bucket) instead of
   one per distinct batch size; padded queries carry empty tasks and cost no
   search steps.
 
-``MSTGSearcher`` (the historical graph-path API) is a thin wrapper kept for
-compatibility; new code should use :class:`QueryEngine` directly.
+Every execution returns a :class:`repro.core.api.SearchResult` whose
+:class:`repro.core.api.RouteReport` records the chosen route, estimated
+selectivity, plan slots, and selectivity-cache traffic. The tuple-era
+positional call ``search(queries, qlo, qhi, mask)`` and the
+``MSTGSearcher``/``FlatSearcher`` wrappers still work but are deprecated
+shims over this surface.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import warnings
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 import jax.numpy as jnp
 
 from . import intervals as iv
+from .api import RouteReport, SearchRequest, SearchResult
 from .flat import _pruned_search_variant, flat_search
 from .hnsw import NO_EDGE
 from .mstg import MSTGIndex
+from .predicates import as_mask
 from .search import DeviceVariant, merge_topk, mstg_graph_search
 
 ROUTE_AUTO = "auto"
@@ -74,7 +89,8 @@ class QueryEngine:
 
     def __init__(self, index: MSTGIndex, use_kernel: bool = False,
                  route: str = ROUTE_AUTO, flat_threshold: float = 0.05,
-                 selectivity_sample: int = 2048, pad_queries: bool = True):
+                 selectivity_sample: int = 2048, pad_queries: bool = True,
+                 sel_cache_max: int = 65536):
         if route not in _ROUTES:
             raise ValueError(f"route must be one of {_ROUTES}, got {route!r}")
         self.index = index
@@ -100,6 +116,13 @@ class QueryEngine:
         self._sample_hi = np.asarray(index.hi)[sel]
         self.route_counts: Dict[str, int] = {ROUTE_GRAPH: 0, ROUTE_PRUNED: 0,
                                              ROUTE_FLAT: 0}
+        # selectivity memo: (mask, fl, cl, fr, cr) -> sample fraction. The
+        # rank signature determines the sample predicate exactly (sample
+        # endpoints are domain values), so this is quantization, not change.
+        self._sel_cache: Dict[tuple, float] = {}
+        self._sel_cache_max = int(sel_cache_max)
+        self.sel_cache_hits = 0
+        self.sel_cache_misses = 0
 
     # ---- device staging (lazy, cached per variant) ----
     def graph_dev(self, variant: str) -> DeviceVariant:
@@ -126,62 +149,147 @@ class QueryEngine:
 
     # ---- planning / routing ----
     def plan(self, mask: int, qlo: np.ndarray, qhi: np.ndarray) -> List[iv.PlanSlot]:
-        return self.index.plan_batch(mask, qlo, qhi)
+        return self.index.plan_batch(as_mask(mask), qlo, qhi)
 
-    def estimate_selectivity(self, mask: int, qlo, qhi) -> np.ndarray:
+    def estimate_selectivity(self, mask, qlo, qhi) -> np.ndarray:
         """(Q,) estimated fraction of the corpus each query's predicate keeps
         (exact when the sample covers the corpus)."""
-        ql = np.asarray(qlo, np.float64)[:, None]
-        qh = np.asarray(qhi, np.float64)[:, None]
-        hit = iv.eval_predicate(mask, self._sample_lo[None, :],
-                                self._sample_hi[None, :], ql, qh)
-        return np.asarray(hit, np.float64).mean(axis=1)
+        return self._estimate_cached(as_mask(mask), qlo, qhi)[0]
 
-    def route_for(self, mask: int, qlo, qhi, route: Optional[str] = None) -> str:
+    def _estimate_cached(self, mask: int, qlo, qhi) -> Tuple[np.ndarray, int, int]:
+        """Memoized selectivity estimate -> (est (Q,), hits, misses).
+
+        Queries are keyed by their exact rank signature (floor/ceil ranks of
+        both endpoints): two float ranges with the same signature select the
+        same sample objects, so repeated serving traffic is answered from the
+        dict instead of re-evaluating the sample predicate."""
+        ql = np.asarray(qlo, np.float64)
+        qh = np.asarray(qhi, np.float64)
+        dom = self.index.domain
+        fl, cl = dom.floor_rank(ql), dom.ceil_rank(ql)
+        fr, cr = dom.floor_rank(qh), dom.ceil_rank(qh)
+        Q = ql.shape[0]
+        out = np.empty(Q, np.float64)
+        miss: List[int] = []
+        hits = 0
+        for i in range(Q):
+            v = self._sel_cache.get((mask, fl[i], cl[i], fr[i], cr[i]))
+            if v is None:
+                miss.append(i)
+            else:
+                out[i] = v
+                hits += 1
+        if miss:
+            mi = np.asarray(miss)
+            hit = iv.eval_predicate(mask, self._sample_lo[None, :],
+                                    self._sample_hi[None, :],
+                                    ql[mi][:, None], qh[mi][:, None])
+            est = np.asarray(hit, np.float64).mean(axis=1)
+            if len(self._sel_cache) + len(miss) > self._sel_cache_max:
+                self._sel_cache.clear()
+            for j, i in enumerate(miss):
+                v = float(est[j])
+                self._sel_cache[(mask, fl[i], cl[i], fr[i], cr[i])] = v
+                out[i] = v
+        self.sel_cache_hits += hits
+        self.sel_cache_misses += len(miss)
+        return out, hits, len(miss)
+
+    def _auto_route(self, est: np.ndarray) -> str:
+        """The one auto-routing rule shared by route_for() and execute()."""
+        return (ROUTE_PRUNED if float(est.mean()) <= self.flat_threshold
+                else ROUTE_GRAPH)
+
+    def route_for(self, mask, qlo, qhi, route: Optional[str] = None) -> str:
         route = route or self.default_route
         if route != ROUTE_AUTO:
             return route
-        est = self.estimate_selectivity(mask, qlo, qhi)
-        return ROUTE_PRUNED if float(est.mean()) <= self.flat_threshold else ROUTE_GRAPH
+        return self._auto_route(self.estimate_selectivity(mask, qlo, qhi))
 
     # ---- execution ----
-    def search(self, queries: np.ndarray, qlo: np.ndarray, qhi: np.ndarray,
-               mask: int, k: int = 10, ef: int = 64,
-               max_steps: Optional[int] = None, fanout: int = 1,
-               route: Optional[str] = None) -> Tuple[np.ndarray, np.ndarray]:
-        """Filtered top-k for a query batch: (Q, k) ids (NO_EDGE pad) and
-        squared distances (+inf pad)."""
-        queries = np.ascontiguousarray(queries, np.float32)
-        qlo = np.asarray(qlo, np.float64)
-        qhi = np.asarray(qhi, np.float64)
-        Q = queries.shape[0]
+    def search(self, request: Union[SearchRequest, np.ndarray],
+               qlo: Optional[np.ndarray] = None,
+               qhi: Optional[np.ndarray] = None, mask: Optional[int] = None,
+               k: int = 10, ef: int = 64, max_steps: Optional[int] = None,
+               fanout: int = 1, route: Optional[str] = None):
+        """Execute a :class:`repro.core.api.SearchRequest` ->
+        :class:`repro.core.api.SearchResult`.
+
+        The tuple-era positional form ``search(queries, qlo, qhi, mask, ...)``
+        still works — it returns the bare ``(ids, dists)`` pair — but is
+        deprecated; build a ``SearchRequest`` instead.
+        """
+        if isinstance(request, SearchRequest):
+            if (qlo is not None or qhi is not None or mask is not None
+                    or k != 10 or ef != 64 or max_steps is not None
+                    or fanout != 1 or route is not None):
+                raise TypeError(
+                    "options must be set on the SearchRequest itself; "
+                    "extra search() arguments would be silently ignored")
+            return self.execute(request)
+        warnings.warn(
+            "QueryEngine.search(queries, qlo, qhi, mask) is deprecated; pass "
+            "a repro.core.SearchRequest (returns a SearchResult)",
+            DeprecationWarning, stacklevel=2)
+        if qlo is None or qhi is None or mask is None:
+            raise TypeError("legacy QueryEngine.search() requires queries, "
+                            "qlo, qhi, and mask")
+        req = SearchRequest(request, (qlo, qhi), mask, k=k, ef=ef, route=route,
+                            max_steps=max_steps, fanout=fanout)
+        return self.execute(req).astuple()
+
+    def execute(self, request: SearchRequest) -> SearchResult:
+        """Plan, route, and run one request; always returns a SearchResult."""
+        queries, qlo, qhi = request.vectors, request.qlo, request.qhi
+        mask, k = request.mask, request.k
+        Q = len(request)
+        requested = request.route or self.default_route
+        if requested not in _ROUTES:
+            raise ValueError(f"route must be one of {_ROUTES}, got {requested!r}")
+        est = None
+        hits = misses = 0
+        route = requested
+        if requested == ROUTE_AUTO and Q:
+            est, hits, misses = self._estimate_cached(mask, qlo, qhi)
+            route = self._auto_route(est)
         if Q == 0:
-            return _empty_result(0, k)
-        route = self.route_for(mask, qlo, qhi, route)
+            ids, d = _empty_result(0, k)
+            return SearchResult(ids, d, RouteReport(
+                route=route, requested=requested, est_selectivity=est,
+                slot_count=0, variants=()))
         self.route_counts[route] = self.route_counts.get(route, 0) + 1
+        slots = (self.plan(mask, qlo, qhi) if route in (ROUTE_GRAPH,
+                                                        ROUTE_PRUNED) else [])
         if route == ROUTE_FLAT:
             ids, d = self._run_flat(queries, qlo, qhi, mask, k)
         elif route == ROUTE_PRUNED:
-            ids, d = self._run_pruned(queries, qlo, qhi, mask, k)
+            ids, d = self._run_pruned(queries, qlo, qhi, mask, k, slots=slots)
         elif route == ROUTE_GRAPH:
-            ids, d = self._run_graph(queries, qlo, qhi, mask, k, ef,
-                                     max_steps, fanout)
+            ids, d = self._run_graph(queries, qlo, qhi, mask, k, request.ef,
+                                     request.max_steps, request.fanout,
+                                     slots=slots)
         else:
             raise ValueError(f"unknown route {route!r}")
-        return np.asarray(ids[:Q]), np.asarray(d[:Q])
+        report = RouteReport(route=route, requested=requested,
+                             est_selectivity=est, slot_count=len(slots),
+                             variants=tuple(s.variant for s in slots),
+                             cache_hits=hits, cache_misses=misses)
+        return SearchResult(np.asarray(ids[:Q]), np.asarray(d[:Q]), report)
 
-    # Convenience fixed-route entry points.
+    # Convenience fixed-route entry points (legacy tuple returns).
     def search_graph(self, queries, qlo, qhi, mask, k=10, ef=64,
                      max_steps=None, fanout=1):
-        return self.search(queries, qlo, qhi, mask, k=k, ef=ef,
-                           max_steps=max_steps, fanout=fanout,
-                           route=ROUTE_GRAPH)
+        req = SearchRequest(queries, (qlo, qhi), mask, k=k, ef=ef,
+                            max_steps=max_steps, fanout=fanout,
+                            route=ROUTE_GRAPH)
+        return self.execute(req).astuple()
 
     def search_pruned(self, queries, qlo, qhi, mask, k=10, block: int = 256,
                       max_candidates: Optional[int] = None):
         queries = np.ascontiguousarray(queries, np.float32)
         qlo = np.asarray(qlo, np.float64)
         qhi = np.asarray(qhi, np.float64)
+        mask = as_mask(mask)
         Q = queries.shape[0]
         if Q == 0:
             return _empty_result(0, k)
@@ -191,7 +299,8 @@ class QueryEngine:
         return np.asarray(ids[:Q]), np.asarray(d[:Q])
 
     def search_flat(self, queries, qlo, qhi, mask, k=10):
-        return self.search(queries, qlo, qhi, mask, k=k, route=ROUTE_FLAT)
+        req = SearchRequest(queries, (qlo, qhi), mask, k=k, route=ROUTE_FLAT)
+        return self.execute(req).astuple()
 
     # ---- internals ----
     def _padded(self, queries: np.ndarray, qlo: np.ndarray, qhi: np.ndarray):
@@ -227,8 +336,10 @@ class QueryEngine:
                 np.concatenate([s.key_hi, np.zeros(pad, np.int64)])))
         return out
 
-    def _run_graph(self, queries, qlo, qhi, mask, k, ef, max_steps, fanout):
-        slots = self.plan(mask, qlo, qhi)
+    def _run_graph(self, queries, qlo, qhi, mask, k, ef, max_steps, fanout,
+                   slots: Optional[List[iv.PlanSlot]] = None):
+        if slots is None:
+            slots = self.plan(mask, qlo, qhi)
         queries_p, _, _ = self._padded(queries, qlo, qhi)
         slots = self._padded_slots(slots, queries_p.shape[0])
         steps = max_steps or ((4 * ef + 64) // max(fanout, 1) + 8)
@@ -248,8 +359,10 @@ class QueryEngine:
         return res
 
     def _run_pruned(self, queries, qlo, qhi, mask, k, block: int = 256,
-                    max_candidates: Optional[int] = None):
-        slots = self.plan(mask, qlo, qhi)
+                    max_candidates: Optional[int] = None,
+                    slots: Optional[List[iv.PlanSlot]] = None):
+        if slots is None:
+            slots = self.plan(mask, qlo, qhi)
         n = self.index.vectors.shape[0]
         queries_p, qlo_p, qhi_p = self._padded(queries, qlo, qhi)
         slots = self._padded_slots(slots, queries_p.shape[0])
@@ -292,11 +405,15 @@ class QueryEngine:
 
 
 class MSTGSearcher:
-    """Compatibility wrapper: the historical graph-path API, now a fixed-route
-    view over :class:`QueryEngine`."""
+    """Deprecated compatibility wrapper: the historical tuple-returning
+    graph-path API, now a fixed-route view over :class:`QueryEngine`. New
+    code should call ``QueryEngine.search(SearchRequest(...))``."""
 
     def __init__(self, index: MSTGIndex, use_kernel: bool = False,
                  engine: Optional[QueryEngine] = None):
+        warnings.warn("MSTGSearcher is deprecated; use QueryEngine with a "
+                      "SearchRequest(route='graph')", DeprecationWarning,
+                      stacklevel=2)
         self.index = index
         self.use_kernel = use_kernel
         self.engine = engine or QueryEngine(index, use_kernel=use_kernel,
@@ -310,11 +427,16 @@ class MSTGSearcher:
 
 
 class FlatSearcher:
-    """Compatibility wrapper: the exact engines (full brute force + tree-pruned
-    scan) as a fixed-route view over :class:`QueryEngine`."""
+    """Deprecated compatibility wrapper: the tuple-returning exact engines
+    (full brute force + tree-pruned scan) as a fixed-route view over
+    :class:`QueryEngine`. New code should call
+    ``QueryEngine.search(SearchRequest(route='flat'|'pruned'))``."""
 
     def __init__(self, index: MSTGIndex, use_kernel: bool = False,
                  engine: Optional[QueryEngine] = None):
+        warnings.warn("FlatSearcher is deprecated; use QueryEngine with a "
+                      "SearchRequest(route='flat') or route='pruned'",
+                      DeprecationWarning, stacklevel=2)
         self.index = index
         self.use_kernel = use_kernel
         self.engine = engine or QueryEngine(index, use_kernel=use_kernel,

@@ -49,6 +49,68 @@ def mask_name(mask: int) -> str:
     return "|".join(parts) if parts else "none"
 
 
+# Token vocabulary for :func:`parse_mask`. Single digits follow the paper's
+# case numbering (so "4" is case ④ = QUERY_CONTAINING, not raw bit 4);
+# multi-digit tokens are raw integer masks.
+_MASK_TOKENS = {
+    "1": LEFT_OVERLAP, "left_overlap": LEFT_OVERLAP,
+    "2": QUERY_CONTAINED, "query_contained": QUERY_CONTAINED,
+    "contains": QUERY_CONTAINED,
+    "3": RIGHT_OVERLAP, "right_overlap": RIGHT_OVERLAP,
+    "4": QUERY_CONTAINING, "query_containing": QUERY_CONTAINING,
+    "contained_by": QUERY_CONTAINING, "containedby": QUERY_CONTAINING,
+    "<": BEFORE, "before": BEFORE,
+    ">": AFTER, "after": AFTER,
+    "any_overlap": ANY_OVERLAP, "overlap": ANY_OVERLAP, "overlaps": ANY_OVERLAP,
+    "rfann": RFANN_MASK, "ifann": IFANN_MASK, "tsann": TSANN_MASK,
+    "none": 0,
+}
+
+FULL_MASK = ANY_OVERLAP | BEFORE | AFTER
+
+
+def parse_mask(text) -> int:
+    """Inverse of :func:`mask_name`: parse ``"1|2|<"``, ``"any_overlap"``,
+    ``"before,after"``, a raw integer mask (``"15"`` or an int), or any
+    ``|``/``,``/``+``/whitespace-separated mix of those tokens.
+
+    Caution: in *strings*, the single digits ``"1"``–``"4"`` are the paper's
+    case numbers (``"4"`` -> QUERY_CONTAINING, bit 8) so that ``mask_name``
+    output round-trips; only multi-digit string tokens (``"15"``) and actual
+    ints are raw bitmasks — ``parse_mask("3") != parse_mask(3)``."""
+    if isinstance(text, (int, np.integer)):
+        mask = int(text)
+        if not 0 <= mask <= FULL_MASK:
+            raise ValueError(f"mask {mask} outside [0, {FULL_MASK}]")
+        return mask
+    if not isinstance(text, str):
+        raise TypeError(f"predicate mask must be an int or str, got "
+                        f"{type(text).__name__}")
+    s = text.strip().lower()
+    if not s:
+        raise ValueError("empty predicate mask string")
+    mask = 0
+    for tok in (t for t in _split_mask_tokens(s) if t):
+        if tok in _MASK_TOKENS:
+            mask |= _MASK_TOKENS[tok]
+        elif tok.isdigit():
+            val = int(tok)
+            if not 0 <= val <= FULL_MASK:
+                raise ValueError(f"mask {val} outside [0, {FULL_MASK}]")
+            mask |= val
+        else:
+            raise ValueError(
+                f"unknown predicate token {tok!r} "
+                f"(known: {sorted(_MASK_TOKENS)} or an integer mask)")
+    return mask
+
+
+def _split_mask_tokens(s: str) -> List[str]:
+    for sep in (",", "+", " ", "\t"):
+        s = s.replace(sep, "|")
+    return [t.strip() for t in s.split("|")]
+
+
 def eval_predicate(mask, lo, hi, ql, qh):
     """Vectorized truth of the RR predicate. Works for numpy or jax arrays.
 

@@ -29,9 +29,19 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.checkpoint import index_io
+
 from . import intervals as iv
 from . import segment_tree as st
+from .api import IndexSpec
 from .hnsw import OPEN, NO_EDGE, LabeledLevelGraph
+from .predicates import Predicate, as_mask
+
+# FrozenVariant array fields, in the order they are persisted.
+_FV_ARRAYS = ("sort_rank", "tkey", "nbr", "lab_b", "lab_e",
+              "entry_ids", "entry_ver", "members", "member_ver", "node_off")
+_INDEX_FORMAT = "mstg-index"
+_INDEX_FORMAT_VERSION = 1
 
 
 @dataclasses.dataclass
@@ -146,6 +156,7 @@ class MSTGIndex:
         vectors = np.ascontiguousarray(vectors, dtype=np.float32)
         lo = np.asarray(lo, dtype=np.float64)
         hi = np.asarray(hi, dtype=np.float64)
+        mask = as_mask(mask)  # Predicate | int | str, like every other entry
         if np.any(lo > hi):
             raise ValueError("object ranges must satisfy lo <= hi")
         self.vectors = vectors
@@ -156,6 +167,9 @@ class MSTGIndex:
         self.params = dict(m=m, ef_con=ef_con, m_max=m_max, n_entries=n_entries)
         if variants is None:
             variants = iv.variants_required(mask if mask else iv.ANY_OVERLAP)
+        self.spec = IndexSpec(predicate=Predicate(mask), variants=tuple(variants),
+                              m=m, ef_con=ef_con, m_max=m_max,
+                              n_entries=n_entries)
         self.build_seconds: Dict[str, float] = {}
         self.variants: Dict[str, FrozenVariant] = {}
         for v in variants:
@@ -164,6 +178,64 @@ class MSTGIndex:
                 vectors, self.rl, self.rr, self.domain.K, v, m=m, ef_con=ef_con,
                 m_max=m_max, n_entries=n_entries, progress=progress)
             self.build_seconds[v] = time.time() - t0
+
+    # ---- lifecycle ----
+    @classmethod
+    def build(cls, spec: IndexSpec, vectors: np.ndarray, lo: np.ndarray,
+              hi: np.ndarray, domain: Optional[iv.AttributeDomain] = None,
+              progress: Optional[int] = None) -> "MSTGIndex":
+        """Declarative construction from an :class:`repro.core.api.IndexSpec`:
+        the spec's predicate decides which variants are built (unless pinned),
+        and the spec travels with the index through ``save()``/``load()``."""
+        return cls(vectors, lo, hi, mask=spec.predicate.mask,
+                   variants=spec.variants, m=spec.m, ef_con=spec.ef_con,
+                   m_max=spec.m_max, n_entries=spec.n_entries,
+                   domain=domain, progress=progress)
+
+    def save(self, path: str) -> str:
+        """Persist the whole serving artifact — corpus, ranges, attribute
+        domain, every :class:`FrozenVariant` array, spec — to one atomic
+        ``.npz`` (conventions of :mod:`repro.checkpoint.index_io`), so a
+        serving process can :meth:`load` instead of rebuilding."""
+        arrays = {"vectors": self.vectors,
+                  "lo": self.lo, "hi": self.hi,
+                  "domain_values": self.domain.values}
+        meta = {"format": _INDEX_FORMAT, "format_version": _INDEX_FORMAT_VERSION,
+                "spec": self.spec.to_dict(), "params": self.params,
+                "build_seconds": {k: float(v) for k, v in
+                                  self.build_seconds.items()},
+                "variants": {}}
+        for name, fv in self.variants.items():
+            meta["variants"][name] = {"K": fv.K, "Kpad": fv.Kpad,
+                                      "Lv": fv.Lv, "n": fv.n}
+            for field in _FV_ARRAYS:
+                arrays[f"{name}.{field}"] = getattr(fv, field)
+        return index_io.save_npz_atomic(path, arrays, meta)
+
+    @classmethod
+    def load(cls, path: str) -> "MSTGIndex":
+        """Reconstruct a saved index without rebuilding: search results are
+        bit-identical to the freshly built index the file came from."""
+        arrays, meta = index_io.load_npz(path)
+        if meta.get("format") != _INDEX_FORMAT:
+            raise ValueError(f"{path}: not a {_INDEX_FORMAT} artifact")
+        self = cls.__new__(cls)
+        self.vectors = np.ascontiguousarray(arrays["vectors"], np.float32)
+        self.lo = np.asarray(arrays["lo"], np.float64)
+        self.hi = np.asarray(arrays["hi"], np.float64)
+        self.domain = iv.AttributeDomain(arrays["domain_values"])
+        self.rl = self.domain.rank(self.lo)
+        self.rr = self.domain.rank(self.hi)
+        self.params = dict(meta["params"])
+        self.spec = IndexSpec.from_dict(meta["spec"])
+        self.build_seconds = dict(meta.get("build_seconds", {}))
+        self.variants = {}
+        for name, scal in meta["variants"].items():
+            self.variants[name] = FrozenVariant(
+                variant=name, K=int(scal["K"]), Kpad=int(scal["Kpad"]),
+                Lv=int(scal["Lv"]), n=int(scal["n"]),
+                **{f: arrays[f"{name}.{f}"] for f in _FV_ARRAYS})
+        return self
 
     # ---- planning ----
     def plan(self, mask: int, ql: float, qh: float) -> List[iv.SearchTask]:

@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
-from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, MSTGIndex, QueryEngine,
-                        intervals as iv)
+from repro.core import (IndexSpec, MSTGIndex, Overlaps, QueryContained,
+                        QueryEngine)
 from repro.data import make_range_dataset, make_queries
 from repro.models.transformer import LM
 from repro.serving import RetrievalServer, ServeEngine
@@ -36,8 +36,8 @@ def main():
     ds = make_range_dataset(n=args.n, d=args.dim, n_queries=args.requests,
                             quantize=128, seed=0)
     t0 = time.time()
-    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
-                    m=12, ef_con=64)
+    idx = MSTGIndex.build(IndexSpec(variants=("T", "Tp"), m=12, ef_con=64),
+                          ds.vectors, ds.lo, ds.hi)
     qengine = QueryEngine(idx)
     print(f"MSTG built: n={args.n} K={idx.domain.K} "
           f"bytes={idx.index_bytes()/1e6:.1f}MB in {time.time()-t0:.1f}s")
@@ -59,23 +59,23 @@ def main():
     gen = engine.generate(batch, n_new=8, max_len=64)
     print(f"LM generate ok: {gen.tokens.shape} tokens")
 
-    # 3) batched retrieval serving
-    embed_fn = lambda item: ds.queries[item]  # stub embedding: query vectors
+    # 3) batched retrieval serving: Predicate submits, one embed call per tick
+    embed_fn = lambda items: ds.queries[np.asarray(items)]  # stub embedding
     server = RetrievalServer(qengine, embed_fn, k=args.k, ef=64)
-    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=2)
+    qlo, qhi = make_queries(ds, Overlaps().mask, 0.15, seed=2)
     for i in range(args.requests):
-        mask = ANY_OVERLAP if i % 2 == 0 else QUERY_CONTAINED
-        server.submit(i, qlo[i], qhi[i], mask)
+        pred = Overlaps() if i % 2 == 0 else QueryContained()
+        server.submit(i, qlo[i], qhi[i], pred)
     t0 = time.time()
     results = server.tick()
     dt = time.time() - t0
-    ok = sum(1 for ids, _ in results.values() if (ids >= 0).any())
+    ok = sum(1 for hit in results.values() if hit.valid.any())
     print(f"served {len(results)} requests in {dt*1e3:.1f} ms "
           f"({len(results)/dt:.1f} qps); {ok} non-empty; "
-          f"routes={qengine.route_counts}")
+          f"routes={qengine.route_counts}; "
+          f"sel_cache={qengine.sel_cache_hits}h/{qengine.sel_cache_misses}m")
     for i in list(results)[:3]:
-        ids, d = results[i]
-        print(f"  req {i}: top ids {ids[:5].tolist()}")
+        print(f"  req {i}: top ids {results[i].ids[:5].tolist()}")
 
 
 if __name__ == "__main__":

@@ -90,41 +90,84 @@ class ServeEngine:
 
 class RetrievalServer:
     """The paper's serving scenario: requests carry (text -> query vector via
-    the LM's embedding table pooling) + an RR predicate; answers come from the
-    :class:`repro.core.QueryEngine`. Batched: requests are queued and executed
-    per tick, grouped by predicate mask so each group hits one vectorized plan
-    and one jit-cached trace (the engine pads ragged groups to bucket sizes)."""
+    the LM's embedding table pooling) + an RR :class:`repro.core.Predicate`;
+    answers come from the :class:`repro.core.QueryEngine`. Batched: requests
+    are queued, the whole tick's queue is embedded in **one** ``embed_fn``
+    call, then executed grouped by predicate mask so each group hits one
+    vectorized plan and one jit-cached trace (the engine pads ragged groups
+    to bucket sizes). Each answer is a :class:`repro.core.QueryHit`.
+
+    ``embed_fn`` should be batched — called with the list of queued items,
+    returning a ``(B, d)`` array. Legacy per-item embedders (one item -> one
+    ``(d,)`` vector) are auto-detected and looped over as a fallback.
+    """
 
     def __init__(self, engine, embed_fn, k: int = 10, ef: int = 64):
-        # ``engine`` is a QueryEngine (or anything with its .search signature;
-        # the legacy MSTGSearcher wrapper still works).
+        # ``engine`` is a QueryEngine (or anything with its legacy positional
+        # .search signature; the deprecated MSTGSearcher wrapper still works).
         self.engine = engine
         self.embed_fn = embed_fn
         self.k = k
         self.ef = ef
         self.queue: List[Tuple[Any, float, float, int]] = []
+        self._embed_batched: Optional[bool] = None  # decided on first tick
 
     @classmethod
     def from_index(cls, index, embed_fn, k: int = 10, ef: int = 64, **engine_kw):
         from repro.core import QueryEngine
         return cls(QueryEngine(index, **engine_kw), embed_fn, k=k, ef=ef)
 
-    def submit(self, item, qlo: float, qhi: float, mask: int):
-        self.queue.append((item, qlo, qhi, mask))
+    def submit(self, item, qlo: float, qhi: float, predicate):
+        """Queue one request; ``predicate`` is a repro.core Predicate, a raw
+        int mask, or a parseable string like ``"any_overlap"``."""
+        from repro.core import as_mask
+        self.queue.append((item, float(qlo), float(qhi), as_mask(predicate)))
+
+    def _embed(self, items: List[Any]) -> np.ndarray:
+        """One stacked embedding call for the whole tick (per-item fallback).
+
+        The batched-vs-per-item probe runs exactly once, on the first tick:
+        a signature/shape error there demotes to the per-item path for the
+        server's lifetime (a batched-only embedder must not raise on its
+        first batch). After an embedder has proven batched, every exception
+        propagates — a transient failure never latches the fallback."""
+        if self._embed_batched:
+            return np.ascontiguousarray(np.asarray(self.embed_fn(items)),
+                                        np.float32)
+        if self._embed_batched is None:
+            try:
+                vecs = np.asarray(self.embed_fn(items))
+                if vecs.ndim == 2 and vecs.shape[0] == len(items):
+                    self._embed_batched = True
+                    return np.ascontiguousarray(vecs, np.float32)
+            except (TypeError, ValueError, IndexError, KeyError,
+                    AttributeError):
+                pass  # per-item embedder given a list — fall back below
+            self._embed_batched = False
+        return np.stack([np.asarray(self.embed_fn(it), np.float32)
+                         for it in items])
 
     def tick(self):
-        """Execute all queued requests, grouped by predicate mask."""
+        """Execute all queued requests -> {submit order index: QueryHit}."""
+        from repro.core import QueryEngine, QueryHit, SearchRequest
+        if not self.queue:
+            return {}
+        vecs = self._embed([req[0] for req in self.queue])
         results = {}
         by_mask: Dict[int, List[int]] = {}
         for i, (_, _, _, mask) in enumerate(self.queue):
             by_mask.setdefault(mask, []).append(i)
         for mask, idxs in by_mask.items():
-            vecs = np.stack([self.embed_fn(self.queue[i][0]) for i in idxs])
             qlo = np.array([self.queue[i][1] for i in idxs])
             qhi = np.array([self.queue[i][2] for i in idxs])
-            ids, d = self.engine.search(vecs, qlo, qhi, mask, k=self.k,
-                                        ef=self.ef)
+            if isinstance(self.engine, QueryEngine):
+                res = self.engine.execute(SearchRequest(
+                    vecs[idxs], (qlo, qhi), mask, k=self.k, ef=self.ef))
+                ids, d = res.ids, res.dists
+            else:  # legacy tuple-API searcher
+                ids, d = self.engine.search(vecs[idxs], qlo, qhi, mask,
+                                            k=self.k, ef=self.ef)
             for j, i in enumerate(idxs):
-                results[i] = (ids[j], d[j])
+                results[i] = QueryHit(ids[j], d[j])
         self.queue.clear()
         return results

@@ -1,0 +1,244 @@
+"""Declarative API: predicate algebra <-> mask round-trips (all 63 masks),
+SearchRequest/SearchResult invariants, RouteReport + selectivity cache,
+IndexSpec build, and the save()/load() -> bit-identical-results e2e."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (After, Before, ContainedBy, Contains, IndexSpec,
+                        LeftOverlap, MSTGIndex, Overlaps, Predicate,
+                        QueryContained, QueryContaining, QueryEngine,
+                        QueryHit, RightOverlap, SearchRequest, SearchResult,
+                        as_mask, as_predicate, intervals as iv, parse_mask)
+from repro.core import predicates as preds
+from repro.data import make_queries, brute_force_topk
+
+
+# ---- predicate algebra <-> mask round-trips ----
+
+def test_predicate_mask_roundtrip_all_63_masks():
+    ns = {k: getattr(preds, k) for k in preds.__all__}
+    for m in range(64):
+        p = Predicate.from_mask(m)
+        assert p.mask == m
+        # name round-trip through the planner spelling
+        assert parse_mask(iv.mask_name(m)) == m
+        assert Predicate.parse(iv.mask_name(m)) == p
+        # repr round-trip through the algebra
+        assert eval(repr(p), dict(ns)) == p
+        # planner agreement: algebra-level variants == mask-level variants
+        assert p.variants_required() == iv.variants_required(m)
+
+
+def test_predicate_composition_and_aliases():
+    assert (LeftOverlap() | QueryContained()).mask == 3
+    assert (LeftOverlap() | RightOverlap() | QueryContained()
+            | QueryContaining()) == Overlaps()
+    assert Overlaps().mask == iv.ANY_OVERLAP
+    assert Contains() == QueryContained()
+    assert ContainedBy() == QueryContaining()
+    assert (Before() | After()).mask == iv.BEFORE | iv.AFTER
+    # composition with raw masks and strings
+    assert (LeftOverlap() | iv.QUERY_CONTAINED).mask == 3
+    assert (LeftOverlap() | "2").mask == 3
+    assert iv.BEFORE | After() == Predicate(48)  # __ror__
+    # membership + atoms
+    p = Overlaps() | Before()
+    assert QueryContained() in p and After() not in p
+    assert [a.mask for a in p.atoms()] == [1, 2, 4, 8, 16]
+
+
+def test_predicate_validation_and_helpers():
+    with pytest.raises(ValueError):
+        Predicate(64)
+    with pytest.raises(ValueError):
+        Predicate(-1)
+    assert not Predicate(0) and Overlaps()
+    assert as_mask(Overlaps()) == 15 == as_mask(15) == as_mask("any_overlap")
+    assert as_predicate("1|3") == LeftOverlap() | RightOverlap()
+    lo = np.array([0.0, 5.0])
+    hi = np.array([1.0, 6.0])
+    want = iv.eval_predicate(15, lo, hi, 0.5, 5.5)
+    np.testing.assert_array_equal(Overlaps().evaluate(lo, hi, 0.5, 5.5), want)
+
+
+def test_parse_mask_spellings():
+    assert parse_mask("1|2|<") == 19
+    assert parse_mask("before,after") == 48
+    assert parse_mask("2 + 4") == iv.QUERY_CONTAINED | iv.QUERY_CONTAINING
+    assert parse_mask("contains|contained_by") == 10
+    assert parse_mask(63) == 63
+    assert parse_mask("63") == 63  # multi-digit token = raw mask
+    assert parse_mask("none") == 0
+    assert parse_mask("before after") == 48  # whitespace-separated
+    for bad in ("", "bogus", 64, -1, "99"):
+        with pytest.raises(ValueError):
+            parse_mask(bad)
+    with pytest.raises(TypeError):
+        parse_mask(None)  # must not silently become mask 0
+
+
+# ---- SearchRequest normalization ----
+
+def test_search_request_normalization(small_ds):
+    ds = small_ds
+    qlo = np.zeros(4)
+    qhi = np.ones(4)
+    r1 = SearchRequest(ds.queries[:4], (qlo, qhi), "any_overlap", k=5)
+    r2 = SearchRequest(np.asarray(ds.queries[:4], np.float64),
+                       np.stack([qlo, qhi], axis=1), Overlaps(), k=5)
+    assert r1.vectors.dtype == np.float32 and r1.ranges.shape == (4, 2)
+    np.testing.assert_array_equal(r1.ranges, r2.ranges)
+    assert r1.mask == r2.mask == 15 and len(r1) == 4
+    np.testing.assert_array_equal(r1.qlo, qlo)
+    np.testing.assert_array_equal(r1.qhi, qhi)
+    with pytest.raises(ValueError):
+        SearchRequest(ds.queries[:4], (qlo[:3], qhi[:3]), Overlaps())
+    with pytest.raises(ValueError):
+        SearchRequest(ds.queries[:4], (qhi, qlo), Overlaps())  # inverted
+    with pytest.raises(ValueError):
+        SearchRequest(ds.queries[0], (qlo[:1], qhi[:1]), Overlaps())  # 1-D
+    with pytest.raises(ValueError):
+        SearchRequest(ds.queries[:4], (qlo, qhi), Overlaps(), k=0)
+    # a nested list of [qlo, qhi] ROWS is row-oriented even at Q=2 (only a
+    # 2-tuple is read as the (qlo, qhi) pair form)
+    rows = SearchRequest(ds.queries[:2], [[0.0, 1.0], [2.0, 3.0]], Overlaps())
+    np.testing.assert_array_equal(rows.qlo, [0.0, 2.0])
+    np.testing.assert_array_equal(rows.qhi, [1.0, 3.0])
+
+
+# ---- SearchResult invariants + RouteReport ----
+
+def test_search_result_invariants(small_ds, built_index):
+    ds = small_ds
+    eng = QueryEngine(built_index)
+    qlo, qhi = make_queries(ds, 15, 0.15, seed=3)
+    res = eng.search(SearchRequest(ds.queries, (qlo, qhi), Overlaps(), k=7))
+    assert isinstance(res, SearchResult)
+    assert len(res) == ds.queries.shape[0] and res.k == 7
+    assert res.ids.shape == res.dists.shape == (len(res), 7)
+    np.testing.assert_array_equal(res.valid_mask, res.ids >= 0)
+    # invalid slots carry +inf distances, valid ones finite
+    assert np.isinf(res.dists[~res.valid_mask]).all()
+    assert np.isfinite(res.dists[res.valid_mask]).all()
+    # per-query iteration yields QueryHit records, aligned with __getitem__
+    hits = list(res)
+    assert len(hits) == len(res)
+    assert isinstance(hits[0], QueryHit)
+    np.testing.assert_array_equal(hits[2].ids, res[2].ids)
+    assert res[0].n_valid == int(res.valid_mask[0].sum())
+    assert len(res[0]) == 2  # NamedTuple semantics: (ids, dists)
+    # tuple interop + recall helpers
+    ids, dists = res.astuple()
+    assert ids is res.ids and dists is res.dists
+    assert res.recall_vs(res) == 1.0
+    assert res.recall_vs(res.ids) == 1.0
+    # route/plan diagnostics
+    rep = res.report
+    assert rep.route in ("graph", "pruned") and rep.requested == "auto"
+    assert rep.slot_count == len(rep.variants) >= 1
+    assert rep.est_selectivity.shape == (len(res),)
+    assert 0.0 <= rep.mean_selectivity <= 1.0
+    assert rep.cache_hits + rep.cache_misses == len(res)
+
+
+def test_search_result_shape_validation():
+    with pytest.raises(ValueError):
+        SearchResult(np.zeros((2, 3), np.int32), np.zeros((2, 4), np.float32))
+    r = SearchResult(np.full((2, 3), -1, np.int32),
+                     np.full((2, 3), np.inf, np.float32))
+    assert not r.valid_mask.any() and r.recall_vs(r) == 0.0
+
+
+def test_selectivity_cache_hits(small_ds, built_index):
+    ds = small_ds
+    eng = QueryEngine(built_index)
+    qlo, qhi = make_queries(ds, 15, 0.2, seed=5)
+    est1, h1, m1 = eng._estimate_cached(15, qlo, qhi)
+    assert h1 == 0 and m1 == len(qlo)
+    est2, h2, m2 = eng._estimate_cached(15, qlo, qhi)
+    assert h2 == len(qlo) and m2 == 0
+    np.testing.assert_array_equal(est1, est2)
+    # distinct mask -> distinct cache entries
+    _, h3, m3 = eng._estimate_cached(2, qlo, qhi)
+    assert m3 == len(qlo)
+    assert eng.sel_cache_hits == h2 and eng.sel_cache_misses == m1 + m3
+    # flows into the report on auto-routed repeats
+    req = SearchRequest(ds.queries, (qlo, qhi), Overlaps(), k=5)
+    rep = eng.search(req).report
+    assert rep.cache_hits == len(qlo) and rep.cache_misses == 0
+
+
+# ---- IndexSpec lifecycle ----
+
+def test_index_spec_build(small_ds):
+    ds = small_ds
+    spec = IndexSpec(predicate=QueryContaining(), m=8, ef_con=40)
+    idx = MSTGIndex.build(spec, ds.vectors, ds.lo, ds.hi)
+    assert set(idx.variants) == set(QueryContaining().variants_required())
+    assert idx.spec.predicate == QueryContaining()
+    assert idx.spec.m == 8 and idx.spec.ef_con == 40
+    # round-trip through the persisted dict form
+    assert IndexSpec.from_dict(idx.spec.to_dict()) == idx.spec
+
+
+def test_index_save_load_bit_identical(tmp_path, small_ds, built_index):
+    ds = small_ds
+    path = built_index.save(os.path.join(tmp_path, "idx"))
+    assert path.endswith(".npz") and os.path.exists(path)
+    loaded = MSTGIndex.load(path)
+    assert sorted(loaded.variants) == sorted(built_index.variants)
+    assert loaded.spec == built_index.spec
+    assert loaded.domain.K == built_index.domain.K
+    np.testing.assert_array_equal(loaded.rl, built_index.rl)
+    eng_a = QueryEngine(built_index)
+    eng_b = QueryEngine(loaded)
+    qlo, qhi = make_queries(ds, 15, 0.12, seed=9)
+    for route in ("graph", "pruned", "flat"):
+        req = SearchRequest(ds.queries, (qlo, qhi), Overlaps(), k=10, ef=64,
+                            route=route)
+        a = eng_a.search(req)
+        b = eng_b.search(req)
+        np.testing.assert_array_equal(a.ids, b.ids, err_msg=route)
+        np.testing.assert_array_equal(a.dists, b.dists, err_msg=route)
+        assert b.report.route == route
+
+
+def test_index_load_rejects_non_index(tmp_path):
+    from repro.checkpoint import index_io
+    p = index_io.save_npz_atomic(os.path.join(tmp_path, "other"),
+                                 {"x": np.arange(3)}, {"format": "other"})
+    with pytest.raises(ValueError, match="not a mstg-index"):
+        MSTGIndex.load(p)
+
+
+# ---- legacy shims ----
+
+def test_legacy_tuple_api_still_works(small_ds, built_index):
+    ds = small_ds
+    eng = QueryEngine(built_index)
+    qlo, qhi = make_queries(ds, 15, 0.15, seed=7)
+    with pytest.warns(DeprecationWarning):
+        out = eng.search(ds.queries, qlo, qhi, 15, k=5)
+    assert isinstance(out, tuple)
+    with pytest.warns(DeprecationWarning), pytest.raises(TypeError):
+        eng.search(ds.queries, qlo, qhi)  # forgotten mask must not be mask 0
+    res = eng.search(SearchRequest(ds.queries, (qlo, qhi), 15, k=5))
+    np.testing.assert_array_equal(out[0], res.ids)
+    np.testing.assert_array_equal(out[1], res.dists)
+    with pytest.raises(TypeError, match="on the SearchRequest"):
+        # options alongside a request would be silently ignored — rejected
+        eng.search(SearchRequest(ds.queries, (qlo, qhi), 15), k=100)
+    from repro.core import FlatSearcher, MSTGSearcher
+    with pytest.warns(DeprecationWarning):
+        gs = MSTGSearcher(built_index)
+    ids, d = gs.search(ds.queries, qlo, qhi, 15, k=5)
+    assert ids.shape == (len(qlo), 5)
+    with pytest.warns(DeprecationWarning):
+        fs = FlatSearcher(built_index)
+    fids, fd = fs.search(ds.queries, qlo, qhi, 15, k=5)
+    tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                 qlo, qhi, 15, 5)
+    np.testing.assert_allclose(np.sort(fd, 1), np.sort(tds, 1),
+                               rtol=1e-4, atol=1e-4)

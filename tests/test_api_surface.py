@@ -1,0 +1,36 @@
+"""Fast API-surface smoke check (not-slow CI lane): the declared public
+surface of repro.core imports, __all__ is complete and resolvable, and the
+core request/predicate types construct without touching an index."""
+import numpy as np
+
+
+def test_core_all_resolves():
+    import repro.core as core
+    assert core.__all__, "repro.core must declare __all__"
+    missing = [name for name in core.__all__ if not hasattr(core, name)]
+    assert not missing, f"__all__ names missing from repro.core: {missing}"
+    # star-import view == __all__ (no stale or shadowed exports)
+    ns = {}
+    exec("from repro.core import *", ns)
+    exported = {k for k in ns if not k.startswith("__")}
+    assert exported == set(core.__all__)
+
+
+def test_key_surface_types_construct():
+    from repro.core import (Overlaps, Predicate, IndexSpec, QueryHit,
+                            SearchRequest, SearchResult, parse_mask)
+    req = SearchRequest(np.zeros((2, 4), np.float32),
+                        (np.zeros(2), np.ones(2)), Overlaps(), k=3)
+    assert len(req) == 2 and req.mask == 15
+    res = SearchResult(np.full((2, 3), -1, np.int32),
+                       np.full((2, 3), np.inf, np.float32))
+    assert len(res) == 2 and not res.valid_mask.any()
+    assert isinstance(res[0], QueryHit)
+    assert parse_mask("any_overlap") == Predicate.parse("1|2|3|4").mask
+    assert IndexSpec().predicate == Overlaps()
+
+
+def test_serving_and_checkpoint_surface_imports():
+    from repro.serving import RetrievalServer, ServeEngine  # noqa: F401
+    from repro.checkpoint import index_io
+    assert callable(index_io.save_npz_atomic) and callable(index_io.load_npz)

@@ -5,10 +5,14 @@ import pytest
 from hypothesis import given, settings, strategies as hst
 
 from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, QUERY_CONTAINING,
-                        MSTGIndex, QueryEngine, intervals as iv)
-from repro.core import FlatSearcher
+                        MSTGIndex, Overlaps, QueryEngine, SearchRequest,
+                        intervals as iv)
 from repro.core.engine import ROUTE_GRAPH, ROUTE_PRUNED, _next_pow2
-from repro.data import make_queries, brute_force_topk, recall_at_k
+from repro.data import make_queries, brute_force_topk
+
+
+def _req(queries, qlo, qhi, mask, route=None, **kw):
+    return SearchRequest(queries, (qlo, qhi), mask, route=route, **kw)
 
 
 # ---- plan_batch_ranked vs scalar plan_searches_ranked ----
@@ -66,15 +70,15 @@ def test_plan_batch_rejects_missing_variant(small_ds):
 # ---- QueryEngine ----
 
 def test_engine_graph_matches_flat_ground_truth(small_ds, built_index):
-    """End-to-end: graph path vs flat_search ground truth at high recall."""
+    """End-to-end: graph path vs flat route ground truth at high recall."""
     ds = small_ds
     eng = QueryEngine(built_index)
-    fs = FlatSearcher(built_index)
     for mask in (ANY_OVERLAP, QUERY_CONTAINED, QUERY_CONTAINING):
         qlo, qhi = make_queries(ds, mask, 0.15, seed=31)
-        tids, _ = fs.search(ds.queries, qlo, qhi, mask, k=10)
-        gids, _ = eng.search_graph(ds.queries, qlo, qhi, mask, k=10, ef=96)
-        assert recall_at_k(gids, np.asarray(tids)) >= 0.9, iv.mask_name(mask)
+        truth = eng.search(_req(ds.queries, qlo, qhi, mask, route="flat"))
+        graph = eng.search(_req(ds.queries, qlo, qhi, mask, route="graph",
+                                ef=96))
+        assert graph.recall_vs(truth) >= 0.9, iv.mask_name(mask)
 
 
 def test_engine_routes_agree_and_pruned_is_exact(small_ds, built_index):
@@ -83,12 +87,13 @@ def test_engine_routes_agree_and_pruned_is_exact(small_ds, built_index):
     qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.1, seed=37)
     tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
                                  qlo, qhi, ANY_OVERLAP, 10)
-    pids, pds = eng.search_pruned(ds.queries, qlo, qhi, ANY_OVERLAP, k=10)
-    np.testing.assert_allclose(np.sort(pds, 1), np.sort(tds, 1),
+    pruned = eng.search(_req(ds.queries, qlo, qhi, Overlaps(), route="pruned"))
+    np.testing.assert_allclose(np.sort(pruned.dists, 1), np.sort(tds, 1),
                                rtol=1e-4, atol=1e-4)
-    fids, fds = eng.search_flat(ds.queries, qlo, qhi, ANY_OVERLAP, k=10)
-    np.testing.assert_allclose(np.sort(fds, 1), np.sort(tds, 1),
+    flat = eng.search(_req(ds.queries, qlo, qhi, Overlaps(), route="flat"))
+    np.testing.assert_allclose(np.sort(flat.dists, 1), np.sort(tds, 1),
                                rtol=1e-4, atol=1e-4)
+    assert pruned.report.route == "pruned" and flat.report.route == "flat"
 
 
 def test_engine_auto_routing_by_selectivity(small_ds, built_index):
@@ -116,12 +121,12 @@ def test_engine_padding_is_invisible(small_ds, built_index):
     eng_raw = QueryEngine(built_index, pad_queries=False)
     qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=43)
     for Q in (1, 3, 7):  # all pad up to buckets
-        a_ids, a_d = eng_pad.search(ds.queries[:Q], qlo[:Q], qhi[:Q],
-                                    ANY_OVERLAP, k=10, route=ROUTE_GRAPH)
-        b_ids, b_d = eng_raw.search(ds.queries[:Q], qlo[:Q], qhi[:Q],
-                                    ANY_OVERLAP, k=10, route=ROUTE_GRAPH)
-        assert a_ids.shape == (Q, 10)
-        np.testing.assert_allclose(np.sort(a_d, 1), np.sort(b_d, 1),
+        req = _req(ds.queries[:Q], qlo[:Q], qhi[:Q], Overlaps(),
+                   route=ROUTE_GRAPH)
+        a = eng_pad.search(req)
+        b = eng_raw.search(req)
+        assert a.ids.shape == (Q, 10)
+        np.testing.assert_allclose(np.sort(a.dists, 1), np.sort(b.dists, 1),
                                    rtol=1e-4, atol=1e-4)
 
 
@@ -141,13 +146,16 @@ def test_engine_pruned_exact_despite_bad_estimator(small_ds, built_index):
 
 def test_engine_empty_batch_and_empty_predicate(built_index, small_ds):
     eng = QueryEngine(built_index)
-    ids, d = eng.search(np.zeros((0, small_ds.d), np.float32),
-                        np.zeros(0), np.zeros(0), ANY_OVERLAP, k=5)
-    assert ids.shape == (0, 5) and d.shape == (0, 5)
+    res = eng.search(_req(np.zeros((0, small_ds.d), np.float32),
+                          np.zeros(0), np.zeros(0), ANY_OVERLAP, k=5))
+    assert res.ids.shape == (0, 5) and res.dists.shape == (0, 5)
+    assert len(res) == 0 and list(res) == []
     qlo = np.full(3, -50.0)
     qhi = np.full(3, -40.0)
-    ids, d = eng.search(small_ds.queries[:3], qlo, qhi, QUERY_CONTAINED, k=5)
-    assert (ids < 0).all() and np.isinf(d).all()
+    res = eng.search(_req(small_ds.queries[:3], qlo, qhi, QUERY_CONTAINED,
+                          k=5))
+    assert (res.ids < 0).all() and np.isinf(res.dists).all()
+    assert not res.valid_mask.any()
 
 
 def test_next_pow2():

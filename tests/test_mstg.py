@@ -1,12 +1,13 @@
 """MSTG end-to-end: exactness of flat/pruned engines, recall of the graph
-engine, index accounting, and plan/batch machinery (paper §4, §5)."""
+engine, index accounting, and plan/batch machinery (paper §4, §5), all on the
+declarative SearchRequest surface."""
 import numpy as np
 import pytest
 
 from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, QUERY_CONTAINING,
-                        LEFT_OVERLAP, RIGHT_OVERLAP, MSTGIndex, MSTGSearcher,
-                        FlatSearcher, intervals as iv)
-from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
+                        LEFT_OVERLAP, RIGHT_OVERLAP, QueryEngine,
+                        SearchRequest, intervals as iv)
+from repro.data import make_queries, brute_force_topk
 
 MASKS = [
     ANY_OVERLAP,
@@ -25,69 +26,76 @@ def setup(small_ds, built_index):
     return small_ds, built_index
 
 
+@pytest.fixture(scope="module")
+def engine(built_index):
+    return QueryEngine(built_index)
+
+
+def _search(eng, queries, qlo, qhi, mask, route, k=10, ef=64, fanout=1):
+    return eng.search(SearchRequest(queries, (qlo, qhi), mask, k=k, ef=ef,
+                                    fanout=fanout, route=route))
+
+
 @pytest.mark.parametrize("mask", MASKS, ids=iv.mask_name)
-def test_flat_engines_exact(setup, mask):
+def test_flat_engines_exact(setup, engine, mask):
     ds, idx = setup
     qlo, qhi = make_queries(ds, mask, 0.15, seed=7)
     tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi, mask, 10)
-    fs = FlatSearcher(idx)
-    fids, fds = fs.search(ds.queries, qlo, qhi, mask, k=10)
-    np.testing.assert_allclose(np.sort(fds, axis=1), np.sort(tds, axis=1),
-                               rtol=1e-4, atol=1e-4)
-    pids, pds = fs.search_pruned(ds.queries, qlo, qhi, mask, k=10)
-    np.testing.assert_allclose(np.sort(pds, axis=1), np.sort(tds, axis=1),
-                               rtol=1e-4, atol=1e-4)
+    flat = _search(engine, ds.queries, qlo, qhi, mask, "flat")
+    np.testing.assert_allclose(np.sort(flat.dists, axis=1),
+                               np.sort(tds, axis=1), rtol=1e-4, atol=1e-4)
+    pruned = _search(engine, ds.queries, qlo, qhi, mask, "pruned")
+    np.testing.assert_allclose(np.sort(pruned.dists, axis=1),
+                               np.sort(tds, axis=1), rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("mask", MASKS, ids=iv.mask_name)
-def test_graph_engine_recall(setup, mask):
+def test_graph_engine_recall(setup, engine, mask):
     ds, idx = setup
     qlo, qhi = make_queries(ds, mask, 0.15, seed=11)
     tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi, mask, 10)
-    ss = MSTGSearcher(idx)
-    gids, _ = ss.search(ds.queries, qlo, qhi, mask, k=10, ef=48)
-    assert recall_at_k(gids, tids) >= 0.85, iv.mask_name(mask)
+    res = _search(engine, ds.queries, qlo, qhi, mask, "graph", ef=48)
+    assert res.recall_vs(tids) >= 0.85, iv.mask_name(mask)
 
 
-def test_graph_engine_never_returns_nonqualifying(setup):
+def test_graph_engine_never_returns_nonqualifying(setup, engine):
     """The paper's core guarantee: search traverses only qualifying objects."""
     ds, idx = setup
     for mask in MASKS:
         qlo, qhi = make_queries(ds, mask, 0.1, seed=13)
-        ss = MSTGSearcher(idx)
-        ids, d = ss.search(ds.queries, qlo, qhi, mask, k=10, ef=32)
-        for qi in range(ids.shape[0]):
-            got = ids[qi][ids[qi] >= 0]
+        res = _search(engine, ds.queries, qlo, qhi, mask, "graph", ef=32)
+        for qi, hit in enumerate(res):
+            got = hit.ids[hit.valid]
             sel = np.asarray(iv.eval_predicate(mask, ds.lo[got], ds.hi[got],
                                                qlo[qi], qhi[qi]))
             assert sel.all(), iv.mask_name(mask)
 
 
-def test_recall_improves_with_ef(setup):
+def test_recall_improves_with_ef(setup, engine):
     ds, idx = setup
     mask = ANY_OVERLAP
     qlo, qhi = make_queries(ds, mask, 0.2, seed=17)
     tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries, qlo, qhi, mask, 10)
-    ss = MSTGSearcher(idx)
     recalls = []
     for ef in (12, 32, 96):
-        gids, _ = ss.search(ds.queries, qlo, qhi, mask, k=10, ef=ef)
-        recalls.append(recall_at_k(gids, tids))
+        res = _search(engine, ds.queries, qlo, qhi, mask, "graph", ef=ef)
+        recalls.append(res.recall_vs(tids))
     assert recalls[-1] >= recalls[0]
     assert recalls[-1] >= 0.95
 
 
-def test_empty_predicate_returns_empty(setup):
+def test_empty_predicate_returns_empty(setup, engine):
     ds, idx = setup
     # query range outside any object: QUERY_CONTAINED impossible
     qlo = np.full(4, -50.0)
     qhi = np.full(4, -40.0)
-    ss = MSTGSearcher(idx)
-    ids, d = ss.search(ds.queries[:4], qlo, qhi, QUERY_CONTAINED, k=5, ef=16)
-    assert (ids < 0).all() and np.isinf(d).all()
+    res = _search(engine, ds.queries[:4], qlo, qhi, QUERY_CONTAINED, "graph",
+                  k=5, ef=16)
+    assert (res.ids < 0).all() and np.isinf(res.dists).all()
+    assert not res.valid_mask.any()
 
 
-def test_point_specializations(setup):
+def test_point_specializations(setup, engine):
     """RFANN/TSANN/IFANN are special cases (paper Table 1)."""
     ds, idx = setup
     # TSANN: point query t inside object range
@@ -96,9 +104,9 @@ def test_point_specializations(setup):
     qhi = np.full(8, t)
     tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries[:8],
                                qlo, qhi, iv.TSANN_MASK, 10)
-    ss = MSTGSearcher(idx)
-    gids, _ = ss.search(ds.queries[:8], qlo, qhi, iv.TSANN_MASK, k=10, ef=48)
-    assert recall_at_k(gids, tids) >= 0.85
+    res = _search(engine, ds.queries[:8], qlo, qhi, iv.TSANN_MASK, "graph",
+                  ef=48)
+    assert res.recall_vs(tids) >= 0.85
 
 
 def test_index_accounting(built_index):
@@ -138,20 +146,19 @@ def test_blocked_flat_matches_full(setup):
 
 
 @pytest.mark.parametrize("fanout", [2, 4])
-def test_graph_engine_fanout_recall(setup, fanout):
+def test_graph_engine_fanout_recall(setup, engine, fanout):
     """§Perf iteration 3: multi-expansion keeps (or improves) recall."""
     ds, idx = setup
     qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=29)
     tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
                                qlo, qhi, ANY_OVERLAP, 10)
-    ss = MSTGSearcher(idx)
-    base, _ = ss.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=10, ef=48)
-    fast, _ = ss.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=10, ef=48,
-                        fanout=fanout)
-    assert recall_at_k(fast, tids) >= recall_at_k(base, tids) - 0.05
+    base = _search(engine, ds.queries, qlo, qhi, ANY_OVERLAP, "graph", ef=48)
+    fast = _search(engine, ds.queries, qlo, qhi, ANY_OVERLAP, "graph", ef=48,
+                   fanout=fanout)
+    assert fast.recall_vs(tids) >= base.recall_vs(tids) - 0.05
     # fanout results still satisfy the predicate
-    for qi in range(fast.shape[0]):
-        got = fast[qi][fast[qi] >= 0]
+    for qi, hit in enumerate(fast):
+        got = hit.ids[hit.valid]
         sel = np.asarray(iv.eval_predicate(ANY_OVERLAP, ds.lo[got], ds.hi[got],
                                            qlo[qi], qhi[qi]))
         assert sel.all()

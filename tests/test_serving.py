@@ -6,8 +6,9 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import ANY_OVERLAP, MSTGIndex, MSTGSearcher
-from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
+from repro.core import (ANY_OVERLAP, MSTGSearcher, Overlaps, QueryEngine,
+                        QueryHit)
+from repro.data import make_queries, brute_force_topk, recall_at_k
 from repro.models.transformer import LM
 from repro.serving import RetrievalServer, ServeEngine
 
@@ -48,15 +49,50 @@ def test_generate_matches_teacher_forcing():
 
 
 def test_retrieval_server_batches_by_mask(small_ds, built_index):
+    """Declarative path: Predicate submit, one stacked embed call per tick."""
     ds = small_ds
-    searcher = MSTGSearcher(built_index)
-    server = RetrievalServer(searcher, embed_fn=lambda i: ds.queries[i], k=10)
+    embed_calls = []
+
+    def embed(items):  # batched: list of item keys -> (B, d)
+        embed_calls.append(list(items))
+        return ds.queries[np.asarray(items)]
+
+    server = RetrievalServer(QueryEngine(built_index), embed_fn=embed, k=10)
     qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=4)
     for i in range(8):
-        server.submit(i, qlo[i], qhi[i], ANY_OVERLAP)
+        # mixed predicate spellings all land in the same mask group
+        server.submit(i, qlo[i], qhi[i],
+                      Overlaps() if i % 2 else "any_overlap")
     res = server.tick()
     assert len(res) == 8 and not server.queue
+    assert len(embed_calls) == 1 and embed_calls[0] == list(range(8))
+    assert all(isinstance(h, QueryHit) for h in res.values())
     tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries[:8],
                                qlo[:8], qhi[:8], ANY_OVERLAP, 10)
-    found = np.stack([res[i][0] for i in range(8)])
+    found = np.stack([res[i][0] for i in range(8)])  # QueryHit[0] == ids
+    assert recall_at_k(found, tids) >= 0.8
+    assert server.tick() == {}  # empty tick is a no-op
+
+
+def test_retrieval_server_legacy_searcher_and_per_item_embed(small_ds,
+                                                             built_index):
+    """Tuple-era path: MSTGSearcher engine + per-item embed_fn fallback."""
+    ds = small_ds
+
+    def embed_one(i):  # legacy per-item embedder (scalar item -> (d,))
+        if isinstance(i, list):
+            raise TypeError("not batched")
+        return ds.queries[i]
+
+    with pytest.warns(DeprecationWarning):
+        searcher = MSTGSearcher(built_index)
+    server = RetrievalServer(searcher, embed_fn=embed_one, k=10)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=4)
+    for i in range(4):
+        server.submit(i, qlo[i], qhi[i], ANY_OVERLAP)
+    res = server.tick()
+    assert len(res) == 4 and server._embed_batched is False
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries[:4],
+                               qlo[:4], qhi[:4], ANY_OVERLAP, 10)
+    found = np.stack([res[i].ids for i in range(4)])
     assert recall_at_k(found, tids) >= 0.8
