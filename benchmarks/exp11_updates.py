@@ -1,0 +1,176 @@
+"""Exp. 11: streaming updates — insert/delete/query interleave on the
+segmented MSTG.
+
+Measures what the static experiments cannot: update throughput (upserts +
+deletes into the delta buffer, ops/sec), flush/compact cost, query service
+during churn, and **update_recall** — recall of the streamed index
+(segments + tombstones + unflushed delta) after a 10% insert / 5% delete
+churn, with a from-scratch static ``MSTGIndex.build`` over the post-churn
+corpus as the reference (the EMA-style deployability question: does serving
+a live corpus cost recall?).
+
+``--smoke`` runs a small fixed configuration, prints a JSON report, and
+exits non-zero if ``update_recall`` drops below 0.95 — the CI gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (ANY_OVERLAP, IndexSpec, MSTGIndex, QueryEngine,
+                        SearchRequest)
+from repro.data import (RangeDataset, brute_force_topk, make_queries,
+                        make_range_dataset, recall_at_k)
+from repro.streaming import SegmentedIndex
+
+from .common import K, QUICK, emit
+
+RECALL_GATE = 0.95
+
+
+def run_churn(n: int = 800, d: int = 32, n_queries: int = 16, k: int = K,
+              insert_frac: float = 0.10, delete_frac: float = 0.05,
+              selectivity: float = 0.05, batch: int = 32, seed: int = 0,
+              spec: IndexSpec = None, engine_kwargs: dict = None) -> dict:
+    """Bulk-load -> flush -> churn (interleaved upserts/deletes) -> measure.
+
+    Returns a flat dict of metrics; ``update_recall`` is the streamed
+    index's recall@k against the static rebuild's results on the identical
+    post-churn corpus (1.0 = updates cost nothing vs a full rebuild)."""
+    spec = spec or IndexSpec(variants=("T", "Tp"), m=12, ef_con=64)
+    engine_kwargs = engine_kwargs or {}
+    ds = make_range_dataset(n=n, d=d, n_queries=n_queries, quantize=64,
+                            dist="uniform", seed=seed)
+    fresh = make_range_dataset(n=max(int(n * insert_frac), 1), d=d,
+                               n_queries=1, quantize=64, dist="uniform",
+                               seed=seed + 1)
+    corpus = {int(i): (ds.vectors[i], float(ds.lo[i]), float(ds.hi[i]))
+              for i in range(n)}
+
+    sidx = SegmentedIndex(spec, engine_kwargs=engine_kwargs)
+    t0 = time.perf_counter()
+    half = n // 2
+    sidx.add(np.arange(half), ds.vectors[:half], ds.lo[:half], ds.hi[:half])
+    sidx.flush()
+    sidx.add(np.arange(half, n), ds.vectors[half:], ds.lo[half:], ds.hi[half:])
+    sidx.flush()
+    bulk_seconds = time.perf_counter() - t0
+
+    # interleaved churn: batches of upserts with deletes mixed in
+    rng = np.random.default_rng(seed + 2)
+    ins_ids = np.arange(n, n + fresh.n)
+    del_ids = rng.choice(n, size=max(int(n * delete_frac), 1), replace=False)
+    n_ops = 0
+    t0 = time.perf_counter()
+    di = 0
+    for s in range(0, fresh.n, batch):
+        e = min(s + batch, fresh.n)
+        sidx.add(ins_ids[s:e], fresh.vectors[s:e], fresh.lo[s:e], fresh.hi[s:e])
+        n_ops += e - s
+        de = min(di + max(batch // 2, 1), len(del_ids))
+        if de > di:
+            sidx.delete(del_ids[di:de])
+            n_ops += de - di
+            di = de
+    if di < len(del_ids):
+        sidx.delete(del_ids[di:])
+        n_ops += len(del_ids) - di
+    churn_seconds = time.perf_counter() - t0
+    for i, e in enumerate(ins_ids):
+        corpus[int(e)] = (fresh.vectors[i], float(fresh.lo[i]),
+                          float(fresh.hi[i]))
+    for e in del_ids:
+        corpus.pop(int(e))
+
+    # post-churn live corpus, canonical (ext-id) order
+    live = np.array(sorted(corpus), np.int64)
+    vecs = np.stack([corpus[int(e)][0] for e in live])
+    lo = np.array([corpus[int(e)][1] for e in live])
+    hi = np.array([corpus[int(e)][2] for e in live])
+    post = RangeDataset(vectors=vecs, lo=lo, hi=hi, queries=ds.queries,
+                        span=ds.span)
+    qlo, qhi = make_queries(post, ANY_OVERLAP, selectivity, seed=seed + 3)
+    tids, _ = brute_force_topk(vecs, lo, hi, post.queries, qlo, qhi,
+                               ANY_OVERLAP, k)
+    truth_ext = np.where(tids >= 0, live[np.clip(tids, 0, None)], -1)
+
+    req = SearchRequest(post.queries, (qlo, qhi), ANY_OVERLAP, k=k, ef=96)
+    res = sidx.search(req)          # streamed: 2 segments + tombs + delta
+    t0 = time.perf_counter()
+    sidx.search(req)
+    q_seconds = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    static = MSTGIndex.build(spec, vecs, lo, hi)
+    rebuild_seconds = time.perf_counter() - t0
+    seng = QueryEngine(static, **engine_kwargs)
+    sres = seng.search(req)
+    static_ext = np.where(sres.ids >= 0, live[np.clip(sres.ids, 0, None)], -1)
+
+    streamed_recall = recall_at_k(res.ids, truth_ext)
+    static_recall = recall_at_k(static_ext, truth_ext)
+    update_recall = recall_at_k(res.ids, static_ext)
+
+    t0 = time.perf_counter()
+    sidx.flush()
+    comp = sidx.compact(full=True)
+    compact_seconds = time.perf_counter() - t0
+    return {
+        "n": n, "d": d, "k": k, "n_queries": n_queries,
+        "inserted": int(fresh.n), "deleted": int(len(del_ids)),
+        "bulk_load_seconds": round(bulk_seconds, 4),
+        "update_ops_per_sec": round(n_ops / churn_seconds, 1),
+        "query_qps_streamed": round(n_queries / q_seconds, 1),
+        "update_recall": round(update_recall, 4),
+        "streamed_recall_at_k": round(streamed_recall, 4),
+        "static_recall_at_k": round(static_recall, 4),
+        "static_rebuild_seconds": round(rebuild_seconds, 4),
+        "compact_seconds": round(compact_seconds, 4),
+        "compacted_rows": comp["rows"], "dropped_tombstones": comp["dropped"],
+    }
+
+
+def run():
+    """CSV lane (benchmarks.run): one churn pass at bench scale."""
+    r = run_churn(n=600 if QUICK else 1500, d=32, n_queries=16)
+    emit("exp11/updates", 1e6 / max(r["update_ops_per_sec"], 1e-9),
+         f"ops/sec={r['update_ops_per_sec']};"
+         f"update_recall={r['update_recall']};"
+         f"streamed_recall={r['streamed_recall_at_k']};"
+         f"rebuild_s={r['static_rebuild_seconds']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fixed config; JSON report; exit 1 if "
+                         f"update_recall < {RECALL_GATE}")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="also write the JSON report to PATH")
+    args = ap.parse_args()
+    if args.smoke:
+        report = run_churn(n=400, d=24, n_queries=12,
+                           spec=IndexSpec(variants=("T", "Tp"), m=8,
+                                          ef_con=48))
+    else:
+        report = run_churn()
+    print(json.dumps(report, indent=2, sort_keys=True))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+    if args.smoke and report["update_recall"] < RECALL_GATE:
+        print(f"FAIL: update_recall {report['update_recall']} < {RECALL_GATE}",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

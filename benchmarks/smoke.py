@@ -78,11 +78,29 @@ def planner_microbench(index: MSTGIndex, Q: int = 1024, mask: int = ANY_OVERLAP,
     }
 
 
+def streaming_churn_metrics(n: int = 400, d: int = 24) -> dict:
+    """The ``update_recall`` lane: recall after a 10% insert + 5% delete
+    churn on a :class:`repro.streaming.SegmentedIndex`, measured against a
+    static from-scratch rebuild over the identical post-churn corpus
+    (delegates to :func:`benchmarks.exp11_updates.run_churn`)."""
+    from repro.core import IndexSpec
+
+    from .exp11_updates import run_churn
+    r = run_churn(n=n, d=d, n_queries=12,
+                  spec=IndexSpec(variants=("T", "Tp"), m=8, ef_con=48))
+    return {"update_recall": r["update_recall"],
+            "streamed_recall_at_10": r["streamed_recall_at_k"],
+            "static_recall_at_10": r["static_recall_at_k"],
+            "update_ops_per_sec": r["update_ops_per_sec"],
+            "static_rebuild_seconds": r["static_rebuild_seconds"]}
+
+
 def append_history(report: dict, history_path: str) -> dict:
     """One compact JSON line per run, keyed by commit, appended so the bench
     trajectory accumulates across scheduled CI runs."""
     sel05 = report["exp1_rrann"].get("sel_05", {})
     auto = sel05.get("engine_auto", {})
+    streaming = report.get("streaming", {})
     record = {
         "commit": os.environ.get("GITHUB_SHA", "local")[:12],
         "unix_time": round(report["unix_time"], 1),
@@ -91,6 +109,8 @@ def append_history(report: dict, history_path: str) -> dict:
         "planner_speedup": report["planner"]["speedup"],
         "auto_qps": auto.get("qps"),
         "auto_recall_at_10": auto.get("recall_at_10"),
+        "update_recall": streaming.get("update_recall"),
+        "update_ops_per_sec": streaming.get("update_ops_per_sec"),
     }
     with open(history_path, "a") as f:
         f.write(json.dumps(record, sort_keys=True) + "\n")
@@ -101,7 +121,7 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
               n_queries: int = 16, k: int = 10, mask: int = ANY_OVERLAP,
               history_path: str = None) -> dict:
     report: dict = {
-        "schema": 2,
+        "schema": 3,
         "unix_time": time.time(),
         "platform": platform.platform(),
         "mask": iv.mask_name(mask),
@@ -147,6 +167,10 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
     # planner microbenchmark (acceptance: >= 10x over the seed scalar loop)
     report["planner"] = {k_: (round(v, 4) if isinstance(v, float) else v)
                          for k_, v in planner_microbench(idx, mask=mask).items()}
+
+    # streaming churn lane: recall after 10% inserts + 5% deletes vs a
+    # static rebuild of the post-churn corpus
+    report["streaming"] = streaming_churn_metrics()
 
     # kernel bench (interpret mode on CPU: correctness-path timing only)
     import jax.numpy as jnp

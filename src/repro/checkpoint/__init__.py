@@ -1,1 +1,2 @@
 from .checkpointer import Checkpointer
+from .index_io import IndexIOError

@@ -22,7 +22,7 @@ from .predicates import (Predicate, LeftOverlap, RightOverlap, QueryContained,
                          QueryContaining, Contains, ContainedBy, Overlaps,
                          Before, After, as_predicate, as_mask)
 from .api import (IndexSpec, QueryHit, RouteReport, SearchRequest,
-                  SearchResult)
+                  SearchResult, SegmentReport)
 from .mstg import MSTGIndex, FrozenVariant, build_variant
 from .search import mstg_graph_search, merge_topk
 from .flat import flat_search
@@ -34,7 +34,8 @@ __all__ = [
     "QueryContaining", "Contains", "ContainedBy", "Overlaps", "Before",
     "After", "as_predicate", "as_mask",
     # typed request/result surface
-    "SearchRequest", "SearchResult", "QueryHit", "RouteReport", "IndexSpec",
+    "SearchRequest", "SearchResult", "QueryHit", "RouteReport",
+    "SegmentReport", "IndexSpec",
     # index + engines
     "MSTGIndex", "QueryEngine", "FrozenVariant", "build_variant",
     "AttributeDomain", "mstg_graph_search", "merge_topk", "flat_search",

@@ -102,19 +102,45 @@ class SearchRequest:
         return self.predicate.mask
 
 
+@dataclasses.dataclass(frozen=True)
+class SegmentReport:
+    """How one live segment (or the mutable delta) served its share of a
+    fanned-out :class:`repro.streaming.SegmentedIndex` request.
+
+    segment    : segment id (``"seg-000003"``) or ``"delta"``
+    n          : rows the segment holds (including tombstoned rows)
+    route      : route that segment executed ("graph"|"pruned"|"flat"|"delta")
+    k_fetched  : per-segment top-k width (k + live tombstones, clamped to n,
+                 so tombstone filtering can never push a true neighbor out)
+    tombstones : tombstoned rows in this segment at execution time
+    slot_count : Theorem 4.1 plan slots that segment executed
+    """
+
+    segment: str
+    n: int
+    route: str
+    k_fetched: int
+    tombstones: int = 0
+    slot_count: int = 0
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class RouteReport:
     """What the engine did with one request (diagnostics, not results).
 
     route            : executed route ("graph" | "pruned" | "flat"); an
                        empty (Q=0) request executes nothing and mirrors the
-                       requested value here (possibly "auto")
+                       requested value here (possibly "auto"); a streaming
+                       :class:`repro.streaming.SegmentedIndex` fan-out reports
+                       "segmented" here and per-segment routes in ``segments``
     requested        : what the caller asked for (may be "auto")
     est_selectivity  : (Q,) estimated predicate selectivity, when the auto
                        router evaluated it (None for pinned routes)
     slot_count       : number of Theorem 4.1 plan slots executed
     variants         : MSTG variant of each slot, in execution order
     cache_hits/misses: selectivity-cache traffic caused by this request
+    segments         : per-segment :class:`SegmentReport` records when the
+                       request fanned out over a segmented index (else empty)
     """
 
     route: str
@@ -124,6 +150,7 @@ class RouteReport:
     variants: Tuple[str, ...]
     cache_hits: int = 0
     cache_misses: int = 0
+    segments: Tuple[SegmentReport, ...] = ()
 
     @property
     def mean_selectivity(self) -> Optional[float]:

@@ -34,6 +34,7 @@ shims over this surface.
 """
 from __future__ import annotations
 
+import itertools
 import warnings
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -58,6 +59,28 @@ _ROUTES = (ROUTE_AUTO, ROUTE_GRAPH, ROUTE_PRUNED, ROUTE_FLAT)
 
 def _next_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length()
+
+
+# Deprecated tuple-API shims warn exactly once per process per shim: serving
+# loops that still cross a shim don't spam one warning per request, while the
+# first crossing is always visible (and fails CI, which escalates
+# DeprecationWarnings attributed to repro.* modules to errors).
+_DEPRECATION_EMITTED: set = set()
+
+
+def _warn_deprecated(key: str, message: str, *, stacklevel: int = 2) -> None:
+    """Emit ``message`` as a DeprecationWarning once per process per ``key``,
+    attributed to the shim's *caller* (``stacklevel`` counts from the shim
+    function's own frame, exactly like a direct ``warnings.warn``)."""
+    if key in _DEPRECATION_EMITTED:
+        return
+    _DEPRECATION_EMITTED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel + 1)
+
+
+def reset_deprecation_warnings() -> None:
+    """Forget which deprecation warnings already fired (test isolation)."""
+    _DEPRECATION_EMITTED.clear()
 
 
 def _empty_result(Q: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -119,10 +142,13 @@ class QueryEngine:
         # selectivity memo: (mask, fl, cl, fr, cr) -> sample fraction. The
         # rank signature determines the sample predicate exactly (sample
         # endpoints are domain values), so this is quantization, not change.
+        # Bounded FIFO: overflow evicts the oldest entries (dict preserves
+        # insertion order), never the whole memo.
         self._sel_cache: Dict[tuple, float] = {}
         self._sel_cache_max = int(sel_cache_max)
         self.sel_cache_hits = 0
         self.sel_cache_misses = 0
+        self.sel_cache_evictions = 0
 
     # ---- device staging (lazy, cached per variant) ----
     def graph_dev(self, variant: str) -> DeviceVariant:
@@ -185,12 +211,16 @@ class QueryEngine:
                                     self._sample_hi[None, :],
                                     ql[mi][:, None], qh[mi][:, None])
             est = np.asarray(hit, np.float64).mean(axis=1)
-            if len(self._sel_cache) + len(miss) > self._sel_cache_max:
-                self._sel_cache.clear()
             for j, i in enumerate(miss):
                 v = float(est[j])
                 self._sel_cache[(mask, fl[i], cl[i], fr[i], cr[i])] = v
                 out[i] = v
+            overflow = len(self._sel_cache) - self._sel_cache_max
+            if overflow > 0:  # FIFO: drop the oldest entries only
+                for key in list(itertools.islice(iter(self._sel_cache),
+                                                 overflow)):
+                    del self._sel_cache[key]
+                self.sel_cache_evictions += overflow
         self.sel_cache_hits += hits
         self.sel_cache_misses += len(miss)
         return out, hits, len(miss)
@@ -227,10 +257,11 @@ class QueryEngine:
                     "options must be set on the SearchRequest itself; "
                     "extra search() arguments would be silently ignored")
             return self.execute(request)
-        warnings.warn(
+        _warn_deprecated(
+            "QueryEngine.search",
             "QueryEngine.search(queries, qlo, qhi, mask) is deprecated; pass "
             "a repro.core.SearchRequest (returns a SearchResult)",
-            DeprecationWarning, stacklevel=2)
+            stacklevel=2)
         if qlo is None or qhi is None or mask is None:
             raise TypeError("legacy QueryEngine.search() requires queries, "
                             "qlo, qhi, and mask")
@@ -411,9 +442,10 @@ class MSTGSearcher:
 
     def __init__(self, index: MSTGIndex, use_kernel: bool = False,
                  engine: Optional[QueryEngine] = None):
-        warnings.warn("MSTGSearcher is deprecated; use QueryEngine with a "
-                      "SearchRequest(route='graph')", DeprecationWarning,
-                      stacklevel=2)
+        _warn_deprecated(
+            "MSTGSearcher",
+            "MSTGSearcher is deprecated; use QueryEngine with a "
+            "SearchRequest(route='graph')", stacklevel=2)
         self.index = index
         self.use_kernel = use_kernel
         self.engine = engine or QueryEngine(index, use_kernel=use_kernel,
@@ -434,9 +466,10 @@ class FlatSearcher:
 
     def __init__(self, index: MSTGIndex, use_kernel: bool = False,
                  engine: Optional[QueryEngine] = None):
-        warnings.warn("FlatSearcher is deprecated; use QueryEngine with a "
-                      "SearchRequest(route='flat') or route='pruned'",
-                      DeprecationWarning, stacklevel=2)
+        _warn_deprecated(
+            "FlatSearcher",
+            "FlatSearcher is deprecated; use QueryEngine with a "
+            "SearchRequest(route='flat') or route='pruned'", stacklevel=2)
         self.index = index
         self.use_kernel = use_kernel
         self.engine = engine or QueryEngine(index, use_kernel=use_kernel,

@@ -192,11 +192,10 @@ class MSTGIndex:
                    m_max=spec.m_max, n_entries=spec.n_entries,
                    domain=domain, progress=progress)
 
-    def save(self, path: str) -> str:
-        """Persist the whole serving artifact — corpus, ranges, attribute
-        domain, every :class:`FrozenVariant` array, spec — to one atomic
-        ``.npz`` (conventions of :mod:`repro.checkpoint.index_io`), so a
-        serving process can :meth:`load` instead of rebuilding."""
+    def to_payload(self) -> Tuple[Dict[str, np.ndarray], dict]:
+        """The persisted form: (arrays, meta). Embedders (e.g. the streaming
+        segment format) may add their own arrays/meta keys on top before
+        handing the payload to :mod:`repro.checkpoint.index_io`."""
         arrays = {"vectors": self.vectors,
                   "lo": self.lo, "hi": self.hi,
                   "domain_values": self.domain.values}
@@ -210,20 +209,22 @@ class MSTGIndex:
                                       "Lv": fv.Lv, "n": fv.n}
             for field in _FV_ARRAYS:
                 arrays[f"{name}.{field}"] = getattr(fv, field)
-        return index_io.save_npz_atomic(path, arrays, meta)
+        return arrays, meta
 
     @classmethod
-    def load(cls, path: str) -> "MSTGIndex":
-        """Reconstruct a saved index without rebuilding: search results are
-        bit-identical to the freshly built index the file came from."""
-        arrays, meta = index_io.load_npz(path)
+    def from_payload(cls, arrays: Dict[str, np.ndarray], meta: dict,
+                     path: str = "<payload>") -> "MSTGIndex":
+        """Inverse of :meth:`to_payload`; missing arrays raise a clear
+        :class:`repro.checkpoint.index_io.IndexIOError` naming the key."""
         if meta.get("format") != _INDEX_FORMAT:
             raise ValueError(f"{path}: not a {_INDEX_FORMAT} artifact")
         self = cls.__new__(cls)
-        self.vectors = np.ascontiguousarray(arrays["vectors"], np.float32)
-        self.lo = np.asarray(arrays["lo"], np.float64)
-        self.hi = np.asarray(arrays["hi"], np.float64)
-        self.domain = iv.AttributeDomain(arrays["domain_values"])
+        self.vectors = np.ascontiguousarray(
+            index_io.take(arrays, "vectors", path), np.float32)
+        self.lo = np.asarray(index_io.take(arrays, "lo", path), np.float64)
+        self.hi = np.asarray(index_io.take(arrays, "hi", path), np.float64)
+        self.domain = iv.AttributeDomain(
+            index_io.take(arrays, "domain_values", path))
         self.rl = self.domain.rank(self.lo)
         self.rr = self.domain.rank(self.hi)
         self.params = dict(meta["params"])
@@ -234,8 +235,24 @@ class MSTGIndex:
             self.variants[name] = FrozenVariant(
                 variant=name, K=int(scal["K"]), Kpad=int(scal["Kpad"]),
                 Lv=int(scal["Lv"]), n=int(scal["n"]),
-                **{f: arrays[f"{name}.{f}"] for f in _FV_ARRAYS})
+                **{f: index_io.take(arrays, f"{name}.{f}", path)
+                   for f in _FV_ARRAYS})
         return self
+
+    def save(self, path: str) -> str:
+        """Persist the whole serving artifact — corpus, ranges, attribute
+        domain, every :class:`FrozenVariant` array, spec — to one atomic
+        ``.npz`` (conventions of :mod:`repro.checkpoint.index_io`), so a
+        serving process can :meth:`load` instead of rebuilding."""
+        arrays, meta = self.to_payload()
+        return index_io.save_npz_atomic(path, arrays, meta)
+
+    @classmethod
+    def load(cls, path: str) -> "MSTGIndex":
+        """Reconstruct a saved index without rebuilding: search results are
+        bit-identical to the freshly built index the file came from."""
+        arrays, meta = index_io.load_npz(path)
+        return cls.from_payload(arrays, meta, path=path)
 
     # ---- planning ----
     def plan(self, mask: int, ql: float, qh: float) -> List[iv.SearchTask]:

@@ -1,10 +1,13 @@
 """End-to-end serving driver — the paper's deployment scenario.
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 24
+  PYTHONPATH=src python -m repro.launch.serve --streaming   # live corpus
 
 Builds an MSTG index over a synthetic corpus, stands up the batched
 RetrievalServer with an LM-embedding front (smoke-scale model), and serves
-RR-filtered ANN requests end to end (generate + retrieve)."""
+RR-filtered ANN requests end to end (generate + retrieve). ``--streaming``
+backs the server with a :class:`repro.streaming.SegmentedIndex` instead and
+interleaves upserts/deletes with the query traffic."""
 from __future__ import annotations
 
 import argparse
@@ -30,17 +33,28 @@ def main():
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--streaming", action="store_true",
+                    help="serve from a mutable SegmentedIndex and interleave "
+                         "upserts/deletes with query traffic")
     args = ap.parse_args()
 
     # 1) corpus + index (the paper's contribution)
     ds = make_range_dataset(n=args.n, d=args.dim, n_queries=args.requests,
                             quantize=128, seed=0)
+    spec = IndexSpec(variants=("T", "Tp"), m=12, ef_con=64)
     t0 = time.time()
-    idx = MSTGIndex.build(IndexSpec(variants=("T", "Tp"), m=12, ef_con=64),
-                          ds.vectors, ds.lo, ds.hi)
-    qengine = QueryEngine(idx)
-    print(f"MSTG built: n={args.n} K={idx.domain.K} "
-          f"bytes={idx.index_bytes()/1e6:.1f}MB in {time.time()-t0:.1f}s")
+    if args.streaming:
+        from repro.streaming import SegmentedIndex
+        qengine = SegmentedIndex(spec, flush_threshold=args.n)
+        qengine.add(np.arange(args.n), ds.vectors, ds.lo, ds.hi)
+        qengine.flush()
+        print(f"segmented MSTG built: n={args.n} "
+              f"segments={len(qengine.segments)} in {time.time()-t0:.1f}s")
+    else:
+        idx = MSTGIndex.build(spec, ds.vectors, ds.lo, ds.hi)
+        qengine = QueryEngine(idx)
+        print(f"MSTG built: n={args.n} K={idx.domain.K} "
+              f"bytes={idx.index_bytes()/1e6:.1f}MB in {time.time()-t0:.1f}s")
 
     # 2) LM endpoint (smoke-scale) — generates and embeds requests
     cfg = get_smoke_config(args.arch)
@@ -63,17 +77,30 @@ def main():
     embed_fn = lambda items: ds.queries[np.asarray(items)]  # stub embedding
     server = RetrievalServer(qengine, embed_fn, k=args.k, ef=64)
     qlo, qhi = make_queries(ds, Overlaps().mask, 0.15, seed=2)
+    rng = np.random.default_rng(7)
+    n_mut = 0
     for i in range(args.requests):
+        if args.streaming and i % 4 == 1:  # live traffic: mutate mid-stream
+            j = i % args.n
+            server.submit_upsert(args.n + i, i, ds.lo[j], ds.hi[j])
+            server.submit_delete(int(rng.integers(0, args.n)))
+            n_mut += 2
         pred = Overlaps() if i % 2 == 0 else QueryContained()
         server.submit(i, qlo[i], qhi[i], pred)
     t0 = time.time()
     results = server.tick()
     dt = time.time() - t0
     ok = sum(1 for hit in results.values() if hit.valid.any())
-    print(f"served {len(results)} requests in {dt*1e3:.1f} ms "
-          f"({len(results)/dt:.1f} qps); {ok} non-empty; "
-          f"routes={qengine.route_counts}; "
-          f"sel_cache={qengine.sel_cache_hits}h/{qengine.sel_cache_misses}m")
+    print(f"served {len(results)} requests (+{n_mut} mutations) in "
+          f"{dt*1e3:.1f} ms ({len(results)/dt:.1f} qps); {ok} non-empty")
+    if args.streaming:
+        print(f"  streaming stats: {qengine.stats()}")
+        rep = qengine.compact(full=True)
+        print(f"  compacted: merged={rep['merged']} -> {rep['new_segment']} "
+              f"(dropped {rep['dropped']} tombstoned rows)")
+    else:
+        print(f"  routes={qengine.route_counts}; "
+              f"sel_cache={qengine.sel_cache_hits}h/{qengine.sel_cache_misses}m")
     for i in list(results)[:3]:
         print(f"  req {i}: top ids {results[i].ids[:5].tolist()}")
 

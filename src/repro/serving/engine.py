@@ -97,19 +97,29 @@ class RetrievalServer:
     vectorized plan and one jit-cached trace (the engine pads ragged groups
     to bucket sizes). Each answer is a :class:`repro.core.QueryHit`.
 
+    Live corpora: when ``engine`` is a mutable index (anything with
+    ``add``/``delete`` — i.e. :class:`repro.streaming.SegmentedIndex`),
+    :meth:`submit_upsert` / :meth:`submit_delete` queue corpus mutations.
+    A tick applies every queued mutation in submit order *before* running the
+    tick's queries, so a query always sees the mutations submitted ahead of
+    it; upserted items share the tick's single batched ``embed_fn`` call.
+
     ``embed_fn`` should be batched — called with the list of queued items,
     returning a ``(B, d)`` array. Legacy per-item embedders (one item -> one
     ``(d,)`` vector) are auto-detected and looped over as a fallback.
     """
 
     def __init__(self, engine, embed_fn, k: int = 10, ef: int = 64):
-        # ``engine`` is a QueryEngine (or anything with its legacy positional
-        # .search signature; the deprecated MSTGSearcher wrapper still works).
+        # ``engine`` is a QueryEngine or SegmentedIndex (or anything with the
+        # legacy positional .search signature; the deprecated MSTGSearcher
+        # wrapper still works).
         self.engine = engine
         self.embed_fn = embed_fn
         self.k = k
         self.ef = ef
-        self.queue: List[Tuple[Any, float, float, int]] = []
+        # op-tagged queue: ("query", item, qlo, qhi, mask) |
+        # ("upsert", ext_id, item, lo, hi) | ("delete", ext_id)
+        self.queue: List[Tuple] = []
         self._embed_batched: Optional[bool] = None  # decided on first tick
 
     @classmethod
@@ -117,11 +127,33 @@ class RetrievalServer:
         from repro.core import QueryEngine
         return cls(QueryEngine(index, **engine_kw), embed_fn, k=k, ef=ef)
 
+    @property
+    def mutable(self) -> bool:
+        """Whether the backing engine accepts upserts/deletes."""
+        return hasattr(self.engine, "add") and hasattr(self.engine, "delete")
+
     def submit(self, item, qlo: float, qhi: float, predicate):
         """Queue one request; ``predicate`` is a repro.core Predicate, a raw
         int mask, or a parseable string like ``"any_overlap"``."""
         from repro.core import as_mask
-        self.queue.append((item, float(qlo), float(qhi), as_mask(predicate)))
+        self.queue.append(("query", item, float(qlo), float(qhi),
+                           as_mask(predicate)))
+
+    def submit_upsert(self, ext_id: int, item, lo: float, hi: float):
+        """Queue a corpus upsert: ``item`` is embedded on the next tick (in
+        the tick's one batched call) and inserted under stable ``ext_id``
+        with object range ``[lo, hi]``."""
+        if not self.mutable:
+            raise TypeError("engine is a frozen index; upserts need a "
+                            "repro.streaming.SegmentedIndex")
+        self.queue.append(("upsert", int(ext_id), item, float(lo), float(hi)))
+
+    def submit_delete(self, ext_id: int):
+        """Queue a corpus delete (tombstone) of ``ext_id``."""
+        if not self.mutable:
+            raise TypeError("engine is a frozen index; deletes need a "
+                            "repro.streaming.SegmentedIndex")
+        self.queue.append(("delete", int(ext_id)))
 
     def _embed(self, items: List[Any]) -> np.ndarray:
         """One stacked embedding call for the whole tick (per-item fallback).
@@ -148,24 +180,46 @@ class RetrievalServer:
                          for it in items])
 
     def tick(self):
-        """Execute all queued requests -> {submit order index: QueryHit}."""
-        from repro.core import QueryEngine, QueryHit, SearchRequest
+        """Apply queued mutations (submit order), then execute all queued
+        requests -> {submit order index: QueryHit}. Mutation entries occupy
+        submit-order slots but produce no result entry."""
+        from repro.core import QueryHit, SearchRequest
         if not self.queue:
             return {}
-        vecs = self._embed([req[0] for req in self.queue])
+        # one batched embed call for the whole tick: queries AND upsert items
+        embed_slots = [i for i, op in enumerate(self.queue)
+                       if op[0] in ("query", "upsert")]
+        items = [self.queue[i][1] if self.queue[i][0] == "query"
+                 else self.queue[i][2] for i in embed_slots]
+        vec_of = {}
+        if items:
+            vecs = self._embed(items)
+            vec_of = {i: vecs[j] for j, i in enumerate(embed_slots)}
+        # 1) mutations, strictly in submit order
+        for i, op in enumerate(self.queue):
+            if op[0] == "upsert":
+                _, ext_id, _, lo, hi = op
+                self.engine.add(np.array([ext_id], np.int64),
+                                vec_of[i][None, :], np.array([lo]),
+                                np.array([hi]))
+            elif op[0] == "delete":
+                self.engine.delete(np.array([op[1]], np.int64), strict=False)
+        # 2) queries, grouped by predicate mask
         results = {}
         by_mask: Dict[int, List[int]] = {}
-        for i, (_, _, _, mask) in enumerate(self.queue):
-            by_mask.setdefault(mask, []).append(i)
+        for i, op in enumerate(self.queue):
+            if op[0] == "query":
+                by_mask.setdefault(op[4], []).append(i)
         for mask, idxs in by_mask.items():
-            qlo = np.array([self.queue[i][1] for i in idxs])
-            qhi = np.array([self.queue[i][2] for i in idxs])
-            if isinstance(self.engine, QueryEngine):
+            qlo = np.array([self.queue[i][2] for i in idxs])
+            qhi = np.array([self.queue[i][3] for i in idxs])
+            qvecs = np.stack([vec_of[i] for i in idxs])
+            if hasattr(self.engine, "execute"):  # QueryEngine / SegmentedIndex
                 res = self.engine.execute(SearchRequest(
-                    vecs[idxs], (qlo, qhi), mask, k=self.k, ef=self.ef))
+                    qvecs, (qlo, qhi), mask, k=self.k, ef=self.ef))
                 ids, d = res.ids, res.dists
             else:  # legacy tuple-API searcher
-                ids, d = self.engine.search(vecs[idxs], qlo, qhi, mask,
+                ids, d = self.engine.search(qvecs, qlo, qhi, mask,
                                             k=self.k, ef=self.ef)
             for j, i in enumerate(idxs):
                 results[i] = QueryHit(ids[j], d[j])

@@ -1,0 +1,18 @@
+"""Streaming MSTG — LSM-style segmented index with upserts, deletes, flush,
+and compaction over the frozen per-segment graphs of :mod:`repro.core`.
+
+    from repro.streaming import SegmentedIndex
+
+    sidx = SegmentedIndex(IndexSpec(predicate=Overlaps()))
+    sidx.add(ids, vectors, lo, hi)      # upsert into the mutable delta
+    sidx.delete(ids[:5])                # tombstone / in-delta kill
+    sidx.flush()                        # freeze delta -> immutable segment
+    sidx.compact()                      # size-tiered merge, drops tombstones
+    result = sidx.search(SearchRequest(...))   # fan-out + host top-k merge
+    sidx.save("idx_dir/"); SegmentedIndex.load("idx_dir/")
+"""
+from .compaction import CompactionPolicy
+from .delta import DeltaBuffer
+from .segmented import Segment, SegmentedIndex
+
+__all__ = ["CompactionPolicy", "DeltaBuffer", "Segment", "SegmentedIndex"]

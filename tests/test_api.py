@@ -216,12 +216,14 @@ def test_index_load_rejects_non_index(tmp_path):
 # ---- legacy shims ----
 
 def test_legacy_tuple_api_still_works(small_ds, built_index):
+    from repro.core.engine import reset_deprecation_warnings
     ds = small_ds
     eng = QueryEngine(built_index)
     qlo, qhi = make_queries(ds, 15, 0.15, seed=7)
     with pytest.warns(DeprecationWarning):
         out = eng.search(ds.queries, qlo, qhi, 15, k=5)
     assert isinstance(out, tuple)
+    reset_deprecation_warnings()  # each shim warns once per process
     with pytest.warns(DeprecationWarning), pytest.raises(TypeError):
         eng.search(ds.queries, qlo, qhi)  # forgotten mask must not be mask 0
     res = eng.search(SearchRequest(ds.queries, (qlo, qhi), 15, k=5))

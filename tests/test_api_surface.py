@@ -32,5 +32,18 @@ def test_key_surface_types_construct():
 
 def test_serving_and_checkpoint_surface_imports():
     from repro.serving import RetrievalServer, ServeEngine  # noqa: F401
-    from repro.checkpoint import index_io
+    from repro.checkpoint import IndexIOError, index_io
     assert callable(index_io.save_npz_atomic) and callable(index_io.load_npz)
+    assert issubclass(IndexIOError, ValueError)
+
+
+def test_streaming_surface_imports():
+    import repro.streaming as streaming
+    missing = [n for n in streaming.__all__ if not hasattr(streaming, n)]
+    assert not missing
+    from repro.core import SegmentReport
+    from repro.streaming import CompactionPolicy, SegmentedIndex
+    assert CompactionPolicy().pick([]) == []
+    s = SegmentedIndex()
+    assert len(s) == 0 and 0 not in s and s.stats()["segments"] == []
+    assert SegmentReport("delta", 0, "delta", 0).tombstones == 0

@@ -89,6 +89,80 @@ def test_kill_and_resume_bitwise(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_index_io_corrupt_and_truncated_raise_index_io_error(tmp_path):
+    """Truncated/corrupt .npz artifacts surface as IndexIOError (a ValueError
+    subclass), never a bare zipfile/KeyError."""
+    from repro.checkpoint import IndexIOError, index_io
+    p = index_io.save_npz_atomic(str(tmp_path / "good"),
+                                 {"x": np.arange(64)}, {"format": "t"})
+    arrays, meta = index_io.load_npz(p)
+    np.testing.assert_array_equal(arrays["x"], np.arange(64))
+    # truncation
+    blob = open(p, "rb").read()
+    trunc = str(tmp_path / "trunc.npz")
+    with open(trunc, "wb") as f:
+        f.write(blob[:len(blob) // 2])
+    with pytest.raises(IndexIOError, match="corrupt or truncated"):
+        index_io.load_npz(trunc)
+    # garbage bytes
+    garb = str(tmp_path / "garbage.npz")
+    with open(garb, "wb") as f:
+        f.write(b"these are not the arrays you are looking for")
+    with pytest.raises(IndexIOError):
+        index_io.load_npz(garb)
+    # missing file
+    with pytest.raises(IndexIOError, match="no such index artifact"):
+        index_io.load_npz(str(tmp_path / "never_saved"))
+    # missing required key -> IndexIOError naming the key, not KeyError
+    with pytest.raises(IndexIOError, match="missing required array 'y'"):
+        index_io.take(arrays, "y", p)
+    assert isinstance(IndexIOError("x"), ValueError)
+
+
+def test_index_io_missing_key_via_mstg_load(tmp_path):
+    """An index artifact with a missing array names the key in the error."""
+    from repro.checkpoint import IndexIOError, index_io
+    from repro.core import MSTGIndex
+    p = index_io.save_npz_atomic(
+        str(tmp_path / "hollow"), {"lo": np.zeros(3)},
+        {"format": "mstg-index", "variants": {}})
+    with pytest.raises(IndexIOError, match="vectors"):
+        MSTGIndex.load(p)
+
+
+def test_index_io_partial_write_never_clobbers(tmp_path, monkeypatch):
+    """A failing save leaves the previous good artifact byte-identical and
+    no .tmp litter behind."""
+    from repro.checkpoint import index_io
+    p = index_io.save_npz_atomic(str(tmp_path / "idx"),
+                                 {"x": np.arange(10)}, {"v": 1})
+    good = open(p, "rb").read()
+
+    def boom(*a, **kw):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(OSError):
+        index_io.save_npz_atomic(p, {"x": np.arange(99)}, {"v": 2})
+    monkeypatch.undo()
+    assert open(p, "rb").read() == good
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    arrays, meta = index_io.load_npz(p)
+    assert meta == {"v": 1}
+
+
+def test_index_io_manifest_failure_paths(tmp_path):
+    from repro.checkpoint import IndexIOError, index_io
+    with pytest.raises(IndexIOError, match="no such manifest"):
+        index_io.load_manifest(str(tmp_path))
+    index_io.save_manifest_atomic(str(tmp_path), {"format": "t", "n": 1})
+    assert index_io.load_manifest(str(tmp_path)) == {"format": "t", "n": 1}
+    with open(tmp_path / "manifest.json", "w") as f:
+        f.write("{not json")
+    with pytest.raises(IndexIOError, match="corrupt manifest"):
+        index_io.load_manifest(str(tmp_path))
+
+
 def test_heartbeat_registry():
     from repro.distributed.fault import HeartbeatRegistry
     hb = HeartbeatRegistry(timeout_s=10)

@@ -160,3 +160,52 @@ def test_engine_empty_batch_and_empty_predicate(built_index, small_ds):
 
 def test_next_pow2():
     assert [_next_pow2(x) for x in (1, 2, 3, 7, 8, 9)] == [1, 2, 4, 8, 8, 16]
+
+
+def test_selectivity_cache_bounded_fifo_eviction(small_ds, built_index):
+    """Overflow evicts the oldest entries only (FIFO), never the whole memo,
+    and the hit/miss/eviction counters stay consistent throughout."""
+    ds = small_ds
+    eng = QueryEngine(built_index, sel_cache_max=8)
+    vals = built_index.domain.values
+    qlo = vals[:12].copy()                    # 12 distinct rank signatures
+    qhi = qlo + (vals[-1] - vals[0])
+    _, h1, m1 = eng._estimate_cached(15, qlo, qhi)
+    assert (h1, m1) == (0, 12)
+    assert len(eng._sel_cache) == 8           # bounded, not cleared
+    assert eng.sel_cache_evictions == 4       # the 4 oldest fell out
+    # newest 8 still hit; oldest 4 miss again and evict the next-oldest 4
+    _, h2, m2 = eng._estimate_cached(15, qlo[4:], qhi[4:])
+    assert (h2, m2) == (8, 0)
+    _, h3, m3 = eng._estimate_cached(15, qlo[:4], qhi[:4])
+    assert (h3, m3) == (0, 4)
+    assert len(eng._sel_cache) == 8
+    assert eng.sel_cache_evictions == 8
+    assert eng.sel_cache_hits == h1 + h2 + h3
+    assert eng.sel_cache_misses == m1 + m2 + m3
+    # estimates themselves are unaffected by eviction
+    est, _, _ = eng._estimate_cached(15, qlo, qhi)
+    want = eng.estimate_selectivity(15, qlo, qhi)
+    np.testing.assert_array_equal(est, want)
+
+
+def test_deprecation_warns_exactly_once_per_process(small_ds, built_index):
+    """Tuple-API shims emit one DeprecationWarning per process per shim,
+    attributed to the caller (stacklevel points at this file)."""
+    import warnings as w
+    from repro.core import MSTGSearcher
+    from repro.core.engine import reset_deprecation_warnings
+    ds = small_ds
+    eng = QueryEngine(built_index)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=7)
+    reset_deprecation_warnings()
+    with w.catch_warnings(record=True) as rec:
+        w.simplefilter("always")
+        eng.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=5)
+        eng.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=5)
+        MSTGSearcher(built_index, engine=eng)
+        MSTGSearcher(built_index, engine=eng)
+    deps = [r for r in rec if issubclass(r.category, DeprecationWarning)]
+    assert len(deps) == 2                     # one per shim, not per call
+    for r in deps:                            # correct stacklevel: the caller
+        assert r.filename == __file__

@@ -1,0 +1,412 @@
+"""Streaming subsystem: add/delete/flush/compact equivalence vs a static
+build (all routes, 8+ predicate masks), tombstone-exact fan-out search,
+manifest save/load bit-identity (including the unflushed delta), compaction
+policy, server-side mutations, and the exp11 update-recall gate."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import IndexIOError
+from repro.core import (IndexSpec, MSTGIndex, QueryEngine, SearchRequest,
+                        intervals as iv)
+from repro.data import (RangeDataset, brute_force_topk, make_queries,
+                        make_range_dataset, recall_at_k)
+from repro.streaming import CompactionPolicy, DeltaBuffer, SegmentedIndex
+
+N = 280
+N_SEG1 = 160
+# >= 8 predicate masks covering every atomic case, disjunctions, and the
+# Allen relations (acceptance criterion a)
+MASKS8 = (1, 2, 4, 8, 15, 16, 32, 48)
+
+
+def _to_ext(ids, ext_of_row):
+    """Map a static index's row ids to external ids (NO_EDGE passes through)."""
+    return np.where(ids >= 0, ext_of_row[np.clip(ids, 0, None)],
+                    np.asarray(ids, np.int64))
+
+
+@pytest.fixture(scope="module")
+def sds():
+    return make_range_dataset(n=N, d=16, n_queries=8, quantize=32, seed=5)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return IndexSpec(variants=("T", "Tp", "Tpp"), m=8, ef_con=40)
+
+
+def _streaming_ops(sds, spec):
+    """The canonical op sequence: 2 waves of adds, deletes in both the frozen
+    segment and the delta, upserts of frozen rows, 2 flushes. Returns the
+    index plus the expected live corpus keyed by external id."""
+    rng = np.random.default_rng(11)
+    s = SegmentedIndex(spec)
+    ids = np.arange(N)
+    s.add(ids[:N_SEG1], sds.vectors[:N_SEG1], sds.lo[:N_SEG1],
+          sds.hi[:N_SEG1])
+    assert s.flush() is not None
+    s.add(ids[N_SEG1:], sds.vectors[N_SEG1:], sds.lo[N_SEG1:],
+          sds.hi[N_SEG1:])
+    dead = np.concatenate([rng.choice(N_SEG1, 12, replace=False),
+                           N_SEG1 + rng.choice(N - N_SEG1, 8, replace=False)])
+    assert s.delete(dead) == len(dead)
+    up = rng.choice(np.setdiff1d(np.arange(N_SEG1), dead), 6, replace=False)
+    upv = (sds.vectors[up]
+           + 0.05 * rng.normal(0, 1, (6, sds.d)).astype(np.float32))
+    s.add(up, upv, sds.lo[up], sds.hi[up])  # upsert frozen rows
+    assert s.flush() is not None
+
+    corpus = {int(i): (sds.vectors[i], sds.lo[i], sds.hi[i])
+              for i in range(N)}
+    for e in dead:
+        corpus.pop(int(e))
+    for j, e in enumerate(up):
+        corpus[int(e)] = (upv[j], sds.lo[e], sds.hi[e])
+    return s, corpus
+
+
+def _live_arrays(corpus):
+    live = np.array(sorted(corpus), np.int64)
+    vecs = np.stack([corpus[int(e)][0] for e in live])
+    lo = np.array([corpus[int(e)][1] for e in live])
+    hi = np.array([corpus[int(e)][2] for e in live])
+    return live, vecs, lo, hi
+
+
+@pytest.fixture(scope="module")
+def compacted(sds, spec):
+    """Full lifecycle ending in compact(full=True) -> one clean segment."""
+    s, corpus = _streaming_ops(sds, spec)
+    rep = s.compact(full=True)
+    assert rep["new_segment"] is not None and rep["dropped"] > 0
+    return s, corpus
+
+
+@pytest.fixture(scope="module")
+def static_equiv(compacted, spec):
+    """From-scratch MSTGIndex.build over the identical live corpus in the
+    canonical (external id) order."""
+    _, corpus = compacted
+    live, vecs, lo, hi = _live_arrays(corpus)
+    return QueryEngine(MSTGIndex.build(spec, vecs, lo, hi)), live, vecs, lo, hi
+
+
+# ---- acceptance (a): streamed == static on all routes, >= 8 masks ----
+
+@pytest.mark.parametrize("mask", MASKS8)
+def test_compacted_equals_static_build_all_routes(compacted, static_equiv,
+                                                  sds, mask):
+    s, corpus = compacted
+    eng, live, vecs, lo, hi = static_equiv
+    ds = RangeDataset(vectors=vecs, lo=lo, hi=hi, queries=sds.queries,
+                      span=sds.span)
+    qlo, qhi = make_queries(ds, mask, 0.15, seed=mask)
+    for route in ("graph", "pruned", "flat"):
+        req = SearchRequest(sds.queries, (qlo, qhi), mask, k=5, ef=64,
+                            route=route)
+        got = s.search(req)
+        want = eng.search(req)
+        np.testing.assert_array_equal(
+            got.ids, _to_ext(want.ids, live),
+            err_msg=f"{iv.mask_name(mask)}/{route}")
+        np.testing.assert_array_equal(got.dists, want.dists,
+                                      err_msg=f"{iv.mask_name(mask)}/{route}")
+        assert got.report.route == "segmented"
+        assert got.report.requested == route
+        assert len(got.report.segments) == 1
+        assert got.report.segments[0].route == route
+        assert got.report.segments[0].tombstones == 0
+
+
+# ---- mid-stream (segments + tombstones + live delta) ----
+
+@pytest.fixture(scope="module")
+def midstream(sds, spec):
+    s, corpus = _streaming_ops(sds, spec)
+    # leave extra churn unflushed: delete a frozen row, upsert two delta rows
+    s.delete(np.array([40]))
+    corpus.pop(40)
+    rng = np.random.default_rng(21)
+    up = np.array([200, 230])
+    upv = (sds.vectors[up]
+           + 0.05 * rng.normal(0, 1, (2, sds.d)).astype(np.float32))
+    s.add(up, upv, sds.lo[up], sds.hi[up])
+    for j, e in enumerate(up):
+        corpus[int(e)] = (upv[j], sds.lo[e], sds.hi[e])
+    assert len(s.segments) == 2 and len(s.delta) == 2
+    return s, corpus
+
+
+@pytest.mark.parametrize("mask", (15, 2, 48))
+def test_midstream_exact_routes_match_brute_force(midstream, sds, mask):
+    """With tombstones live in frozen segments plus an unflushed delta, the
+    exact routes stay recall-1.0: the per-segment k+|tombstones| over-fetch
+    means filtering can never evict a true neighbor."""
+    s, corpus = midstream
+    live, vecs, lo, hi = _live_arrays(corpus)
+    ds = RangeDataset(vectors=vecs, lo=lo, hi=hi, queries=sds.queries,
+                      span=sds.span)
+    qlo, qhi = make_queries(ds, mask, 0.2, seed=100 + mask)
+    tids, tds = brute_force_topk(vecs, lo, hi, sds.queries, qlo, qhi, mask, 5)
+    truth_ext = _to_ext(tids, live)
+    for route in ("pruned", "flat"):
+        res = s.search(SearchRequest(sds.queries, (qlo, qhi), mask, k=5,
+                                     route=route))
+        assert recall_at_k(res.ids, truth_ext) == 1.0, (mask, route)
+        np.testing.assert_allclose(np.sort(res.dists, 1), np.sort(tds, 1),
+                                   rtol=1e-4, atol=1e-4)
+    # graph route is approximate but must stay strong through the fan-out
+    res = s.search(SearchRequest(sds.queries, (qlo, qhi), mask, k=5, ef=96,
+                                 route="graph"))
+    assert recall_at_k(res.ids, truth_ext) >= 0.9
+    segs = {r.segment: r for r in res.report.segments}
+    assert "delta" in segs and segs["delta"].route == "delta"
+    tombed = [r for r in res.report.segments if r.tombstones]
+    assert tombed and all(r.k_fetched > 5 for r in tombed)
+
+
+# ---- acceptance (b): save/load bit-identity ----
+
+def test_save_load_bit_identical_including_delta_and_tombstones(
+        midstream, sds, tmp_path):
+    s, corpus = midstream
+    root = os.path.join(tmp_path, "seg_idx")
+    manifest_path = s.save(root)
+    assert manifest_path.endswith("manifest.json")
+    delta_files = [f for f in os.listdir(root)
+                   if f.startswith("delta-") and f.endswith(".npz")]
+    assert len(delta_files) == 1  # content-named, referenced by the manifest
+    t = SegmentedIndex.load(root)
+    st_a, st_b = s.stats(), t.stats()
+    assert st_a["n_live"] == st_b["n_live"] == len(corpus)
+    assert st_a["segments"] == st_b["segments"]
+    assert st_a["delta"] == st_b["delta"]
+    live, vecs, lo, hi = _live_arrays(corpus)
+    ds = RangeDataset(vectors=vecs, lo=lo, hi=hi, queries=sds.queries,
+                      span=sds.span)
+    for mask in (15, 8, 32):
+        qlo, qhi = make_queries(ds, mask, 0.15, seed=mask)
+        for route in ("graph", "pruned", "flat"):
+            req = SearchRequest(sds.queries, (qlo, qhi), mask, k=6,
+                                route=route)
+            a, b = s.search(req), t.search(req)
+            np.testing.assert_array_equal(a.ids, b.ids, err_msg=f"{mask}/{route}")
+            np.testing.assert_array_equal(a.dists, b.dists,
+                                          err_msg=f"{mask}/{route}")
+
+
+def test_resave_by_different_index_is_never_stale(sds, spec, tmp_path):
+    """Two fresh SegmentedIndex instances mint the same counter-derived
+    segment ids; saving both into one directory must not let the second
+    manifest reference the first index's data (files are content-named)."""
+    root = os.path.join(tmp_path, "idx")
+    a = SegmentedIndex(spec)
+    a.add(np.arange(60), sds.vectors[:60], sds.lo[:60], sds.hi[:60])
+    a.flush()
+    a.save(root)
+    b = SegmentedIndex(spec)
+    b.add(np.arange(60, 120), sds.vectors[60:120], sds.lo[60:120],
+          sds.hi[60:120])
+    b.flush()
+    assert b.segments[0].seg_id == a.segments[0].seg_id  # id collision
+    b.save(root)
+    t = SegmentedIndex.load(root)
+    assert sorted(e for e in range(200) if e in t) == list(range(60, 120))
+    req = SearchRequest(sds.queries, (np.full(8, sds.lo.min()),
+                                      np.full(8, sds.hi.max())), 15, k=4,
+                        route="flat")
+    want, got = b.search(req), t.search(req)
+    np.testing.assert_array_equal(want.ids, got.ids)
+    np.testing.assert_array_equal(want.dists, got.dists)
+    assert (got.ids[got.ids >= 0] >= 60).all()
+
+
+def test_save_load_failure_paths(midstream, tmp_path):
+    s, _ = midstream
+    root = os.path.join(tmp_path, "seg_idx")
+    s.save(root)
+    # corrupting one segment file surfaces as IndexIOError, not KeyError/zip
+    seg_file = os.path.join(
+        root, "segments", sorted(os.listdir(os.path.join(root, "segments")))[0])
+    with open(seg_file, "wb") as f:
+        f.write(b"not a zip archive")
+    with pytest.raises(IndexIOError):
+        SegmentedIndex.load(root)
+    with pytest.raises(IndexIOError):
+        SegmentedIndex.load(os.path.join(tmp_path, "no_such_dir"))
+
+
+# ---- unit: delta buffer ----
+
+def test_delta_buffer_upsert_kill_and_search():
+    rng = np.random.default_rng(0)
+    d = DeltaBuffer()
+    vecs = rng.normal(0, 1, (5, 8)).astype(np.float32)
+    d.add(np.arange(5), vecs, np.zeros(5), np.ones(5))
+    assert len(d) == 5 and 3 in d and 9 not in d
+    assert d.kill(3) and not d.kill(3)  # idempotent
+    d.add(np.array([1]), vecs[:1] * 2, np.array([5.0]), np.array([6.0]))
+    assert len(d) == 4 and d.n_dead == 2  # killed 3, upserted-over 1
+    ext, dv, dlo, dhi = d.live()
+    assert list(ext) == [0, 2, 4, 1]  # arrival order, dead rows gone
+    assert dlo[-1] == 5.0
+    # search only sees live rows; query range [0, 1] excludes the new id 1
+    ids, dist = d.search(vecs[:2], np.zeros(2), np.ones(2), 15, k=4)
+    assert ids.shape == (2, 4)
+    assert set(ids[ids >= 0].tolist()) <= {0, 2, 4}
+    with pytest.raises(ValueError):
+        d.add(np.array([7, 7]), vecs[:2], np.zeros(2), np.ones(2))
+    with pytest.raises(ValueError):
+        d.add(np.array([8]), rng.normal(0, 1, (1, 4)).astype(np.float32),
+              np.zeros(1), np.ones(1))  # dim mismatch
+    with pytest.raises(ValueError):
+        d.add(np.array([9]), vecs[:1], np.ones(1), np.zeros(1))  # lo > hi
+
+
+# ---- unit: compaction policy ----
+
+def test_compaction_policy_pick():
+    p = CompactionPolicy(tier_ratio=4.0, min_merge=2, max_merge=3)
+    assert p.pick([]) == []
+    assert p.pick([100]) == []                      # nothing to merge with
+    assert p.pick([10, 12]) == [0, 1]               # one small tier
+    assert p.pick([10, 12, 1000]) == [0, 1]         # big segment left alone
+    assert set(p.pick([5, 1000, 7, 900, 6])) == {0, 2, 4}
+    assert p.pick([0, 1000]) == [0]                 # dead weight always goes
+    picked = p.pick([3, 0, 1000, 2])
+    assert picked[0] == 1 and set(picked) == {1, 0, 3}  # dead first, then tier
+    assert len(p.pick([1, 1, 1, 1, 1])) == 3        # max_merge cap
+    with pytest.raises(ValueError):
+        CompactionPolicy(tier_ratio=0.5)
+    with pytest.raises(ValueError):
+        CompactionPolicy(min_merge=1)
+
+
+def test_size_tiered_compact_merges_small_segments(sds, spec):
+    s = SegmentedIndex(spec, policy=CompactionPolicy(tier_ratio=4.0))
+    ids = np.arange(N)
+    for a, b in ((0, 120), (120, 150), (150, 180)):
+        s.add(ids[a:b], sds.vectors[a:b], sds.lo[a:b], sds.hi[a:b])
+        s.flush()
+    assert [g.n for g in s.segments] == [120, 30, 30]
+    rep = s.compact()  # policy merges the two 30s, leaves the 120 alone
+    assert rep["rows"] == 60 and len(s.segments) == 2
+    assert {g.n for g in s.segments} == {120, 60}
+    assert len(s) == 180
+    rep2 = s.compact()  # smallest tier is now {60, 120} within ratio 4
+    assert rep2["rows"] == 180 and len(s.segments) == 1
+
+
+# ---- upsert/delete bookkeeping ----
+
+def test_upsert_delete_bookkeeping(sds, spec):
+    s = SegmentedIndex(spec, flush_threshold=50)
+    s.add(np.arange(50), sds.vectors[:50], sds.lo[:50], sds.hi[:50])
+    assert len(s.segments) == 1 and len(s.delta) == 0  # auto-flush fired
+    assert 10 in s and len(s) == 50
+    s.delete(10)
+    assert 10 not in s and len(s) == 49
+    with pytest.raises(KeyError):
+        s.delete(10)                     # already gone, strict by default
+    assert s.delete(10, strict=False) == 0
+    s.add(np.array([10]), sds.vectors[10:11], sds.lo[10:11], sds.hi[10:11])
+    assert 10 in s and len(s) == 50      # re-add after delete
+    res = s.search(SearchRequest(sds.vectors[10:11],
+                                 [[sds.lo[10], sds.hi[10]]], 15, k=1))
+    assert res.ids[0, 0] == 10           # the re-added copy is findable
+    with pytest.raises(TypeError):
+        s.execute("not a request")
+
+
+def test_rejected_upsert_batch_leaves_old_rows_live(sds, spec):
+    """A batch that fails validation must not tombstone/kill the rows it
+    would have replaced (validate-before-discard)."""
+    s = SegmentedIndex(spec)
+    s.add(np.arange(40), sds.vectors[:40], sds.lo[:40], sds.hi[:40])
+    s.flush()
+    s.add(np.arange(40, 44), sds.vectors[40:44], sds.lo[40:44], sds.hi[40:44])
+    before = len(s)
+    with pytest.raises(ValueError):        # inverted range
+        s.add(np.array([5, 41]), sds.vectors[:2],
+              np.array([1.0, 3.0]), np.array([2.0, 2.0]))
+    with pytest.raises(ValueError):        # in-batch duplicate ids
+        s.add(np.array([5, 5]), sds.vectors[:2], sds.lo[:2], sds.hi[:2])
+    with pytest.raises(ValueError):        # dim mismatch
+        s.add(np.array([5]), np.zeros((1, sds.d + 1), np.float32),
+              sds.lo[:1], sds.hi[:1])
+    assert len(s) == before and 5 in s and 41 in s
+    assert not s.segments[0].tombs and s.delta.n_dead == 0
+
+
+def test_graph_route_overfetch_raises_ef_past_tombstones(sds, spec):
+    """With more tombstones than the request's ef, the per-segment beam pool
+    must widen with k_eff or filtering would evict every live neighbor."""
+    s = SegmentedIndex(spec)
+    s.add(np.arange(24), sds.vectors[:24], sds.lo[:24], sds.hi[:24])
+    s.flush()
+    q = sds.vectors[:1]
+    d2 = ((sds.vectors[:24] - q) ** 2).sum(1)
+    s.delete(np.argsort(d2)[:8])           # kill the 8 nearest to the query
+    live = np.array(sorted(e for e in range(24) if e in s))
+    full = (float(sds.lo[:24].min()), float(sds.hi[:24].max()))
+    res = s.search(SearchRequest(q, [full], 15, k=5, ef=5, route="graph"))
+    assert res.report.segments[0].k_fetched == 13   # 5 + 8 tombstones
+    got = res.ids[0][res.ids[0] >= 0]
+    assert len(got) == 5                   # 5 live hits despite ef=5 request
+    assert set(got.tolist()) <= set(live.tolist())
+    want = live[np.argsort(((sds.vectors[live] - q) ** 2).sum(1))[:5]]
+    # beam search is approximate; without the ef raise ~0 live hits survive
+    assert len(set(got.tolist()) & set(want.tolist())) >= 4
+
+
+# ---- serving integration ----
+
+def test_retrieval_server_applies_mutations_before_queries(sds, spec):
+    from repro.serving import RetrievalServer
+
+    s = SegmentedIndex(spec)
+    s.add(np.arange(100), sds.vectors[:100], sds.lo[:100], sds.hi[:100])
+    s.flush()
+    embed_calls = []
+
+    def embed(items):
+        embed_calls.append(list(items))
+        return np.stack([sds.vectors[i] for i in items])
+
+    server = RetrievalServer(s, embed_fn=embed, k=3)
+    assert server.mutable
+    # query for object 120's own vector over its exact range: only findable
+    # if the upsert submitted in the same tick lands first
+    server.submit_upsert(120, 120, float(sds.lo[120]), float(sds.hi[120]))
+    server.submit_delete(7)
+    server.submit(120, float(sds.lo[120]), float(sds.hi[120]), "any_overlap")
+    res = server.tick()
+    assert len(embed_calls) == 1 and embed_calls[0] == [120, 120]
+    assert list(res) == [2]              # only the query slot answers
+    assert res[2].ids[0] == 120
+    assert 7 not in s and 120 in s
+    # frozen engines refuse mutations at submit time
+    static = RetrievalServer(QueryEngine(MSTGIndex.build(
+        spec, sds.vectors[:60], sds.lo[:60], sds.hi[:60])), embed_fn=embed)
+    assert not static.mutable
+    with pytest.raises(TypeError):
+        static.submit_upsert(1, 1, 0.0, 1.0)
+    with pytest.raises(TypeError):
+        static.submit_delete(1)
+
+
+# ---- acceptance (c): exp11 smoke gate ----
+
+def test_exp11_update_benchmark_smoke():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.exp11_updates import RECALL_GATE, run_churn
+    r = run_churn(n=240, d=16, n_queries=8, k=5,
+                  spec=IndexSpec(variants=("T", "Tp"), m=8, ef_con=40))
+    assert r["update_ops_per_sec"] > 0
+    assert r["query_qps_streamed"] > 0
+    assert r["inserted"] == 24 and r["deleted"] == 12
+    assert r["update_recall"] >= RECALL_GATE >= 0.95
+    assert r["compacted_rows"] == 240 + 24 - 12
