@@ -1,0 +1,66 @@
+"""Scheduled-lane perf gate: fail when a smoke metric regresses vs history.
+
+Reads ``BENCH_history.jsonl`` (one JSON record per smoke run, appended by
+``benchmarks.run --smoke --history``) and compares the newest record's
+``--field`` against the best of the last ``--window`` records that carry it
+*and* were measured on the same platform — QPS numbers are not comparable
+across machines, so a cache-miss run whose only prior records came from a
+different box is skipped, not failed. Records from before the field existed are skipped too, and a
+history with fewer than two comparable records passes trivially.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--history", required=True, metavar="PATH",
+                    help="BENCH_history.jsonl path")
+    ap.add_argument("--field", default="graph_qps",
+                    help="history field to gate on (default: graph_qps)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed relative drop, e.g. 0.2 = 20%% (default)")
+    ap.add_argument("--window", type=int, default=5,
+                    help="gate against the best of the last N same-platform "
+                         "records (default 5) so slow regressions can't "
+                         "ratchet the baseline down run by run")
+    args = ap.parse_args()
+
+    try:
+        with open(args.history) as f:
+            lines = [json.loads(line) for line in f if line.strip()]
+    except FileNotFoundError:
+        print(f"ci_gate: no history at {args.history}; skipping")
+        return
+    vals = [(rec.get("commit", "?"), rec[args.field], rec.get("platform"))
+            for rec in lines if rec.get(args.field) is not None]
+    if len(vals) < 2:
+        print(f"ci_gate: {len(vals)} record(s) with {args.field}; skipping")
+        return
+    cur_commit, cur, cur_platform = vals[-1]
+    same_box = [v for v in vals[:-1] if v[2] == cur_platform]
+    if not same_box:
+        print(f"ci_gate: no prior {args.field} record from this platform "
+              f"({cur_platform}); skipping")
+        return
+    # baseline = best of the last window, not just the previous record —
+    # anchoring on the previous run alone would let sub-tolerance
+    # regressions compound silently across runs (a 15%-per-run slide never
+    # trips a 20% gate measured run-over-run)
+    window = same_box[-args.window:]
+    prev_commit, prev = max(((c, v) for c, v, _ in window),
+                            key=lambda t: t[1])
+    floor = (1.0 - args.tolerance) * prev
+    verdict = "OK" if cur >= floor else "REGRESSION"
+    print(f"ci_gate: {args.field} best-of-{len(window)} {prev:.1f} "
+          f"({prev_commit}) -> {cur:.1f} ({cur_commit}); floor {floor:.1f} "
+          f"[{verdict}]")
+    if cur < floor:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Exp. 12 — wavefront graph-search diagnostics (beyond-paper §Perf).
+
+Quantifies the two pathologies the wavefront rework removes from the
+Algorithm-4 loop and the speedup it buys:
+
+* **steps-to-convergence histogram** — per-query convergence steps of the
+  dominant plan slot (the skew is why a single global ``lax.while_loop``
+  makes every query pay for the slowest one);
+* **wasted-eval fraction** — fraction of candidate distance evaluations spent
+  on already-converged rows: the single-loop value (computed analytically
+  from the per-query convergence steps) vs the chunked-compaction driver's
+  actual value;
+* **graph-route QPS** — single-loop vs chunked-compaction engine throughput
+  at a serving-style batch size.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ANY_OVERLAP, SearchRequest
+from repro.core.search import mstg_graph_search_chunked
+from repro.data import make_queries
+
+from .common import K, bench_dataset, bench_engine, bench_index, emit, time_call
+
+SINGLE_LOOP = 0                  # chunk=0 pins the single-while_loop driver
+
+
+def _mixed_queries(ds, mask: int, sel, seed: int = 11):
+    """Query ranges at one selectivity, or a contiguous mix when ``sel`` is a
+    tuple — heterogeneous batches are where convergence skew (and therefore
+    compaction) actually matters."""
+    sels = tuple(sel) if isinstance(sel, (tuple, list)) else (sel,)
+    Q = ds.queries.shape[0]
+    qlo = np.empty(Q)
+    qhi = np.empty(Q)
+    per = max(Q // len(sels), 1)
+    for i, s_ in enumerate(sels):
+        a, b = make_queries(ds, mask, s_, seed=seed + i)
+        part = slice(i * per, Q if i == len(sels) - 1 else (i + 1) * per)
+        qlo[part], qhi[part] = a[part], b[part]
+    return qlo, qhi
+
+
+def wavefront_metrics(eng, ds, mask: int = ANY_OVERLAP, sel=0.05,
+                      ef: int = 64, k: int = K, chunk: int = 16,
+                      fanout: int = 1) -> dict:
+    """Steps/waste diagnostics for the dominant plan slot of one query batch
+    (``sel`` may be a tuple for a mixed-selectivity batch).
+
+    Reused by the smoke lane (``BENCH_smoke.json``'s ``wasted_eval_frac``),
+    so it must stay cheap at smoke sizes.
+    """
+    qlo, qhi = _mixed_queries(ds, mask, sel)
+    slots = eng.plan(mask, qlo, qhi)
+    slot = max(slots, key=lambda s: int(np.sum((s.version >= 0)
+                                               & (s.key_lo <= s.key_hi))))
+    dv = eng.graph_dev(slot.variant)
+    common = dict(k=k, ef=ef, max_steps=(4 * ef + 64) // fanout + 8,
+                  Kpad=dv.meta.Kpad, fanout=fanout)
+    _, _, st_chunked = mstg_graph_search_chunked(
+        dv.tree(), ds.queries, slot.version, slot.key_lo, slot.key_hi,
+        chunk=chunk, with_stats=True, **common)
+    conv = st_chunked["conv_steps"]
+    Q = conv.shape[0]
+    g = max(int(st_chunked["steps"]), 1)
+    # single-loop waste: every row pays all g global steps, only conv of
+    # them advance it
+    wasted_single = 1.0 - float(conv.sum()) / (Q * g)
+    edges = [0, 8, 16, 32, 64, 128, 1 << 30]
+    hist, _ = np.histogram(conv, bins=edges)
+    return {
+        "Q": Q,
+        "slot_variant": slot.variant,
+        "steps_global": int(st_chunked["steps"]),
+        "conv_steps_p50": float(np.percentile(conv, 50)),
+        "conv_steps_p90": float(np.percentile(conv, 90)),
+        "conv_steps_max": int(conv.max(initial=0)),
+        "steps_hist_edges": edges[:-1],
+        "steps_hist": hist.tolist(),
+        "wasted_eval_frac_single": wasted_single,
+        "wasted_eval_frac_chunked": float(st_chunked["wasted_eval_frac"]),
+    }
+
+
+def run():
+    ds = bench_dataset()
+    idx = bench_index(ds)
+    eng = bench_engine(idx, route="graph")
+    mask = ANY_OVERLAP
+    m = wavefront_metrics(eng, ds, mask, sel=(0.02, 0.30))
+    emit("exp12/steps_to_convergence", m["steps_global"],
+         f"p50={m['conv_steps_p50']:.0f};p90={m['conv_steps_p90']:.0f};"
+         f"max={m['conv_steps_max']};hist={m['steps_hist']}")
+    emit("exp12/wasted_eval_frac", m["wasted_eval_frac_single"] * 100,
+         f"single={m['wasted_eval_frac_single']:.3f};"
+         f"chunked={m['wasted_eval_frac_chunked']:.3f}")
+
+    qlo, qhi = make_queries(ds, mask, 0.05, seed=11)
+    Qn = ds.queries.shape[0]
+    for label, chunk in (("single_loop", SINGLE_LOOP), ("chunked16", 16)):
+        req = SearchRequest(ds.queries, (qlo, qhi), mask, k=K, ef=64,
+                            route="graph", chunk=chunk)
+        dt, _ = time_call(eng.search, req)
+        emit(f"exp12/graph_qps_{label}", dt / Qn * 1e6, f"qps={Qn/dt:.1f}")

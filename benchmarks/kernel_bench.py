@@ -30,3 +30,32 @@ def run():
         q, c, lo, hi, ql, qh, ANY_OVERLAP)))
     emit("kernel/pairwise_pallas_interpret", dt * 1e6,
          "correctness-path; TPU perf in dry-run")
+
+    # beam-candidate distances (graph-search inner step, gather left to XLA)
+    S = 24
+    cv = rng.normal(0, 1, (Qn, S, d)).astype(np.float32)
+    dt, _ = time_call(lambda: np.asarray(ops.gathered_l2(q, cv)))
+    emit("kernel/gathered_l2_interpret", dt * 1e6, f"S={S}")
+
+    # fused wavefront step: gather-by-id + L2 + label mask + beam merge
+    wf = _wavefront_step_inputs(rng, Qn, Nn, d, M=S, L=32)
+    dt, _ = time_call(lambda: np.asarray(ops.gathered_topk(*wf)[1]))
+    emit("kernel/gathered_topk_interpret", dt * 1e6, "M=24;L=32")
+    dt, _ = time_call(lambda: np.asarray(ops.gathered_topk_ref(
+        *(jnp.asarray(a) for a in wf))[1]))
+    emit("kernel/gathered_topk_ref_jnp", dt * 1e6, "M=24;L=32")
+
+
+def _wavefront_step_inputs(rng, Q, n, d, M, L):
+    """One plausible wavefront beam step (see repro.kernels.gathered_topk)."""
+    q = rng.normal(0, 1, (Q, d)).astype(np.float32)
+    table = rng.normal(0, 1, (n, d)).astype(np.float32)
+    ids = rng.integers(0, n, (Q, M)).astype(np.int32)
+    avail = np.ones((Q, M), np.int32)
+    b = np.zeros((Q, M), np.int32)
+    e = np.full((Q, M), 10**6, np.int32)
+    ver = np.zeros(Q, np.int32)
+    pool_d = np.sort(rng.random((Q, L)).astype(np.float32), axis=1)
+    pool_ids = rng.integers(0, n, (Q, L)).astype(np.int32)
+    pool_exp = np.zeros((Q, L), bool)
+    return q, table, ids, avail, b, e, ver, pool_ids, pool_d, pool_exp

@@ -41,10 +41,11 @@ def main() -> None:
     from . import (exp1_rrann, exp2_index_cost, exp3_rfann, exp4_ifann,
                    exp5_tsann, exp6_scalability, exp7_selectivity,
                    exp8_distributions, exp9_oracle, exp10_params,
-                   exp11_updates, kernel_bench)
+                   exp11_updates, exp12_wavefront, kernel_bench)
     mods = [exp1_rrann, exp2_index_cost, exp3_rfann, exp4_ifann, exp5_tsann,
             exp6_scalability, exp7_selectivity, exp8_distributions,
-            exp9_oracle, exp10_params, exp11_updates, kernel_bench]
+            exp9_oracle, exp10_params, exp11_updates, exp12_wavefront,
+            kernel_bench]
     print("name,us_per_call,derived")
     failed = 0
     for mod in mods:

@@ -1,7 +1,10 @@
 """``--smoke`` lane: tiny end-to-end benchmark that writes BENCH_smoke.json.
 
 Runs on CPU JAX in CI so the perf trajectory (build time, QPS, recall@10,
-planner µs/query) accumulates as an artifact over time. Includes a planner
+planner µs/query, wavefront graph_qps / wasted_eval_frac) accumulates as an
+artifact over time. QPS rows are best-of-7 (scheduler-noise filter on shared
+CI machines); ``graph_qps`` feeds the scheduled lane's regression gate
+(``benchmarks.ci_gate``). Includes a planner
 microbenchmark at Q=1024 against a faithful reimplementation of the seed's
 per-query scalar loop — the acceptance gate for the vectorized planner is a
 >= 10x speedup, recorded in the JSON.
@@ -104,11 +107,14 @@ def append_history(report: dict, history_path: str) -> dict:
     record = {
         "commit": os.environ.get("GITHUB_SHA", "local")[:12],
         "unix_time": round(report["unix_time"], 1),
+        "platform": report.get("platform"),
         "mask": report.get("mask", iv.mask_name(ANY_OVERLAP)),
         "build_seconds": report["build_seconds"]["total"],
         "planner_speedup": report["planner"]["speedup"],
         "auto_qps": auto.get("qps"),
         "auto_recall_at_10": auto.get("recall_at_10"),
+        "graph_qps": report.get("graph_qps"),
+        "wasted_eval_frac": report.get("wasted_eval_frac"),
         "update_recall": streaming.get("update_recall"),
         "update_ops_per_sec": streaming.get("update_ops_per_sec"),
     }
@@ -121,7 +127,7 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
               n_queries: int = 16, k: int = 10, mask: int = ANY_OVERLAP,
               history_path: str = None) -> dict:
     report: dict = {
-        "schema": 3,
+        "schema": 4,
         "unix_time": time.time(),
         "platform": platform.platform(),
         "mask": iv.mask_name(mask),
@@ -158,11 +164,29 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
                 eng._sel_cache.clear()
                 return eng.search(req)
 
-            dt, res = time_call(cold_search)
+            # best-of-N: this box's CPU is noisily shared, and the
+            # engine_auto >= min(graph, pruned) invariant drowns in
+            # mean-of-N scheduler noise
+            dt, res = time_call(cold_search, repeats=7, best=True)
             row[name] = {"qps": round(n_queries / dt, 1),
                          "recall_at_10": round(res.recall_vs(tids), 4)}
         rrann[f"sel_{int(sel * 100):02d}"] = row
     report["exp1_rrann"] = rrann
+    # headline wavefront fields (tracked by history + the CI perf gate)
+    report["graph_qps"] = rrann["sel_05"]["graph"]["qps"]
+
+    from .exp12_wavefront import wavefront_metrics
+    # mixed-selectivity batch: convergence skew (the thing compaction wins
+    # on) only exists when narrow and wide queries share a batch
+    wf = wavefront_metrics(eng, ds, mask=mask, sel=(0.02, 0.30), ef=64, k=k)
+    report["wasted_eval_frac"] = round(wf["wasted_eval_frac_chunked"], 4)
+    report["wavefront"] = {
+        "steps_global": wf["steps_global"],
+        "conv_steps_p50": round(wf["conv_steps_p50"], 1),
+        "conv_steps_p90": round(wf["conv_steps_p90"], 1),
+        "wasted_eval_frac_single": round(wf["wasted_eval_frac_single"], 4),
+        "wasted_eval_frac_chunked": round(wf["wasted_eval_frac_chunked"], 4),
+    }
 
     # planner microbenchmark (acceptance: >= 10x over the seed scalar loop)
     report["planner"] = {k_: (round(v, 4) if isinstance(v, float) else v)
@@ -189,8 +213,15 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
         jnp.asarray(ql), jnp.asarray(qh), mask)))
     dt_pal, _ = time_call(lambda: np.asarray(ops.pairwise_l2_masked(
         q, c, lo, hi, ql, qh, mask)))
+    from .kernel_bench import _wavefront_step_inputs
+    wf_in = _wavefront_step_inputs(rng, Qn, Nn, dk, M=24, L=32)
+    dt_gtk, _ = time_call(lambda: np.asarray(ops.gathered_topk(*wf_in)[1]))
+    dt_gtk_ref, _ = time_call(lambda: np.asarray(ops.gathered_topk_ref(
+        *(jnp.asarray(a) for a in wf_in))[1]))
     report["kernel"] = {"pairwise_ref_us": round(dt_ref * 1e6, 1),
-                       "pairwise_pallas_interpret_us": round(dt_pal * 1e6, 1)}
+                       "pairwise_pallas_interpret_us": round(dt_pal * 1e6, 1),
+                       "gathered_topk_interpret_us": round(dt_gtk * 1e6, 1),
+                       "gathered_topk_ref_us": round(dt_gtk_ref * 1e6, 1)}
 
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)

@@ -17,14 +17,15 @@ from .intervals import (LEFT_OVERLAP, QUERY_CONTAINED, RIGHT_OVERLAP,
                         RFANN_MASK, IFANN_MASK, TSANN_MASK,
                         AttributeDomain, SearchTask, PlanSlot, plan_searches,
                         plan_batch_ranked, eval_predicate, mask_name,
-                        parse_mask)
+                        parse_mask, SelectivityIndex)
 from .predicates import (Predicate, LeftOverlap, RightOverlap, QueryContained,
                          QueryContaining, Contains, ContainedBy, Overlaps,
                          Before, After, as_predicate, as_mask)
 from .api import (IndexSpec, QueryHit, RouteReport, SearchRequest,
                   SearchResult, SegmentReport)
 from .mstg import MSTGIndex, FrozenVariant, build_variant
-from .search import mstg_graph_search, merge_topk
+from .search import (mstg_graph_search, mstg_graph_search_chunked,
+                     merge_topk)
 from .flat import flat_search
 from .engine import QueryEngine, MSTGSearcher, FlatSearcher
 
@@ -38,10 +39,11 @@ __all__ = [
     "SegmentReport", "IndexSpec",
     # index + engines
     "MSTGIndex", "QueryEngine", "FrozenVariant", "build_variant",
-    "AttributeDomain", "mstg_graph_search", "merge_topk", "flat_search",
+    "AttributeDomain", "mstg_graph_search", "mstg_graph_search_chunked",
+    "merge_topk", "flat_search",
     # planner internals
     "SearchTask", "PlanSlot", "plan_searches", "plan_batch_ranked",
-    "eval_predicate", "mask_name", "parse_mask",
+    "eval_predicate", "mask_name", "parse_mask", "SelectivityIndex",
     # legacy bitmask constants + shims
     "LEFT_OVERLAP", "QUERY_CONTAINED", "RIGHT_OVERLAP", "QUERY_CONTAINING",
     "BEFORE", "AFTER", "ANY_OVERLAP", "RFANN_MASK", "IFANN_MASK", "TSANN_MASK",

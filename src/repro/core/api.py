@@ -51,6 +51,13 @@ class SearchRequest:
     misread as a pair. ``predicate`` accepts a :class:`Predicate`, a raw int
     mask, or a parseable string. Everything is normalized (float32 vectors,
     float64 ranges) at construction.
+
+    ``fanout`` (frontier vertices expanded per wavefront step) and ``chunk``
+    (steps per compaction slice of the chunked graph driver) default to
+    ``None`` — *the engine picks*; pass an explicit int to pin either.
+    ``chunk=0`` pins the single-``lax.while_loop`` driver (``fanout=1,
+    chunk=0`` reproduces the seed's one-expansion single-loop behavior bit
+    for bit).
     """
 
     vectors: np.ndarray
@@ -60,7 +67,8 @@ class SearchRequest:
     ef: int = 64
     route: Optional[str] = None
     max_steps: Optional[int] = None
-    fanout: int = 1
+    fanout: Optional[int] = None
+    chunk: Optional[int] = None
 
     def __post_init__(self):
         vecs = np.ascontiguousarray(self.vectors, dtype=np.float32)
@@ -82,6 +90,11 @@ class SearchRequest:
             raise ValueError("k must be >= 1")
         if self.ef < 1:
             raise ValueError("ef must be >= 1")
+        if self.fanout is not None and self.fanout < 1:
+            raise ValueError("fanout must be >= 1 (or None: engine decides)")
+        if self.chunk is not None and self.chunk < 0:
+            raise ValueError("chunk must be >= 1, 0 (pin the single-loop "
+                             "driver), or None (engine decides)")
         object.__setattr__(self, "vectors", vecs)
         object.__setattr__(self, "ranges", rng)
         object.__setattr__(self, "predicate", as_predicate(self.predicate))

@@ -15,11 +15,19 @@ One object owns everything a request needs:
   planner (:func:`repro.core.intervals.plan_batch_ranked`), every task slot is
   executed on its variant, and slot results are merged with
   :func:`repro.core.search.merge_topk`;
-* **routing** — ``route="auto"`` estimates predicate selectivity from a fixed
-  corpus sample (memoized per ``(mask, rank-quantized query range)`` so
-  repeated serving traffic never re-evaluates the sample predicate) and sends
+* **routing** — ``route="auto"`` estimates predicate selectivity *before any
+  device work* from an O(1)-per-query exact rank-prefix table over a fixed
+  corpus sample (:class:`repro.core.intervals.SelectivityIndex`; additionally
+  memoized per ``(mask, rank-quantized query range)``) and sends
   low-selectivity batches to the exact pruned scan (work ∝ selectivity,
-  recall 1.0) and everything else to the TPU beam search;
+  recall 1.0) and everything else to the wavefront beam search — an
+  auto-routed request executes the identical plan as pinning the route it
+  selects;
+* **wavefront execution** — the graph route resolves ``fanout`` (backend
+  heuristic), skips plan slots whose tasks are all empty before dispatch,
+  and chunks large batches through
+  :func:`repro.core.search.mstg_graph_search_chunked` so converged queries
+  are compacted out of the active batch between step slices;
 * **jit-cache reuse** — query batches are padded up to power-of-two buckets so
   a serving process sees one trace per (mask, route, k, ef, bucket) instead of
   one per distinct batch size; padded queries carry empty tasks and cost no
@@ -48,7 +56,8 @@ from .flat import _pruned_search_variant, flat_search
 from .hnsw import NO_EDGE
 from .mstg import MSTGIndex
 from .predicates import as_mask
-from .search import DeviceVariant, merge_topk, mstg_graph_search
+from .search import (DeviceVariant, merge_topk, mstg_graph_search,
+                     mstg_graph_search_chunked)
 
 ROUTE_AUTO = "auto"
 ROUTE_GRAPH = "graph"
@@ -99,28 +108,73 @@ class QueryEngine:
         Route distance evaluation through the Pallas kernels.
     route : str
         Default routing policy: ``auto`` | ``graph`` | ``pruned`` | ``flat``.
-    flat_threshold : float
-        ``auto`` sends a batch to the exact pruned scan when its mean
-        estimated selectivity is at or below this fraction of the corpus.
+    flat_threshold : float, optional
+        ``None`` (default): ``auto`` routes by a work model — the exact
+        pruned scan is chosen while its estimated per-query work
+        (``mean_selectivity * n`` candidate distances) stays below
+        ``route_work_ratio *`` the beam search's (``ef * S``). Pass a float
+        for the legacy rule: pruned whenever mean estimated selectivity is
+        at or below that fixed fraction of the corpus.
+    route_work_ratio : float
+        Work-model scan/beam crossover multiplier (only used when
+        ``flat_threshold`` is None).
     selectivity_sample : int
         Corpus sample size for the selectivity estimator (whole corpus when
         smaller, making the estimate exact).
     pad_queries : bool
         Pad batches to power-of-two sizes so jit traces are reused across
         ragged serving batches.
+    graph_fanout : int, optional
+        Frontier vertices the wavefront graph search expands per step when a
+        request leaves ``fanout=None``. ``None`` (default) picks per
+        backend: ``max(1, min(8, ef // 16))`` on TPU (wide steps amortize
+        loop latency), 1 elsewhere (per-step op cost dominates).
+    graph_chunk : int | "auto" | None
+        Steps per compaction slice of the chunked graph driver; between
+        slices converged query rows are repacked out of the active batch
+        (power-of-two buckets). ``None`` disables chunking (single
+        ``lax.while_loop`` to global convergence); ``"auto"`` (default)
+        chunks at 16 steps once the padded batch reaches 64 queries — below
+        that the per-slice dispatch overhead outweighs the compaction
+        savings. Results are bit-identical in every mode.
+    packed_visited : bool
+        Use the bit-packed ``(Q, ceil(n/32))`` uint32 visited bitmap (n/8
+        bytes per query) instead of the dense ``(Q, n)`` bool reference
+        array. Results are bit-identical; the dense path exists for property
+        tests and as a fallback.
     """
 
     def __init__(self, index: MSTGIndex, use_kernel: bool = False,
-                 route: str = ROUTE_AUTO, flat_threshold: float = 0.05,
+                 route: str = ROUTE_AUTO,
+                 flat_threshold: Optional[float] = None,
                  selectivity_sample: int = 2048, pad_queries: bool = True,
-                 sel_cache_max: int = 65536):
+                 sel_cache_max: int = 65536,
+                 graph_fanout: Optional[int] = None,
+                 graph_chunk: Union[int, str, None] = "auto",
+                 packed_visited: bool = True,
+                 route_work_ratio: float = 1.0):
         if route not in _ROUTES:
             raise ValueError(f"route must be one of {_ROUTES}, got {route!r}")
+        if graph_fanout is not None and graph_fanout < 1:
+            raise ValueError("graph_fanout must be >= 1 (or None: backend "
+                             f"heuristic), got {graph_fanout!r}")
+        if not (graph_chunk is None or graph_chunk == "auto"
+                or (isinstance(graph_chunk, int) and graph_chunk >= 0)):
+            raise ValueError("graph_chunk must be an int >= 1, 0/None "
+                             "(single-loop driver), or \"auto\", got "
+                             f"{graph_chunk!r}")
         self.index = index
         self.use_kernel = use_kernel
         self.default_route = route
-        self.flat_threshold = float(flat_threshold)
+        self.flat_threshold = (None if flat_threshold is None
+                               else float(flat_threshold))
+        self.route_work_ratio = float(route_work_ratio)
+        self._max_slots = max((fv.nbr.shape[2]
+                               for fv in index.variants.values()), default=16)
         self.pad_queries = pad_queries
+        self.graph_fanout = graph_fanout
+        self.graph_chunk = graph_chunk
+        self.packed_visited = bool(packed_visited)
 
         self.corpus = jnp.asarray(index.vectors, jnp.float32)
         self.lo = jnp.asarray(index.lo, jnp.float32)
@@ -137,6 +191,15 @@ class QueryEngine:
                else np.random.default_rng(0).choice(n, size=m, replace=False))
         self._sample_lo = np.asarray(index.lo)[sel]
         self._sample_hi = np.asarray(index.hi)[sel]
+        # O(1)-per-query exact selectivity over the sample via a 2-D rank
+        # prefix table — consulted before any device work, so the auto
+        # router's cold path costs microseconds, not a sample scan. Falls
+        # back to the eval_predicate scan for very large domains.
+        dom = index.domain
+        self._sel_index: Optional[iv.SelectivityIndex] = None
+        if dom.K <= 2048:
+            self._sel_index = iv.SelectivityIndex(
+                dom.rank(self._sample_lo), dom.rank(self._sample_hi), dom.K)
         self.route_counts: Dict[str, int] = {ROUTE_GRAPH: 0, ROUTE_PRUNED: 0,
                                              ROUTE_FLAT: 0}
         # selectivity memo: (mask, fl, cl, fr, cr) -> sample fraction. The
@@ -207,10 +270,14 @@ class QueryEngine:
                 hits += 1
         if miss:
             mi = np.asarray(miss)
-            hit = iv.eval_predicate(mask, self._sample_lo[None, :],
-                                    self._sample_hi[None, :],
-                                    ql[mi][:, None], qh[mi][:, None])
-            est = np.asarray(hit, np.float64).mean(axis=1)
+            if self._sel_index is not None:
+                est = self._sel_index.fraction(mask, fl[mi], cl[mi],
+                                               fr[mi], cr[mi])
+            else:
+                hit = iv.eval_predicate(mask, self._sample_lo[None, :],
+                                        self._sample_hi[None, :],
+                                        ql[mi][:, None], qh[mi][:, None])
+                est = np.asarray(hit, np.float64).mean(axis=1)
             for j, i in enumerate(miss):
                 v = float(est[j])
                 self._sel_cache[(mask, fl[i], cl[i], fr[i], cr[i])] = v
@@ -225,16 +292,35 @@ class QueryEngine:
         self.sel_cache_misses += len(miss)
         return out, hits, len(miss)
 
-    def _auto_route(self, est: np.ndarray) -> str:
-        """The one auto-routing rule shared by route_for() and execute()."""
-        return (ROUTE_PRUNED if float(est.mean()) <= self.flat_threshold
+    def _auto_route(self, est: np.ndarray, ef: int = 64) -> str:
+        """The one auto-routing rule shared by route_for() and execute().
+
+        With an explicit ``flat_threshold`` this is the legacy fixed-fraction
+        rule. The default is a *work model*: the pruned scan evaluates
+        ~``est * n`` candidate distances per query while the beam search
+        evaluates ~``ef * S`` (S = adjacency slots), so route to the exact
+        scan whenever its estimated work is below ``route_work_ratio`` times
+        the beam's — at small corpora the scan wins far beyond any fixed 5%
+        selectivity cutoff, and at millions of rows the crossover drops to
+        fractions of a percent, exactly as it should."""
+        if self.flat_threshold is not None:
+            return (ROUTE_PRUNED if float(est.mean()) <= self.flat_threshold
+                    else ROUTE_GRAPH)
+        scan_work = float(est.mean()) * self.index.vectors.shape[0]
+        beam_work = float(ef) * self._max_slots
+        return (ROUTE_PRUNED if scan_work <= self.route_work_ratio * beam_work
                 else ROUTE_GRAPH)
 
-    def route_for(self, mask, qlo, qhi, route: Optional[str] = None) -> str:
+    def route_for(self, mask, qlo, qhi, route: Optional[str] = None,
+                  ef: int = 64) -> str:
+        """Advisory routing answer. Pass the request's actual ``ef`` — the
+        work model weighs beam work by it, so the default (64, matching
+        ``SearchRequest``'s default) only mirrors ``execute()`` for requests
+        that keep that default."""
         route = route or self.default_route
         if route != ROUTE_AUTO:
             return route
-        return self._auto_route(self.estimate_selectivity(mask, qlo, qhi))
+        return self._auto_route(self.estimate_selectivity(mask, qlo, qhi), ef)
 
     # ---- execution ----
     def search(self, request: Union[SearchRequest, np.ndarray],
@@ -282,7 +368,7 @@ class QueryEngine:
         route = requested
         if requested == ROUTE_AUTO and Q:
             est, hits, misses = self._estimate_cached(mask, qlo, qhi)
-            route = self._auto_route(est)
+            route = self._auto_route(est, request.ef)
         if Q == 0:
             ids, d = _empty_result(0, k)
             return SearchResult(ids, d, RouteReport(
@@ -298,7 +384,7 @@ class QueryEngine:
         elif route == ROUTE_GRAPH:
             ids, d = self._run_graph(queries, qlo, qhi, mask, k, request.ef,
                                      request.max_steps, request.fanout,
-                                     slots=slots)
+                                     slots=slots, chunk=request.chunk)
         else:
             raise ValueError(f"unknown route {route!r}")
         report = RouteReport(route=route, requested=requested,
@@ -367,23 +453,54 @@ class QueryEngine:
                 np.concatenate([s.key_hi, np.zeros(pad, np.int64)])))
         return out
 
+    def _resolve_fanout(self, ef: int, fanout: Optional[int]) -> int:
+        """Wavefront width: an explicit request value wins, then the engine
+        override, then a backend heuristic — on TPU wide steps amortize loop
+        latency over fanout x S distance evals (total expansions stay ~ef
+        either way); on CPU the per-step op cost grows with the width, so
+        the narrow frontier is the fast one."""
+        if fanout:
+            return max(1, int(fanout))
+        if self.graph_fanout:
+            return max(1, int(self.graph_fanout))
+        import jax
+        if jax.default_backend() == "tpu":
+            return max(1, min(8, ef // 16))
+        return 1
+
     def _run_graph(self, queries, qlo, qhi, mask, k, ef, max_steps, fanout,
-                   slots: Optional[List[iv.PlanSlot]] = None):
+                   slots: Optional[List[iv.PlanSlot]] = None,
+                   chunk: Optional[int] = None):
         if slots is None:
             slots = self.plan(mask, qlo, qhi)
+        F = self._resolve_fanout(ef, fanout)
+        chunk = chunk if chunk is not None else self.graph_chunk
         queries_p, _, _ = self._padded(queries, qlo, qhi)
+        if chunk == "auto":  # compaction pays once the batch is wide enough
+            chunk = 16 if queries_p.shape[0] >= 64 else None
         slots = self._padded_slots(slots, queries_p.shape[0])
-        steps = max_steps or ((4 * ef + 64) // max(fanout, 1) + 8)
+        steps = max_steps or ((4 * ef + 64) // F + 8)
         qdev = jnp.asarray(queries_p)
         res = None
         for s in slots:
+            # skip slots where every query's task is empty before any device
+            # work (empty tasks produce all-NO_EDGE rows; merging them is a
+            # no-op, so skipping is result-identical)
+            if not np.any((s.version >= 0) & (s.key_lo <= s.key_hi)):
+                continue
             dv = self.graph_dev(s.variant)
-            ids, d = mstg_graph_search(
-                dv.tree(), qdev, jnp.asarray(s.version, jnp.int32),
-                jnp.asarray(s.key_lo, jnp.int32),
-                jnp.asarray(s.key_hi, jnp.int32),
-                k=k, ef=ef, max_steps=steps, Kpad=dv.meta.Kpad,
-                use_kernel=self.use_kernel, fanout=fanout)
+            common = dict(k=k, ef=ef, max_steps=steps, Kpad=dv.meta.Kpad,
+                          use_kernel=self.use_kernel, fanout=F,
+                          packed=self.packed_visited)
+            if chunk and chunk < steps:
+                ids, d = mstg_graph_search_chunked(
+                    dv.tree(), qdev, s.version, s.key_lo, s.key_hi,
+                    chunk=int(chunk), **common)
+            else:
+                ids, d = mstg_graph_search(
+                    dv.tree(), qdev, jnp.asarray(s.version, jnp.int32),
+                    jnp.asarray(s.key_lo, jnp.int32),
+                    jnp.asarray(s.key_hi, jnp.int32), **common)
             res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
         if res is None:
             return _empty_result(queries_p.shape[0], k)

@@ -1,8 +1,8 @@
-"""Batched MSTG graph search in JAX (paper Algorithm 4, generalized §4.1/§4.4).
+"""Wavefront MSTG graph search in JAX (paper Algorithm 4, generalized §4.1/§4.4).
 
-TPU-native execution of the paper's search: one ``lax.while_loop`` advances a
-whole query batch; each step expands the closest unexpanded pool vertex per
-query with
+TPU-native execution of the paper's search: a ``lax.while_loop`` advances a
+whole query batch; each step expands the ``fanout`` closest unexpanded pool
+vertices per query with
 
     1. one gather from the per-level labeled adjacency (the decomposition nodes
        are disjoint, so a vertex's neighbors live at exactly one level),
@@ -13,11 +13,28 @@ query with
 
 Termination matches Algorithm 4: a query is done when its L best are all
 expanded. Results for two-task plans (Theorem 4.1) are merged with id-dedupe.
+
+Beyond the seed implementation, this module is a *wavefront engine*:
+
+* **bit-packed visited sets** — the per-query visited structure is a
+  ``(Q, ceil(n/32))`` uint32 bitmap instead of a dense ``(Q, n)`` bool array
+  (8x smaller state, cheaper while-loop carries; ``packed=False`` keeps the
+  dense reference path, property-tested bit-identical).
+* **chunked execution + active-batch compaction** —
+  :func:`mstg_graph_search_chunked` runs the loop in fixed-size step chunks
+  and, between chunks, repacks the still-active query rows into a smaller
+  power-of-two bucket, so converged queries stop paying gather + distance
+  cost while the slowest queries finish. Per-row trajectories are
+  independent, so chunked results are bit-identical to the single-loop ones.
+* **fused merge kernel** — with ``use_kernel=True`` the per-step gather →
+  distance → label-mask → pool-merge chain runs as one Pallas kernel
+  (:mod:`repro.kernels.gathered_topk`) instead of a gather + einsum +
+  concat + ``top_k(L + F*S)`` op chain.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -63,46 +80,78 @@ def _batched_l2(queries: jnp.ndarray, cand_vecs: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("qsd,qsd->qs", diff, diff)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps", "Kpad",
-                                              "use_kernel", "fanout",
-                                              "with_steps"))
-def mstg_graph_search(arrays: dict, queries: jnp.ndarray, version: jnp.ndarray,
-                      key_lo: jnp.ndarray, key_hi: jnp.ndarray, *, k: int,
-                      ef: int, max_steps: int, Kpad: int,
-                      use_kernel: bool = False, fanout: int = 1,
-                      with_steps: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Batched beam search on one MSTG variant.
-
-    arrays   : DeviceVariant.tree()
-    queries  : (Q, d) float32
-    version  : (Q,) int32 — max valid sort rank (< 0 => empty task)
-    key_lo/hi: (Q,) int32 — inclusive tree-key range (lo > hi => empty)
-    fanout   : frontier vertices expanded per loop step (beyond-paper: TPU
-               amortizes loop latency over fanout x S distance evals; see
-               EXPERIMENTS.md §Perf)
-    returns  : ids (Q, k) int32 (NO_EDGE pad), dists (Q, k) float32 (+inf pad)
-    """
-    vectors = arrays["vectors"]
-    tkey = arrays["tkey"]
-    nbr, lab_b, lab_e = arrays["nbr"], arrays["lab_b"], arrays["lab_e"]
-    entry_ids, entry_ver = arrays["entry_ids"], arrays["entry_ver"]
-    n = vectors.shape[0]
-    Q = queries.shape[0]
-    S = nbr.shape[2]
-    L = ef
-    version = version.astype(jnp.int32)
-
+def _dist_fn(use_kernel: bool):
+    """The one candidate-distance dispatch shared by every driver (the
+    single-shot search, the chunked init, and the chunk runner must stay on
+    the same path for their bit-identity contract)."""
     if use_kernel:
         from repro.kernels import ops as kops
-        dist_fn = lambda q, c: kops.gathered_l2(q, c)
-    else:
-        dist_fn = _batched_l2
+        return lambda q, c: kops.gathered_l2(q, c)
+    return _batched_l2
 
-    # --- decomposition nodes per query ---
-    levels, idxs, valid = jax.vmap(lambda a, b: st.decompose_jax(a, b, Kpad))(key_lo, key_hi)
-    P = levels.shape[1]
 
-    # --- initial pool from per-node entry points ---
+# ---- bit-packed visited sets ------------------------------------------------
+
+def packed_words(n: int) -> int:
+    """uint32 words per query row of a packed visited bitmap (n/8 bytes)."""
+    return (int(n) + 31) // 32
+
+
+def _visited_init(Q: int, n: int, packed: bool):
+    if packed:
+        return jnp.zeros((Q, packed_words(n)), jnp.uint32)
+    return jnp.zeros((Q, n), bool)
+
+
+def _visited_get(visited, qix, ids, packed: bool):
+    """(Q, M) bool: is each (clamped, >=0) id already visited in its row."""
+    if packed:
+        w = visited[qix[:, None], ids >> 5]
+        return ((w >> (ids & 31).astype(jnp.uint32)) & jnp.uint32(1)) != 0
+    return visited[qix[:, None], ids]
+
+
+def _visited_set(visited, qix, ids, mark, packed: bool):
+    """Set the bits for ``ids`` where ``mark``. Marked ids must be unique per
+    row and not yet visited (the callers guarantee both), so the packed
+    scatter-add touches each bit at most once and equals a scatter-OR."""
+    if packed:
+        bit = jnp.uint32(1) << (ids & 31).astype(jnp.uint32)
+        upd = jnp.where(mark, bit, jnp.uint32(0))
+        return visited.at[qix[:, None], ids >> 5].add(upd)
+    return visited.at[qix[:, None], ids].max(mark)
+
+
+def _first_occurrence(ids):
+    """(Q, M) bool: True at the first occurrence of each value per row.
+    O(M^2) pairwise compare — far cheaper than the sort/inverse-sort
+    formulation for the small M = fanout * slots widths of the step loop."""
+    eq = ids[:, :, None] == ids[:, None, :]
+    earlier = jnp.tril(jnp.ones((ids.shape[1], ids.shape[1]), bool), k=-1)
+    return ~jnp.any(eq & earlier[None], axis=2)
+
+
+# ---- search state construction ----------------------------------------------
+
+def _active_rows(pool_d, expanded):
+    """A query is live while any finite pool entry is unexpanded."""
+    return jnp.any(~expanded & jnp.isfinite(pool_d), axis=1)
+
+
+def _plan_nodes(key_lo, key_hi, Kpad: int):
+    """Per-query canonical decomposition + covered key ranges (loop-invariant,
+    computed once and carried beside the mutable state)."""
+    levels, idxs, valid = jax.vmap(
+        lambda a, b: st.decompose_jax(a, b, Kpad))(key_lo, key_hi)
+    start, end = st.node_ranges_jax(levels, idxs, Kpad)
+    return levels, idxs, valid, start, end
+
+
+def _init_state(vectors, entry_ids, entry_ver, queries, version,
+                levels, idxs, valid, *, L: int, dist_fn, packed: bool):
+    """Initial pool from per-node entry points + visited marking."""
+    Q = queries.shape[0]
+    n = vectors.shape[0]
     ent = entry_ids[levels, idxs]            # (Q, P, E)
     ever = entry_ver[levels, idxs]           # (Q, P, E)
     ent_ok = valid[:, :, None] & (ent != NO_EDGE) & (ever <= version[:, None, None])
@@ -121,22 +170,33 @@ def mstg_graph_search(arrays: dict, queries: jnp.ndarray, version: jnp.ndarray,
     pool_d = pool_d.at[:, :take].set(jnp.take_along_axis(ed, order, 1)[:, :take])
     expanded = jnp.zeros((Q, L), bool)
 
-    visited = jnp.zeros((Q, n), bool)
     qix = jnp.arange(Q)
-    ent_safe = jnp.where(ent == NO_EDGE, 0, ent)
-    visited = visited.at[qix[:, None], ent_safe].max(ent != NO_EDGE)
+    mark = ent != NO_EDGE
+    ent_safe = jnp.where(mark, ent, 0)
+    if packed:
+        # entries across disjoint decomposition nodes are distinct vertices;
+        # the dedupe is defensive (a duplicate would double-add its bit)
+        sentinel = jnp.where(mark, ent, n + jnp.arange(ent.shape[1])[None, :])
+        mark = mark & _first_occurrence(sentinel)
+    visited = _visited_init(Q, n, packed)
+    visited = _visited_set(visited, qix, ent_safe, mark, packed)
+    alive_steps = jnp.zeros((Q,), jnp.int32)
+    return pool_ids, pool_d, expanded, visited, alive_steps
 
-    def active_fn(pool_d, expanded):
-        return jnp.any(~expanded & jnp.isfinite(pool_d), axis=1)
 
-    def cond(state):
-        pool_ids, pool_d, expanded, visited, step = state
-        return (step < max_steps) & jnp.any(active_fn(pool_d, expanded))
-
-    F = fanout
+def _make_body(vectors, tkey, nbr, lab_b, lab_e, queries, version,
+               levels, idxs, valid, start, end, *, L: int, F: int,
+               dist_fn, packed: bool, use_kernel: bool):
+    """The per-step wavefront body, shared by the single-shot and chunked
+    drivers. State: (pool_ids, pool_d, expanded, visited, alive_steps, step)."""
+    Q = queries.shape[0]
+    S = nbr.shape[2]
+    n = vectors.shape[0]
+    qix = jnp.arange(Q)
 
     def body(state):
-        pool_ids, pool_d, expanded, visited, step = state
+        pool_ids, pool_d, expanded, visited, alive_steps, step = state
+        alive_steps = alive_steps + _active_rows(pool_d, expanded).astype(jnp.int32)
         frontier_d = jnp.where(expanded, INF, pool_d)
         # expand the F closest unexpanded pool vertices at once
         neg_fd, slot = jax.lax.top_k(-frontier_d, F)               # (Q, F)
@@ -146,7 +206,6 @@ def mstg_graph_search(arrays: dict, queries: jnp.ndarray, version: jnp.ndarray,
         expanded = expanded.at[qix[:, None], slot].max(act)
 
         # which decomposition node covers u -> its level   (Q, F)
-        start, end = st.node_ranges_jax(levels, idxs, Kpad)        # (Q, P)
         t = tkey[u_safe][..., None]                                # (Q, F, 1)
         inside = (valid[:, None, :] & (t >= start[:, None, :]) &
                   (t <= end[:, None, :]))                          # (Q, F, P)
@@ -159,43 +218,250 @@ def mstg_graph_search(arrays: dict, queries: jnp.ndarray, version: jnp.ndarray,
         ok &= (b <= version[:, None]) & (version[:, None] <= e)
         tg_safe = jnp.where(ok, tg, 0)
         # dedupe within the step: keep only the first occurrence of each id
-        seen = visited[qix[:, None], tg_safe]
+        # (one vertex's slot list never repeats a live target, so F == 1
+        # needs no dedupe; across fanout rows targets can collide). Invalid
+        # slots get out-of-range sentinels so they can never shadow the real
+        # corpus vertex 0 (the 0-fill of tg_safe would).
+        seen = _visited_get(visited, qix, tg_safe, packed)
         if F > 1:
-            first = jnp.ones_like(ok)
-            srt = jnp.argsort(tg_safe, axis=1)
-            tg_sorted = jnp.take_along_axis(tg_safe, srt, 1)
-            dup_sorted = jnp.concatenate(
-                [jnp.zeros((Q, 1), bool),
-                 tg_sorted[:, 1:] == tg_sorted[:, :-1]], axis=1)
-            inv = jnp.argsort(srt, axis=1)
-            first = ~jnp.take_along_axis(dup_sorted, inv, 1)
-            ok &= first
+            sentinel = jnp.where(
+                ok, tg, n + jnp.arange(F * S, dtype=jnp.int32)[None, :])
+            ok &= _first_occurrence(sentinel)
         new = ok & ~seen
-        visited = visited.at[qix[:, None], tg_safe].max(new)
+        visited = _visited_set(visited, qix, tg_safe, new, packed)
 
-        nd = dist_fn(queries, vectors[tg_safe])
-        nd = jnp.where(new, nd, INF)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            pool_ids, pool_d, expanded = kops.gathered_topk(
+                queries, vectors, tg, new, b, e, version,
+                pool_ids, pool_d, expanded)
+        else:
+            nd = dist_fn(queries, vectors[tg_safe])
+            nd = jnp.where(new, nd, INF)
+            cat_ids = jnp.concatenate(
+                [pool_ids, jnp.where(new, tg, NO_EDGE)], axis=1)
+            cat_d = jnp.concatenate([pool_d, nd], axis=1)
+            cat_exp = jnp.concatenate(
+                [expanded, jnp.zeros((Q, F * S), bool)], axis=1)
+            neg, order = jax.lax.top_k(-cat_d, L)
+            pool_ids = jnp.take_along_axis(cat_ids, order, 1)
+            pool_d = -neg
+            expanded = jnp.take_along_axis(cat_exp, order, 1)
+        return pool_ids, pool_d, expanded, visited, alive_steps, step + 1
 
-        cat_ids = jnp.concatenate([pool_ids, jnp.where(new, tg, NO_EDGE)], axis=1)
-        cat_d = jnp.concatenate([pool_d, nd], axis=1)
-        cat_exp = jnp.concatenate([expanded, jnp.zeros((Q, F * S), bool)], axis=1)
-        neg, order = jax.lax.top_k(-cat_d, L)
-        pool_ids = jnp.take_along_axis(cat_ids, order, 1)
-        pool_d = -neg
-        expanded = jnp.take_along_axis(cat_exp, order, 1)
-        return pool_ids, pool_d, expanded, visited, step + 1
+    return body
 
-    state = (pool_ids, pool_d, expanded, visited, jnp.array(0, jnp.int32))
-    pool_ids, pool_d, expanded, visited, n_steps = jax.lax.while_loop(
-        cond, body, state)
+
+# ---- single-shot driver (one jitted call, runs to global convergence) -------
+
+@functools.partial(jax.jit, static_argnames=("k", "ef", "max_steps", "Kpad",
+                                              "use_kernel", "fanout",
+                                              "with_steps", "packed"))
+def mstg_graph_search(arrays: dict, queries: jnp.ndarray, version: jnp.ndarray,
+                      key_lo: jnp.ndarray, key_hi: jnp.ndarray, *, k: int,
+                      ef: int, max_steps: int, Kpad: int,
+                      use_kernel: bool = False, fanout: int = 1,
+                      with_steps: bool = False,
+                      packed: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched beam search on one MSTG variant.
+
+    arrays   : DeviceVariant.tree()
+    queries  : (Q, d) float32
+    version  : (Q,) int32 — max valid sort rank (< 0 => empty task)
+    key_lo/hi: (Q,) int32 — inclusive tree-key range (lo > hi => empty)
+    fanout   : frontier vertices expanded per loop step (beyond-paper: TPU
+               amortizes loop latency over fanout x S distance evals; see
+               EXPERIMENTS.md §Perf)
+    packed   : bit-packed (Q, ceil(n/32)) uint32 visited bitmap (default) vs
+               the dense (Q, n) bool reference — bit-identical results
+    returns  : ids (Q, k) int32 (NO_EDGE pad), dists (Q, k) float32 (+inf pad)
+    """
+    vectors = arrays["vectors"]
+    version = version.astype(jnp.int32)
+    L = ef
+    dist_fn = _dist_fn(use_kernel)
+    levels, idxs, valid, start, end = _plan_nodes(key_lo, key_hi, Kpad)
+    pool_ids, pool_d, expanded, visited, alive_steps = _init_state(
+        vectors, arrays["entry_ids"], arrays["entry_ver"], queries, version,
+        levels, idxs, valid, L=L, dist_fn=dist_fn, packed=packed)
+
+    body = _make_body(vectors, arrays["tkey"], arrays["nbr"], arrays["lab_b"],
+                      arrays["lab_e"], queries, version, levels, idxs, valid,
+                      start, end, L=L, F=fanout, dist_fn=dist_fn,
+                      packed=packed, use_kernel=use_kernel)
+
+    def cond(state):
+        pool_ids, pool_d, expanded, visited, alive_steps, step = state
+        return (step < max_steps) & jnp.any(_active_rows(pool_d, expanded))
+
+    state = (pool_ids, pool_d, expanded, visited, alive_steps,
+             jnp.array(0, jnp.int32))
+    pool_ids, pool_d, expanded, visited, alive_steps, n_steps = \
+        jax.lax.while_loop(cond, body, state)
     if with_steps:
         return pool_ids[:, :k], pool_d[:, :k], n_steps
     return pool_ids[:, :k], pool_d[:, :k]
 
 
+# ---- chunked driver (wavefront compaction between chunks) -------------------
+
+@functools.partial(jax.jit, static_argnames=("ef", "Kpad", "use_kernel",
+                                              "packed"))
+def _graph_init(arrays, queries, version, key_lo, key_hi, *, ef, Kpad,
+                use_kernel, packed):
+    version = version.astype(jnp.int32)
+    dist_fn = _dist_fn(use_kernel)
+    levels, idxs, valid, start, end = _plan_nodes(key_lo, key_hi, Kpad)
+    pool_ids, pool_d, expanded, visited, alive_steps = _init_state(
+        arrays["vectors"], arrays["entry_ids"], arrays["entry_ver"], queries,
+        version, levels, idxs, valid, L=ef, dist_fn=dist_fn, packed=packed)
+    nodes = (levels, idxs, valid, start, end)
+    state = (pool_ids, pool_d, expanded, visited, alive_steps,
+             jnp.array(0, jnp.int32))
+    return nodes, state, _active_rows(pool_d, expanded)
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "Kpad", "use_kernel",
+                                              "fanout", "packed"))
+def _graph_chunk(arrays, queries, version, nodes, state, limit, *, ef, Kpad,
+                 use_kernel, fanout, packed):
+    """Advance ``state`` by up to ``limit`` (dynamic) steps, returning the new
+    state, per-row active flags, and the number of steps actually run."""
+    version = version.astype(jnp.int32)
+    dist_fn = _dist_fn(use_kernel)
+    levels, idxs, valid, start, end = nodes
+    body = _make_body(arrays["vectors"], arrays["tkey"], arrays["nbr"],
+                      arrays["lab_b"], arrays["lab_e"], queries, version,
+                      levels, idxs, valid, start, end, L=ef, F=fanout,
+                      dist_fn=dist_fn, packed=packed, use_kernel=use_kernel)
+    step0 = state[-1]
+    bound = step0 + limit.astype(jnp.int32)
+
+    def cond(state):
+        pool_ids, pool_d, expanded, visited, alive_steps, step = state
+        return (step < bound) & jnp.any(_active_rows(pool_d, expanded))
+
+    state = jax.lax.while_loop(cond, body, state)
+    return state, _active_rows(state[1], state[2]), state[-1] - step0
+
+
+@jax.jit
+def _gather_rows(tree, idx):
+    """Row-compact a state pytree (retraces per (shape-in, bucket) pair; both
+    are power-of-two bounded by the engine's padding policy)."""
+    return jax.tree_util.tree_map(lambda a: a if a.ndim == 0 else a[idx], tree)
+
+
+def _harvest(state, idx: np.ndarray, k: int):
+    """Pull converged rows to host. Plain numpy slicing — harvest sets have
+    arbitrary sizes, so a jitted version would retrace per size and grow the
+    jit cache without bound on a serving path."""
+    pool_ids, pool_d, expanded, visited, alive_steps, step = state
+    return (np.asarray(pool_ids)[idx, :k], np.asarray(pool_d)[idx, :k],
+            np.asarray(alive_steps)[idx])
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def mstg_graph_search_chunked(arrays: dict, queries, version, key_lo, key_hi,
+                              *, k: int, ef: int, max_steps: int, Kpad: int,
+                              use_kernel: bool = False, fanout: int = 1,
+                              chunk: int = 16, min_bucket: int = 8,
+                              packed: bool = True, with_stats: bool = False):
+    """Wavefront driver: run the beam search in ``chunk``-step slices and
+    compact the still-active rows to a power-of-two bucket between slices.
+
+    Per-row trajectories are independent (a converged row's step is the
+    identity), so results are bit-identical to :func:`mstg_graph_search` with
+    the same parameters — compaction only stops converged queries from paying
+    gather + distance cost while stragglers finish.
+
+    Returns ``(ids, dists)`` as numpy arrays, plus a stats dict when
+    ``with_stats`` (total steps, per-query convergence steps, executed vs
+    useful candidate-evaluation counts).
+    """
+    queries = jnp.asarray(queries, jnp.float32)
+    version = jnp.asarray(version, jnp.int32)
+    key_lo = jnp.asarray(key_lo, jnp.int32)
+    key_hi = jnp.asarray(key_hi, jnp.int32)
+    k = min(k, ef)     # the beam holds ef entries (single-shot slices likewise)
+    chunk = max(int(chunk), 1)   # chunk=0 ("single-loop") belongs to the
+    Q = queries.shape[0]         # engine; here it would make zero progress
+    S = arrays["nbr"].shape[2]
+    kw = dict(ef=ef, Kpad=Kpad, use_kernel=use_kernel, packed=packed)
+
+    out_ids = np.full((Q, k), NO_EDGE, np.int32)
+    out_d = np.full((Q, k), np.inf, np.float32)
+    conv_steps = np.zeros(Q, np.int64)
+
+    nodes, state, active = _graph_init(arrays, queries, version, key_lo,
+                                       key_hi, **kw)
+    qs, ver = queries, version
+    perm = np.arange(Q)                      # current row -> original query
+    active_h = np.asarray(active)
+    total = 0
+    executed_row_steps = 0
+    harvested = np.zeros(Q, bool)
+
+    def harvest(rows: np.ndarray) -> None:
+        if rows.size == 0:
+            return
+        ids_h, d_h, steps_h = _harvest(state, rows, k)
+        orig = perm[rows]
+        out_ids[orig] = ids_h
+        out_d[orig] = d_h
+        conv_steps[orig] = steps_h
+        harvested[orig] = True
+
+    while True:
+        live = np.flatnonzero(active_h)
+        done = np.flatnonzero(~active_h)
+        # harvest rows not yet written (duplicated pad rows rewrite the same
+        # values — their trajectories are copies of a live row's)
+        harvest(done[~harvested[perm[done]]])
+        if live.size == 0 or total >= max_steps:
+            if live.size:
+                harvest(live)                # truncated at the step budget
+            break
+        cur_Q = int(qs.shape[0])
+        bucket = min(max(min_bucket, _next_pow2(live.size)), cur_Q)
+        if bucket < cur_Q:
+            pad = bucket - live.size
+            idx = np.concatenate([live, live[:1].repeat(pad)]) if pad \
+                else live
+            idx_dev = jnp.asarray(idx)
+            qs, ver, nodes, state = _gather_rows((qs, ver, nodes, state),
+                                                 idx_dev)
+            perm = perm[idx]
+        limit = jnp.asarray(min(chunk, max_steps - total), jnp.int32)
+        state, active, ran = _graph_chunk(arrays, qs, ver, nodes, state,
+                                          limit, fanout=fanout, **kw)
+        ran = int(ran)
+        total += ran
+        executed_row_steps += int(qs.shape[0]) * ran
+        active_h = np.asarray(active)
+
+    if not with_stats:
+        return out_ids, out_d
+    useful = int(conv_steps.sum())
+    stats = {
+        "steps": total,
+        "conv_steps": conv_steps,
+        "evals_executed": executed_row_steps * fanout * S,
+        "evals_useful": useful * fanout * S,
+        "wasted_eval_frac": (1.0 - useful / executed_row_steps
+                             if executed_row_steps else 0.0),
+    }
+    return out_ids, out_d, stats
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
 def merge_topk(ids_a, d_a, ids_b, d_b, k: int):
     """Merge two (Q, k) result sets, dropping duplicate ids (Theorem 4.1 plans
-    may overlap at predicate boundaries)."""
+    may overlap at predicate boundaries). Jitted: the engine calls it on
+    device arrays between plan slots."""
     ids = jnp.concatenate([ids_a, ids_b], axis=1)
     d = jnp.concatenate([d_a, d_b], axis=1)
     order = jnp.argsort(d, axis=1)

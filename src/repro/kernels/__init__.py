@@ -1,9 +1,11 @@
 """Pallas TPU kernels for the paper's distance-verification hot spot.
 
-- pairwise_l2.py  : fused RR-predicate + pairwise squared-L2 (MXU tiles)
-- gathered_l2.py  : beam-candidate distances (VPU + MXU formulations)
-- fused_topk.py   : predicate + distance + running top-k in ONE kernel
-                    (grid-persistent accumulator; no (Q, N) matrix ever)
+- pairwise_l2.py   : fused RR-predicate + pairwise squared-L2 (MXU tiles)
+- gathered_l2.py   : beam-candidate distances (VPU + MXU formulations)
+- fused_topk.py    : predicate + distance + running top-k in ONE kernel
+                     (grid-persistent accumulator; no (Q, N) matrix ever)
+- gathered_topk.py : the wavefront beam step — gather-by-id + L2 + label
+                     mask + sorted-pool merge in ONE kernel
 - ref.py          : pure-jnp oracles (the allclose ground truth)
 - ops.py          : jit entry points; interpret=True off-TPU
 

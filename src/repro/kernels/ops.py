@@ -36,9 +36,20 @@ def gathered_l2_dot(queries, cand_vecs, bq: int = _gl.DEFAULT_BQ):
     return _gl.gathered_l2_dot(queries, cand_vecs, bq=bq, interpret=_interpret())
 
 
+def gathered_topk(queries, vectors, ids, avail, b, e, version,
+                  pool_ids, pool_d, pool_exp, bq: int = None):
+    """Fused wavefront step: gather-by-id + L2 + label mask + beam merge
+    (:mod:`repro.kernels.gathered_topk`) in one kernel call."""
+    from . import gathered_topk as _gt
+    return _gt.gathered_topk(queries, vectors, ids, avail, b, e, version,
+                             pool_ids, pool_d, pool_exp,
+                             bq=bq or _gt.DEFAULT_BQ, interpret=_interpret())
+
+
 # re-export oracles for convenience
 pairwise_l2_masked_ref = ref.pairwise_l2_masked_ref
 gathered_l2_ref = ref.gathered_l2_ref
+gathered_topk_ref = ref.gathered_topk_ref
 
 
 def fused_topk_l2(queries, corpus, lo, hi, ql, qh, mask: int, k: int = 10,

@@ -5,6 +5,8 @@ import jax.numpy as jnp
 
 from repro.core import intervals as iv
 
+NO_EDGE = -1
+
 
 def pairwise_l2_masked_ref(queries, corpus, lo, hi, ql, qh, mask: int):
     """(Q, d) x (N, d) -> (Q, N) squared L2; +inf where the RR predicate fails.
@@ -26,6 +28,31 @@ def gathered_l2_ref(queries, cand_vecs):
     c = cand_vecs.astype(jnp.float32)
     diff = c - q[:, None, :]
     return jnp.sum(diff * diff, axis=-1)
+
+
+def gathered_topk_ref(queries, vectors, ids, avail, b, e, version,
+                      pool_ids, pool_d, pool_exp):
+    """Oracle for the fused wavefront-step kernel: gather candidate vectors by
+    id, squared L2, label mask ``b <= version <= e``, and a ``top_k`` merge
+    into the sorted beam. Returns (ids, dists, expanded) of the pool width."""
+    import jax
+
+    q = queries.astype(jnp.float32)
+    L = pool_d.shape[1]
+    ok = ((avail != 0) & (b <= version[:, None]) & (version[:, None] <= e))
+    idx = jnp.where(ids < 0, 0, ids)
+    cand = vectors.astype(jnp.float32)[idx]
+    diff = cand - q[:, None, :]
+    nd = jnp.sum(diff * diff, axis=-1)
+    nd = jnp.where(ok, nd, jnp.inf)
+    nid = jnp.where(ok, ids, NO_EDGE)
+    cat_d = jnp.concatenate([pool_d.astype(jnp.float32), nd], axis=1)
+    cat_i = jnp.concatenate([pool_ids, nid], axis=1)
+    cat_e = jnp.concatenate([pool_exp.astype(bool),
+                             jnp.zeros(nd.shape, bool)], axis=1)
+    neg, order = jax.lax.top_k(-cat_d, L)
+    return (jnp.take_along_axis(cat_i, order, 1), -neg,
+            jnp.take_along_axis(cat_e, order, 1))
 
 
 def topk_mask_ref(dists, k: int):

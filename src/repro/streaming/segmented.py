@@ -21,7 +21,11 @@ Search fans out: every live segment executes the request on its own cached
 :class:`repro.core.QueryEngine` (graph / pruned / flat / auto per segment),
 over-fetching ``k + |segment tombstones|`` so tombstone filtering can never
 evict a true neighbor, the delta is scanned exactly, and per-source top-k
-lists are merged on host. The returned :class:`repro.core.SearchResult`
+lists are merged on host. Per-segment engines inherit the wavefront graph
+loop — bit-packed visited bitmaps, chunked active-batch compaction, fanout
+heuristics — and ``engine_kwargs`` tunes it fleet-wide (e.g.
+``dict(graph_chunk=16, packed_visited=True)``); a request's pinned
+``fanout``/``chunk`` travel through the fan-out untouched. The returned :class:`repro.core.SearchResult`
 carries external ids and a :class:`repro.core.RouteReport` with one
 :class:`repro.core.SegmentReport` per source.
 

@@ -1,0 +1,59 @@
+"""The scheduled-lane perf gate: skip rules and the regression verdict."""
+import json
+import subprocess
+import sys
+
+
+def _run_gate(tmp_path, records, tolerance=0.2):
+    hist = tmp_path / "hist.jsonl"
+    hist.write_text("".join(json.dumps(r) + "\n" for r in records))
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.ci_gate", "--history", str(hist),
+         "--field", "graph_qps", "--tolerance", str(tolerance)],
+        capture_output=True, text=True)
+
+
+def test_gate_skips_empty_and_prefield_history(tmp_path):
+    assert _run_gate(tmp_path, []).returncode == 0
+    assert _run_gate(tmp_path, [{"commit": "a"}]).returncode == 0
+    # only one record carries the field -> skip
+    r = _run_gate(tmp_path, [{"commit": "a"},
+                             {"commit": "b", "graph_qps": 500,
+                              "platform": "p1"}])
+    assert r.returncode == 0 and "skipping" in r.stdout
+
+
+def test_gate_skips_cross_platform_comparisons(tmp_path):
+    """QPS is not comparable across machines: a cache-miss run whose only
+    prior record came from a different box must skip, not fail."""
+    r = _run_gate(tmp_path, [
+        {"commit": "a", "graph_qps": 1000, "platform": "laptop"},
+        {"commit": "b", "graph_qps": 300, "platform": "ci-runner"}])
+    assert r.returncode == 0 and "platform" in r.stdout
+
+
+def test_gate_passes_within_tolerance_and_fails_beyond(tmp_path):
+    ok = _run_gate(tmp_path, [
+        {"commit": "a", "graph_qps": 1000, "platform": "p"},
+        {"commit": "b", "graph_qps": 850, "platform": "p"}])
+    assert ok.returncode == 0 and "OK" in ok.stdout
+    bad = _run_gate(tmp_path, [
+        {"commit": "a", "graph_qps": 1000, "platform": "p"},
+        {"commit": "b", "graph_qps": 700, "platform": "p"}])
+    assert bad.returncode == 1 and "REGRESSION" in bad.stdout
+    # comparison skips interleaved records from other machines
+    mixed = _run_gate(tmp_path, [
+        {"commit": "a", "graph_qps": 1000, "platform": "p"},
+        {"commit": "x", "graph_qps": 10, "platform": "other"},
+        {"commit": "b", "graph_qps": 900, "platform": "p"}])
+    assert mixed.returncode == 0
+
+
+def test_gate_baseline_cannot_ratchet_down(tmp_path):
+    """Sub-tolerance regressions must not compound: the gate anchors on the
+    best of the window, so a 15%-per-run slide trips once cumulative drop
+    crosses the tolerance."""
+    slide = [{"commit": f"c{i}", "graph_qps": 1000 * (0.85 ** i),
+              "platform": "p"} for i in range(4)]  # 1000, 850, 722.5, 614.1
+    r = _run_gate(tmp_path, slide)
+    assert r.returncode == 1 and "REGRESSION" in r.stdout

@@ -189,6 +189,66 @@ def test_selectivity_cache_bounded_fifo_eviction(small_ds, built_index):
     np.testing.assert_array_equal(est, want)
 
 
+def test_auto_route_parity_with_pinned_route(small_ds, built_index):
+    """The auto-route regression fix: an auto-routed request must execute the
+    *same* plan as pinning the route it selects — identical ids, distances,
+    slot count, and variants — with selectivity answered from the O(1) rank
+    table before any device work (no sample scan on the request path)."""
+    ds = small_ds
+    eng = QueryEngine(built_index, flat_threshold=0.15)
+    for sel, want_route in ((0.02, ROUTE_PRUNED), (0.6, ROUTE_GRAPH)):
+        qlo, qhi = make_queries(ds, ANY_OVERLAP, sel, seed=53)
+        auto = eng.search(_req(ds.queries, qlo, qhi, ANY_OVERLAP))
+        assert auto.report.route == want_route
+        assert auto.report.requested == "auto"
+        pinned = eng.search(_req(ds.queries, qlo, qhi, ANY_OVERLAP,
+                                 route=want_route))
+        np.testing.assert_array_equal(auto.ids, pinned.ids)
+        np.testing.assert_array_equal(auto.dists, pinned.dists)
+        assert auto.report.slot_count == pinned.report.slot_count
+        assert auto.report.variants == pinned.report.variants
+        # route_for agrees with what execute() actually did
+        assert eng.route_for(ANY_OVERLAP, qlo, qhi) == want_route
+
+
+def test_auto_route_work_model_default(small_ds, built_index):
+    """Default routing is the work model: at this corpus size the exact
+    pruned scan's estimated work (sel * n) stays under the beam's (ef * S)
+    for any selectivity, and route_for/execute agree."""
+    ds = small_ds
+    eng = QueryEngine(built_index)          # flat_threshold=None -> work model
+    n = built_index.vectors.shape[0]
+    for sel in (0.05, 0.6):
+        qlo, qhi = make_queries(ds, ANY_OVERLAP, sel, seed=61)
+        est = eng.estimate_selectivity(ANY_OVERLAP, qlo, qhi)
+        scan_work = est.mean() * n
+        beam_work = 64 * eng._max_slots
+        want = ROUTE_PRUNED if scan_work <= beam_work else ROUTE_GRAPH
+        assert eng.route_for(ANY_OVERLAP, qlo, qhi, ef=64) == want
+        res = eng.search(_req(ds.queries, qlo, qhi, ANY_OVERLAP))
+        assert res.report.route == want
+        pinned = eng.search(_req(ds.queries, qlo, qhi, ANY_OVERLAP,
+                                 route=want))
+        np.testing.assert_array_equal(res.ids, pinned.ids)
+        np.testing.assert_array_equal(res.dists, pinned.dists)
+
+
+def test_selectivity_table_built_and_bounded(small_ds, built_index):
+    """Small domains get the O(1) table; its estimates equal the sample scan
+    (here sample == corpus, so both are exact)."""
+    eng = QueryEngine(built_index)
+    assert eng._sel_index is not None
+    assert eng._sel_index.K == built_index.domain.K
+    assert eng._sel_index.m == built_index.vectors.shape[0]
+    ds = small_ds
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.3, seed=59)
+    est = eng.estimate_selectivity(ANY_OVERLAP, qlo, qhi)
+    want = np.stack([np.asarray(iv.eval_predicate(
+        ANY_OVERLAP, ds.lo, ds.hi, qlo[i], qhi[i])).mean()
+        for i in range(len(qlo))])
+    np.testing.assert_allclose(est, want, atol=1e-12)
+
+
 def test_deprecation_warns_exactly_once_per_process(small_ds, built_index):
     """Tuple-API shims emit one DeprecationWarning per process per shim,
     attributed to the caller (stacklevel points at this file)."""

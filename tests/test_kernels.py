@@ -131,6 +131,82 @@ def test_fused_topk_matches_bruteforce(mask, shape):
                                rtol=1e-4, atol=1e-4)
 
 
+def _mk_wavefront_step(Q, n, d, M, L, seed=0):
+    """Random inputs shaped like one wavefront beam step."""
+    rng = np.random.default_rng(seed)
+    q = rng.normal(0, 1, (Q, d)).astype(np.float32)
+    table = rng.normal(0, 1, (n, d)).astype(np.float32)
+    ids = rng.integers(-1, n, (Q, M)).astype(np.int32)      # NO_EDGE mixed in
+    avail = (rng.random((Q, M)) < 0.7) & (ids >= 0)
+    b = rng.integers(0, 40, (Q, M)).astype(np.int32)
+    e = b + rng.integers(0, 40, (Q, M)).astype(np.int32)
+    ver = rng.integers(0, 70, Q).astype(np.int32)
+    # a plausible beam: sorted finite prefix, NO_EDGE/+inf tail
+    pool_d = np.sort(rng.random((Q, L)).astype(np.float32), axis=1)
+    pool_ids = rng.integers(0, n, (Q, L)).astype(np.int32)
+    tail = rng.integers(0, L + 1, Q)
+    for qi in range(Q):
+        if tail[qi] < L:
+            pool_d[qi, tail[qi]:] = np.inf
+            pool_ids[qi, tail[qi]:] = -1
+    pool_exp = (rng.random((Q, L)) < 0.5) & np.isfinite(pool_d)
+    return q, table, ids, avail, b, e, ver, pool_ids, pool_d, pool_exp
+
+
+@pytest.mark.parametrize("shape", [(3, 50, 8, 12, 6), (9, 200, 16, 40, 16)])
+def test_gathered_topk_matches_ref(shape):
+    """The fused wavefront-step kernel == its jnp oracle: ids bit-equal,
+    distances allclose, expanded flags bit-equal."""
+    from repro.kernels.gathered_topk import gathered_topk
+    from repro.kernels.ref import gathered_topk_ref
+    Q, n, d, M, L = shape
+    args = _mk_wavefront_step(Q, n, d, M, L, seed=3)
+    ki, kd, ke = gathered_topk(*map(jnp.asarray, args), bq=4, interpret=True)
+    ri, rd, re = gathered_topk_ref(*map(jnp.asarray, args))
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(rd),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ke), np.asarray(re))
+
+
+@settings(max_examples=10, deadline=None)
+@given(hst.integers(1, 6), hst.integers(2, 80), hst.integers(1, 16),
+       hst.integers(1, 24), hst.integers(1, 12), hst.integers(0, 2**30))
+def test_gathered_topk_hypothesis(Q, n, d, M, L, seed):
+    from repro.kernels.gathered_topk import gathered_topk
+    from repro.kernels.ref import gathered_topk_ref
+    args = _mk_wavefront_step(Q, n, d, M, L, seed)
+    ki, kd, ke = gathered_topk(*map(jnp.asarray, args), bq=4, interpret=True)
+    ri, rd, re = gathered_topk_ref(*map(jnp.asarray, args))
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(kd), np.asarray(rd),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_graph_search_fused_kernel_path(small_ds, built_index):
+    """End to end: mstg_graph_search(use_kernel=True) routes the whole step
+    merge through the fused kernel and matches the jnp path."""
+    import jax.numpy as jnp2
+    from repro.core import QueryEngine, ANY_OVERLAP as AO
+    from repro.core.search import mstg_graph_search
+    from repro.data import make_queries
+    ds = small_ds
+    eng = QueryEngine(built_index)
+    qlo, qhi = make_queries(ds, AO, 0.15, seed=41)
+    s = eng.plan(AO, qlo, qhi)[0]
+    dv = eng.graph_dev(s.variant)
+    args = (dv.tree(), jnp2.asarray(ds.queries[:6]),
+            jnp2.asarray(s.version[:6], jnp2.int32),
+            jnp2.asarray(s.key_lo[:6], jnp2.int32),
+            jnp2.asarray(s.key_hi[:6], jnp2.int32))
+    kw = dict(k=5, ef=12, max_steps=60, Kpad=dv.meta.Kpad, fanout=2)
+    ji, jd = mstg_graph_search(*args, **kw, use_kernel=False)
+    ki, kd = mstg_graph_search(*args, **kw, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(ji), np.asarray(ki))
+    np.testing.assert_allclose(np.asarray(jd), np.asarray(kd),
+                               rtol=1e-5, atol=1e-5)
+
+
 @settings(max_examples=10, deadline=None)
 @given(hst.integers(1, 6), hst.integers(1, 400), hst.integers(1, 24),
        hst.integers(1, 8), hst.integers(0, 2**30))

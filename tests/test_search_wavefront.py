@@ -1,0 +1,261 @@
+"""Wavefront graph-search rework: bit-packed visited sets, chunked
+active-batch compaction, and the auto-route parity fix.
+
+The contract under test: every execution mode of the wavefront engine —
+packed or dense visited, chunked or single-loop, any fanout — returns results
+*bit-identical* (ids AND distances) to the reference single-loop dense-visited
+search at the same parameters.
+"""
+import functools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+import jax.numpy as jnp
+
+from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, QUERY_CONTAINING,
+                        LEFT_OVERLAP, RIGHT_OVERLAP, QueryEngine,
+                        SearchRequest, intervals as iv)
+from repro.core.search import (mstg_graph_search, mstg_graph_search_chunked,
+                               packed_words)
+from repro.data import make_queries
+
+MASKS = [
+    ANY_OVERLAP,
+    QUERY_CONTAINED,
+    QUERY_CONTAINING,
+    LEFT_OVERLAP,
+    RIGHT_OVERLAP,
+    LEFT_OVERLAP | RIGHT_OVERLAP,
+    QUERY_CONTAINED | QUERY_CONTAINING,
+    LEFT_OVERLAP | QUERY_CONTAINED | RIGHT_OVERLAP,
+]
+ROUTES = ("graph", "pruned", "flat")
+
+
+@pytest.fixture(scope="module")
+def ref_engine(built_index):
+    """The seed-equivalent reference: dense visited, single while_loop."""
+    return QueryEngine(built_index, packed_visited=False, graph_chunk=None)
+
+
+@pytest.fixture(scope="module")
+def wave_engine(built_index):
+    """The wavefront path under test: packed visited, forced tiny chunks (so
+    compaction triggers even at test batch sizes)."""
+    return QueryEngine(built_index, packed_visited=True, graph_chunk=7)
+
+
+def _slot_args(eng, variant_slot, queries):
+    dv = eng.graph_dev(variant_slot.variant)
+    return (dv.tree(), jnp.asarray(queries),
+            jnp.asarray(variant_slot.version, jnp.int32),
+            jnp.asarray(variant_slot.key_lo, jnp.int32),
+            jnp.asarray(variant_slot.key_hi, jnp.int32)), dv.meta.Kpad
+
+
+# ---- device level: packed bitmap == dense bool, chunked == single-loop ----
+
+@pytest.mark.parametrize("mask", MASKS, ids=iv.mask_name)
+def test_packed_visited_bit_identical(small_ds, built_index, ref_engine, mask):
+    ds = small_ds
+    qlo, qhi = make_queries(ds, mask, 0.15, seed=3)
+    for s in ref_engine.plan(mask, qlo, qhi):
+        args, Kpad = _slot_args(ref_engine, s, ds.queries)
+        kw = dict(k=10, ef=48, max_steps=250, Kpad=Kpad)
+        di, dd = mstg_graph_search(*args, **kw, packed=False)
+        pi, pd = mstg_graph_search(*args, **kw, packed=True)
+        np.testing.assert_array_equal(np.asarray(di), np.asarray(pi))
+        np.testing.assert_array_equal(np.asarray(dd), np.asarray(pd))
+
+
+@functools.lru_cache(maxsize=1)
+def _prop_ctx():
+    """Tiny dataset + engine for the hypothesis sweeps (fixtures cannot mix
+    into @given under the offline fallback shim)."""
+    from repro.core import MSTGIndex
+    from repro.data import make_range_dataset
+    ds = make_range_dataset(n=240, d=12, n_queries=20, quantize=32, seed=2)
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"), m=8,
+                    ef_con=32)
+    return ds, QueryEngine(idx)
+
+
+@settings(max_examples=12, deadline=None)
+@given(hst.sampled_from([1, 2, 5, 16]), hst.sampled_from([4, 17, 32, 64]),
+       hst.sampled_from([1, 2, 3, 4]), hst.sampled_from([1, 3, 8, 50]),
+       hst.integers(0, 2**30))
+def test_chunked_equals_single_loop(Q, ef, fanout, chunk, seed):
+    """Random Q/ef/fanout/chunk: the chunked-compaction driver returns the
+    single-loop results bit for bit (ids and distances)."""
+    ds, eng = _prop_ctx()
+    rng = np.random.default_rng(seed)
+    pick = rng.integers(0, ds.queries.shape[0], Q)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=seed % 97)
+    queries, qlo, qhi = ds.queries[pick], qlo[pick], qhi[pick]
+    max_steps = (4 * ef + 64) // fanout + 8
+    for s in eng.plan(ANY_OVERLAP, qlo, qhi):
+        args, Kpad = _slot_args(eng, s, queries)
+        kw = dict(k=min(10, ef), ef=ef, max_steps=max_steps, Kpad=Kpad,
+                  fanout=fanout)
+        si, sd = mstg_graph_search(*args, **kw)
+        ci, cd = mstg_graph_search_chunked(*args, **kw, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(si), ci)
+        np.testing.assert_array_equal(np.asarray(sd), cd)
+
+
+def test_chunked_stats_account_for_all_rows(small_ds, built_index):
+    ds = small_ds
+    eng = QueryEngine(built_index)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=5)
+    s = eng.plan(ANY_OVERLAP, qlo, qhi)[0]
+    args, Kpad = _slot_args(eng, s, ds.queries)
+    ids, d, stats = mstg_graph_search_chunked(
+        *args, k=10, ef=32, max_steps=200, Kpad=Kpad, chunk=8,
+        with_stats=True)
+    Q = ds.queries.shape[0]
+    assert stats["conv_steps"].shape == (Q,)
+    assert (stats["conv_steps"] >= 0).all()
+    assert stats["conv_steps"].max() <= stats["steps"]
+    assert stats["evals_useful"] <= stats["evals_executed"]
+    assert 0.0 <= stats["wasted_eval_frac"] < 1.0
+
+
+def test_fanout_dedupe_does_not_shadow_vertex_zero():
+    """The step dedupe replaces invalid slots with out-of-range sentinels
+    before the first-occurrence test: an earlier empty (0-filled) slot must
+    not swallow a genuine proposal of corpus vertex 0, while true duplicates
+    among valid slots still collapse to their first occurrence."""
+    from repro.core.search import _first_occurrence
+    n, FS = 10, 4
+    cols = jnp.arange(FS, dtype=jnp.int32)[None, :]
+    tg = jnp.array([[5, 0, 0, 3]], jnp.int32)    # col 1 invalid, col 2 = id 0
+    ok = jnp.array([[True, False, True, True]])
+    keep = ok & _first_occurrence(jnp.where(ok, tg, n + cols))
+    assert keep.tolist() == [[True, False, True, True]]
+    tg2 = jnp.array([[7, 7, 0, 0]], jnp.int32)   # real duplicates
+    ok2 = jnp.ones((1, FS), bool)
+    keep2 = ok2 & _first_occurrence(jnp.where(ok2, tg2, n + cols))
+    assert keep2.tolist() == [[True, False, True, False]]
+
+
+def test_packed_words_memory_math():
+    # the README's Q*n/8-bytes claim: one uint32 word covers 32 vertices
+    assert packed_words(1) == 1
+    assert packed_words(32) == 1
+    assert packed_words(33) == 2
+    assert packed_words(800) == 25      # 800 vertices -> 100 bytes/query
+
+
+# ---- engine level: the full 8-mask x 3-route grid ----
+
+@pytest.mark.parametrize("mask", MASKS, ids=iv.mask_name)
+@pytest.mark.parametrize("route", ROUTES)
+def test_wavefront_engine_grid_bit_identical(small_ds, ref_engine,
+                                             wave_engine, mask, route):
+    """Packed + chunked engine == dense + single-loop engine, bit for bit,
+    across the canonical masks and all three routes (pinned fanout so both
+    engines run the same wavefront width)."""
+    ds = small_ds
+    qlo, qhi = make_queries(ds, mask, 0.15, seed=13)
+    req = SearchRequest(ds.queries, (qlo, qhi), mask, k=10, ef=48,
+                        route=route, fanout=2)
+    a = ref_engine.search(req)
+    b = wave_engine.search(req)
+    np.testing.assert_array_equal(a.ids, b.ids)
+    np.testing.assert_array_equal(a.dists, b.dists)
+    assert a.report.route == b.report.route == route
+
+
+def test_empty_slot_skip_is_result_identical(small_ds, built_index,
+                                             ref_engine):
+    """A mask whose plan contains an all-empty slot: skipping the slot before
+    device work must not change results (QUERY_CONTAINED over a range below
+    the domain floor plans an empty task on one variant)."""
+    ds = small_ds
+    eng = QueryEngine(built_index)
+    qlo = np.full(5, float(ds.lo.min()) - 30.0)
+    qhi = np.full(5, float(ds.lo.min()) - 20.0)
+    for mask in (QUERY_CONTAINED, ANY_OVERLAP):
+        req = SearchRequest(ds.queries[:5], (qlo, qhi), mask, k=5,
+                            route="graph", fanout=1)
+        a = ref_engine.search(req)
+        b = eng.search(req)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+
+
+# ---- streaming fan-out inherits the wavefront loop ----
+
+def test_segmented_fanout_inherits_wavefront(small_ds):
+    """SegmentedIndex search: packed+chunked per-segment engines return the
+    dense+single-loop results bit for bit, under churn (tombstones + delta)."""
+    from repro.core import IndexSpec
+    from repro.streaming import SegmentedIndex
+
+    ds = small_ds
+    n = 220
+    spec = IndexSpec(variants=("T", "Tp"), m=8, ef_con=40)
+
+    def build(engine_kwargs):
+        seg = SegmentedIndex(spec, engine_kwargs=engine_kwargs)
+        ids = np.arange(n)
+        seg.add(ids[:150], ds.vectors[:150], ds.lo[:150], ds.hi[:150])
+        seg.flush()
+        seg.add(ids[150:n], ds.vectors[150:n], ds.lo[150:n], ds.hi[150:n])
+        seg.flush()
+        seg.delete(np.arange(10, 30))
+        seg.add(ids[40:60], ds.vectors[40:60] + 0.25,
+                ds.lo[40:60], ds.hi[40:60])          # upserts -> delta
+        return seg
+
+    ref = build(dict(packed_visited=False, graph_chunk=None))
+    wave = build(dict(packed_visited=True, graph_chunk=5))
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.25, seed=17)
+    for route in ("graph", "pruned"):
+        req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=8, ef=32,
+                            route=route, fanout=2)
+        a = ref.search(req)
+        b = wave.search(req)
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_array_equal(a.dists, b.dists)
+
+
+# ---- selectivity index: exact, and consulted before device work ----
+
+@settings(max_examples=20, deadline=None)
+@given(hst.integers(1, 63), hst.integers(0, 2**30))
+def test_selectivity_index_exact_vs_predicate_scan(mask, seed):
+    rng = np.random.default_rng(seed)
+    K = int(rng.integers(2, 60))
+    vals = np.sort(rng.choice(5000, K, replace=False)).astype(np.float64)
+    dom = iv.AttributeDomain(vals)
+    m = int(rng.integers(1, 150))
+    lo_r = rng.integers(0, K, m)
+    hi_r = np.maximum(lo_r, rng.integers(0, K, m))
+    lo, hi = vals[lo_r], vals[hi_r]
+    si = iv.SelectivityIndex(lo_r, hi_r, K)
+    Q = 25
+    ql = rng.uniform(vals[0] - 99, vals[-1] + 99, Q)
+    qh = ql + rng.uniform(0, vals[-1] - vals[0], Q) * rng.integers(0, 2, Q)
+    fl, cl = dom.floor_rank(ql), dom.ceil_rank(ql)
+    fr, cr = dom.floor_rank(qh), dom.ceil_rank(qh)
+    want = np.asarray(iv.eval_predicate(
+        mask, lo[None, :], hi[None, :], ql[:, None], qh[:, None])).sum(axis=1)
+    np.testing.assert_array_equal(si.count(mask, fl, cl, fr, cr), want)
+
+
+def test_engine_estimates_match_table_and_scan(small_ds, built_index):
+    """The engine's table-backed estimator returns exactly what the sample
+    scan returned (sample == corpus here, so both are exact)."""
+    ds = small_ds
+    eng = QueryEngine(built_index)
+    assert eng._sel_index is not None
+    for mask in MASKS:
+        qlo, qhi = make_queries(ds, mask, 0.12, seed=23)
+        est = eng.estimate_selectivity(mask, qlo, qhi)
+        want = np.stack([np.asarray(iv.eval_predicate(
+            mask, ds.lo, ds.hi, qlo[i], qhi[i])).mean()
+            for i in range(len(qlo))])
+        np.testing.assert_allclose(est, want, atol=1e-12)
