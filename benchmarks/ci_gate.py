@@ -7,6 +7,12 @@ Reads ``BENCH_history.jsonl`` (one JSON record per smoke run, appended by
 across machines, so a cache-miss run whose only prior records came from a
 different box is skipped, not failed. Records from before the field existed are skipped too, and a
 history with fewer than two comparable records passes trivially.
+
+``--direction`` picks the metric's polarity: ``max`` (default) for
+higher-is-better fields like ``graph_qps`` (baseline = window max, fail when
+the new value drops more than ``tolerance`` below it); ``min`` for
+lower-is-better fields like ``build_seconds`` (baseline = window min, fail
+when the new value rises more than ``tolerance`` above it).
 """
 from __future__ import annotations
 
@@ -22,7 +28,11 @@ def main() -> None:
     ap.add_argument("--field", default="graph_qps",
                     help="history field to gate on (default: graph_qps)")
     ap.add_argument("--tolerance", type=float, default=0.2,
-                    help="allowed relative drop, e.g. 0.2 = 20%% (default)")
+                    help="allowed relative regression, e.g. 0.2 = 20%% "
+                         "(default)")
+    ap.add_argument("--direction", choices=("max", "min"), default="max",
+                    help="max: higher is better (QPS); min: lower is better "
+                         "(build seconds)")
     ap.add_argument("--window", type=int, default=5,
                     help="gate against the best of the last N same-platform "
                          "records (default 5) so slow regressions can't "
@@ -51,14 +61,22 @@ def main() -> None:
     # regressions compound silently across runs (a 15%-per-run slide never
     # trips a 20% gate measured run-over-run)
     window = same_box[-args.window:]
-    prev_commit, prev = max(((c, v) for c, v, _ in window),
-                            key=lambda t: t[1])
-    floor = (1.0 - args.tolerance) * prev
-    verdict = "OK" if cur >= floor else "REGRESSION"
+    pick = max if args.direction == "max" else min
+    prev_commit, prev = pick(((c, v) for c, v, _ in window),
+                             key=lambda t: t[1])
+    if args.direction == "max":
+        bound = (1.0 - args.tolerance) * prev
+        failed = cur < bound
+        bound_name = "floor"
+    else:
+        bound = (1.0 + args.tolerance) * prev
+        failed = cur > bound
+        bound_name = "ceiling"
+    verdict = "REGRESSION" if failed else "OK"
     print(f"ci_gate: {args.field} best-of-{len(window)} {prev:.1f} "
-          f"({prev_commit}) -> {cur:.1f} ({cur_commit}); floor {floor:.1f} "
-          f"[{verdict}]")
-    if cur < floor:
+          f"({prev_commit}) -> {cur:.1f} ({cur_commit}); {bound_name} "
+          f"{bound:.1f} [{verdict}]")
+    if failed:
         sys.exit(1)
 
 

@@ -1,12 +1,17 @@
-"""Exp. 2 (Fig. 5): index construction time and size."""
-import time
+"""Exp. 2 (Fig. 5): index construction time and size.
 
-import numpy as np
+Includes the bulk-vs-incremental builder sweep: for each corpus size, one
+variant is built with both construction paths and the build seconds +
+``index_bytes`` are emitted side by side, so the bulk path's speedup and
+size parity are tracked as first-class rows (the smoke lane gates the
+headline ``build_seconds.total`` via ``benchmarks.ci_gate --direction min``).
+"""
+import time
 
 from repro.core import MSTGIndex
 from repro.core.baselines import Postfiltering, AcornLike
 
-from .common import bench_dataset, bench_index, emit
+from .common import QUICK, bench_dataset, bench_index, emit
 
 
 def run():
@@ -14,14 +19,15 @@ def run():
     idx = bench_index(ds)  # cached build
     total_s = sum(idx.build_seconds.values())
     emit("exp2/mstg_build", total_s * 1e6,
-         f"bytes={idx.index_bytes()};variants={len(idx.variants)}")
-    t0 = time.time()
+         f"bytes={idx.index_bytes()};variants={len(idx.variants)};"
+         f"builder={idx.spec.builder}")
+    t0 = time.perf_counter()
     post = Postfiltering(ds.vectors, ds.lo, ds.hi, m=12, ef_con=64)
-    emit("exp2/postfilter_build", (time.time() - t0) * 1e6,
+    emit("exp2/postfilter_build", (time.perf_counter() - t0) * 1e6,
          f"bytes={post.index_bytes()}")
-    t0 = time.time()
+    t0 = time.perf_counter()
     ac = AcornLike(ds.vectors, ds.lo, ds.hi, m=12, ef_con=64)
-    emit("exp2/acorn_build", (time.time() - t0) * 1e6,
+    emit("exp2/acorn_build", (time.perf_counter() - t0) * 1e6,
          f"bytes={ac.index_bytes()}")
     # labeled-compression effectiveness: edges vs naive multi-tree bound
     fv = idx.variants["T"]
@@ -32,3 +38,21 @@ def run():
     emit("exp2/labels", 0.0,
          f"stored_edges={int(naive_edges)};"
          f"naive_pervers_bound={int(naive_edges) * fv.K}")
+
+    # bulk-vs-incremental n-sweep (single variant keeps the incremental
+    # side affordable; both sides share dataset + hyper-parameters)
+    for n in (200, 400) if QUICK else (256, 512, 1024):
+        sweep_ds = bench_dataset(n=n, seed=1)
+        row = {}
+        for builder in ("bulk", "incremental"):
+            t0 = time.perf_counter()
+            swept = MSTGIndex(sweep_ds.vectors, sweep_ds.lo, sweep_ds.hi,
+                              variants=("T",), m=12, ef_con=64,
+                              builder=builder)
+            row[builder] = (time.perf_counter() - t0, swept.index_bytes())
+        (bulk_s, bulk_b), (inc_s, inc_b) = row["bulk"], row["incremental"]
+        emit(f"exp2/builder_sweep_n{n}", bulk_s * 1e6,
+             f"bulk_s={bulk_s:.3f};incremental_s={inc_s:.3f};"
+             f"speedup={inc_s / max(bulk_s, 1e-9):.1f};"
+             f"bulk_bytes={bulk_b};incremental_bytes={inc_b};"
+             f"bytes_ratio={bulk_b / max(inc_b, 1):.3f}")

@@ -109,7 +109,11 @@ def append_history(report: dict, history_path: str) -> dict:
         "unix_time": round(report["unix_time"], 1),
         "platform": report.get("platform"),
         "mask": report.get("mask", iv.mask_name(ANY_OVERLAP)),
+        "builder": report.get("builder"),
         "build_seconds": report["build_seconds"]["total"],
+        "build_seconds_variants": {k: v for k, v in
+                                   report["build_seconds"].items()
+                                   if k != "total"},
         "planner_speedup": report["planner"]["speedup"],
         "auto_qps": auto.get("qps"),
         "auto_recall_at_10": auto.get("recall_at_10"),
@@ -127,7 +131,7 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
               n_queries: int = 16, k: int = 10, mask: int = ANY_OVERLAP,
               history_path: str = None) -> dict:
     report: dict = {
-        "schema": 4,
+        "schema": 5,
         "unix_time": time.time(),
         "platform": platform.platform(),
         "mask": iv.mask_name(mask),
@@ -139,9 +143,12 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
     t0 = time.perf_counter()
     idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp", "Tpp"),
                     m=12, ef_con=64)
+    # per-variant build timings + builder name (schema 5): the bulk-vs-
+    # incremental construction trajectory is gated by ci_gate --direction min
     report["build_seconds"] = {**{k_: round(v, 4) for k_, v in
                                   idx.build_seconds.items()},
                                "total": round(time.perf_counter() - t0, 4)}
+    report["builder"] = idx.spec.builder
     report["index_bytes"] = idx.index_bytes()
 
     # exp1 (RRANN): engine QPS + recall at two selectivities, on the

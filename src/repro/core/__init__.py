@@ -11,7 +11,7 @@ Public surface (the declarative API is the supported entry point):
 ``MSTGSearcher``/``FlatSearcher`` and raw int masks remain as deprecated
 shims for the tuple-era API.
 """
-from . import intervals, segment_tree
+from . import build, intervals, segment_tree
 from .intervals import (LEFT_OVERLAP, QUERY_CONTAINED, RIGHT_OVERLAP,
                         QUERY_CONTAINING, BEFORE, AFTER, ANY_OVERLAP,
                         RFANN_MASK, IFANN_MASK, TSANN_MASK,
@@ -49,5 +49,5 @@ __all__ = [
     "BEFORE", "AFTER", "ANY_OVERLAP", "RFANN_MASK", "IFANN_MASK", "TSANN_MASK",
     "MSTGSearcher", "FlatSearcher",
     # submodules
-    "intervals", "segment_tree",
+    "build", "intervals", "segment_tree",
 ]

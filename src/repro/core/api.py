@@ -237,8 +237,12 @@ class IndexSpec:
 
     ``predicate`` decides which MSTG variants get built when ``variants`` is
     None (via ``Predicate.variants_required``); the graph hyper-parameters
-    mirror the paper's (M, efConstruction, entry count). The spec is stored
-    on the index and persisted by ``save()``.
+    mirror the paper's (M, efConstruction, entry count). ``builder`` picks
+    the construction path — ``"bulk"`` (batched, the default) or
+    ``"incremental"`` (the paper-exact reference oracle) — and
+    ``batch_size`` tunes the bulk path's batch width (None = its default).
+    The spec is stored on the index and persisted by ``save()``; artifacts
+    written before the ``builder`` field existed load as ``"bulk"``.
     """
 
     predicate: Predicate = None
@@ -247,6 +251,8 @@ class IndexSpec:
     ef_con: int = 100
     m_max: Optional[int] = None
     n_entries: int = 4
+    builder: str = "bulk"
+    batch_size: Optional[int] = None
 
     def __post_init__(self):
         from . import intervals as iv
@@ -254,12 +260,20 @@ class IndexSpec:
         object.__setattr__(self, "predicate", as_predicate(pred))
         if self.variants is not None:
             object.__setattr__(self, "variants", tuple(self.variants))
+        from .build import BUILDERS  # deferred: keep api.py import-light
+        if self.builder not in BUILDERS:
+            raise ValueError(f"unknown builder {self.builder!r}; expected "
+                             f"one of {BUILDERS}")
+        if self.batch_size is not None and self.batch_size < 1:
+            raise ValueError("batch_size must be >= 1 (or None for the "
+                             "builder default)")
 
     def to_dict(self) -> dict:
         return {"predicate": self.predicate.mask,
                 "variants": list(self.variants) if self.variants else None,
                 "m": self.m, "ef_con": self.ef_con, "m_max": self.m_max,
-                "n_entries": self.n_entries}
+                "n_entries": self.n_entries, "builder": self.builder,
+                "batch_size": self.batch_size}
 
     @classmethod
     def from_dict(cls, d: dict) -> "IndexSpec":
@@ -267,4 +281,6 @@ class IndexSpec:
         return cls(predicate=Predicate(d["predicate"]),
                    variants=tuple(variants) if variants else None,
                    m=d["m"], ef_con=d["ef_con"], m_max=d["m_max"],
-                   n_entries=d["n_entries"])
+                   n_entries=d["n_entries"],
+                   builder=d.get("builder", "bulk"),
+                   batch_size=d.get("batch_size"))

@@ -1,0 +1,230 @@
+"""Bulk MSTG construction — batched Algorithms 1–3 (the default build path).
+
+The incremental builder (:mod:`repro.core.hnsw`) inserts one object at a
+time: every insertion runs a Python ``heapq`` beam search over the live
+graph per touched tree node, which costs ~ms per object and makes
+construction ~3 orders of magnitude slower than the query side. The bulk
+builder exploits the one structural fact the incremental path ignores: the
+graph is never *searched* during construction if candidates can be produced
+another way. So it
+
+1. processes objects in sorted (version) order in fixed-size batches,
+2. generates candidates with ONE batched distance matmul per batch — each
+   batch object's distances to every earlier-inserted object are computed
+   once and *shared across all* ``Lv`` *levels* of its root→leaf tree path
+   (per level, candidates are just the nearest earlier members of the same
+   tree node: a boolean mask over the shared distance rows),
+3. applies the RNG "select neighbors" rule to all (object, level) rows at
+   once (:func:`rng_prune_batch` — m rounds of (R, C) vector ops instead of
+   R sequential Python scans), and
+4. defers reverse-edge re-pruning to the batch boundary, re-pruning every
+   over-quota vertex of a level in one batched call.
+
+Fidelity: candidate sets are *exact* nearest earlier same-node members
+(the incremental beam search only approximates this), the pruning rule is
+identical, and member / entry-point / version bookkeeping is bit-identical
+to the incremental builder. Edge validity labels are a **superset** of the
+incremental ones: an edge pruned at a batch boundary closes at the batch's
+last version instead of the exact intra-batch insertion version, so every
+query version sees at least the edges the incremental graph would expose
+(never fewer — recall is preserved; Theorem D.1 *exactness* is what the
+``builder="incremental"`` oracle is kept for). The frozen array schema is
+unchanged: both builders fill the same :class:`LabeledLevelGraph` adjacency
+structures and go through the same freeze.
+
+On accelerator backends the batched distance matmuls map onto the
+:mod:`repro.kernels.ops` pairwise kernels; on CPU (this container) NumPy's
+BLAS matmul is the fast path, so that is what runs here.
+"""
+from __future__ import annotations
+
+import logging
+from typing import List, Optional, Set
+
+import numpy as np
+
+from .hnsw import LabeledLevelGraph
+
+logger = logging.getLogger(__name__)
+
+BUILDERS = ("bulk", "incremental")
+DEFAULT_BATCH = 128
+
+
+def pairwise_sq(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Squared L2 between row sets via one BLAS matmul, clamped at 0."""
+    a = np.ascontiguousarray(a, np.float32)
+    b = np.ascontiguousarray(b, np.float32)
+    d = np.einsum("id,id->i", a, a)[:, None] \
+        + np.einsum("jd,jd->j", b, b)[None, :] - 2.0 * (a @ b.T)
+    return np.maximum(d, 0.0, out=d)
+
+
+def gathered_sq(base: np.ndarray, gathered: np.ndarray) -> np.ndarray:
+    """Squared L2 between ``base[r]`` and every gathered row
+    ``gathered[r, c]`` — the per-row dot-identity counterpart of
+    :func:`pairwise_sq`, clamped at 0."""
+    d = np.einsum("rcd,rcd->rc", gathered, gathered) \
+        + np.einsum("rd,rd->r", base, base)[:, None] \
+        - 2.0 * np.einsum("rd,rcd->rc", base, gathered)
+    return np.maximum(d, 0.0, out=d)
+
+
+def rng_prune_batch(vectors: np.ndarray, cand_ids: np.ndarray,
+                    cand_d: np.ndarray, m: int) -> np.ndarray:
+    """Batched RNG rule ("select neighbors heuristic") over R rows at once.
+
+    Per row, equivalent to :func:`repro.core.hnsw.rng_prune`: scanning
+    candidates in ascending base distance, keep c iff no already-kept k has
+    ``d(k, c) < d(base, c)``. Reformulated as suppression so it vectorizes:
+    keeping a candidate suppresses every candidate j with
+    ``d(kept, j) < d(base, j)``; the next kept is the first unsuppressed
+    survivor. That is ``m`` rounds of (R, C) vector ops — the kept-vs-rest
+    distances come from one batched matvec per round instead of per-row
+    Python.
+
+    cand_ids : (R, C) int, sorted ascending by ``cand_d``; ``-1`` = padding
+    cand_d   : (R, C) float, base→candidate squared distance (inf padding)
+    Returns (R, m) int64 kept ids, ``-1``-padded.
+    """
+    cand_ids = np.asarray(cand_ids)
+    R, C = cand_ids.shape
+    kept = np.full((R, m), -1, np.int64)
+    if R == 0 or C == 0:
+        return kept
+    alive = cand_ids >= 0
+    rows = np.arange(R)
+    Vc = vectors[np.clip(cand_ids, 0, None)]            # (R, C, d)
+    for t in range(m):
+        first = np.argmax(alive, axis=1)                # first survivor
+        act = alive[rows, first]                        # False when row done
+        if not act.any():
+            break
+        kept[act, t] = cand_ids[act, first[act]]
+        kv = np.take_along_axis(Vc, first[:, None, None], axis=1)[:, 0]
+        dkj = gathered_sq(kv, Vc)       # d(kept, j) for every candidate j
+        alive &= ~(act[:, None] & (dkj < cand_d))
+        alive[rows, first] &= ~act
+    return kept
+
+
+def _reprune_vertices(g: LabeledLevelGraph, vertices: Set[int],
+                      close_version: int) -> None:
+    """Deferred, batched re-prune: RNG-prune every over-quota vertex of one
+    level down to ``m_max`` in a single vectorized pass (the bulk analogue
+    of ``LabeledLevelGraph._reprune``). Pruned edges close at
+    ``close_version`` — the last version of the batch that caused the
+    overflow — which keeps them valid for (at least) every version the
+    incremental builder would have exposed them at."""
+    todo = [u for u in vertices if len(g.open_adj.get(u, ())) > g.m_max]
+    if not todo:
+        return
+    V = g.vectors
+    deg = [len(g.open_adj[u]) for u in todo]
+    Cmax = max(deg)
+    tgt = np.full((len(todo), Cmax), -1, np.int64)
+    for i, u in enumerate(todo):
+        tgt[i, :deg[i]] = g.open_adj[u]
+    base = V[np.asarray(todo, np.int64)]                # (R, d)
+    Vt = V[np.clip(tgt, 0, None)]                       # (R, Cmax, d)
+    d = gathered_sq(base, Vt)
+    d[tgt < 0] = np.inf
+    order = np.argsort(d, axis=1, kind="stable")
+    kept = rng_prune_batch(V, np.take_along_axis(tgt, order, 1),
+                           np.take_along_axis(d, order, 1), g.m_max)
+    for i, u in enumerate(todo):
+        keep = {int(c) for c in kept[i] if c >= 0}
+        new_adj: List[int] = []
+        new_born: List[int] = []
+        log = None
+        # keep surviving edges in original adjacency order (matches the
+        # incremental builder's _reprune)
+        for v, b in zip(g.open_adj[u], g.open_born[u]):
+            if v in keep:
+                new_adj.append(v)
+                new_born.append(b)
+            else:
+                if log is None:
+                    log = g.closed.setdefault(u, [])
+                log.append((v, b, close_version))
+        g.open_adj[u] = new_adj
+        g.open_born[u] = new_born
+
+
+def bulk_insert_levels(vectors: np.ndarray, order: np.ndarray,
+                       sort_rank: np.ndarray, tkey: np.ndarray, Lv: int, *,
+                       m: int, ef_con: int, m_max: Optional[int] = None,
+                       n_entries: int = 4, batch_size: Optional[int] = None,
+                       progress: Optional[int] = None,
+                       variant: str = "?") -> List[LabeledLevelGraph]:
+    """Build all ``Lv`` level graphs of one variant in sorted-order batches.
+
+    Fills the exact same :class:`LabeledLevelGraph` structures the
+    incremental path fills (so ``freeze`` / member / entry-point code is
+    shared verbatim), but produces candidates from batched distance matmuls
+    instead of per-object beam searches. Returns the populated level graphs.
+    """
+    n = int(order.shape[0])
+    B = DEFAULT_BATCH if batch_size is None else int(batch_size)
+    if B < 1:
+        raise ValueError("batch_size must be >= 1")
+    V = np.ascontiguousarray(vectors, np.float32)
+    levels = [LabeledLevelGraph(V, m=m, ef_con=ef_con, m_max=m_max,
+                                n_entries=n_entries) for _ in range(Lv)]
+    if n == 0:
+        return levels
+    # tree node of every object at every level (Algorithm 1's root→leaf path)
+    node_of = np.stack([np.asarray(tkey, np.int64) >> (Lv - 1 - lvl)
+                        for lvl in range(Lv)])
+    done = 0
+    for start in range(0, n, B):
+        batch = order[start:start + B]
+        end = start + batch.shape[0]
+        prev = order[:end]                    # insertion order, incl. batch
+        # one matmul: batch rows vs every earlier-or-in-batch object; the
+        # per-level candidate sets below are masks over these shared rows
+        Db = pairwise_sq(V[batch], V[prev])
+        earlier = np.arange(end)[None, :] \
+            < (start + np.arange(batch.shape[0]))[:, None]
+        C = min(ef_con, end)
+        for lvl in range(Lv):
+            g = levels[lvl]
+            rnode = node_of[lvl][batch]
+            Dm = np.where(earlier & (node_of[lvl][prev][None, :]
+                                     == rnode[:, None]), Db, np.inf)
+            # exact top-ef_con earlier same-node members per batch object
+            # (the incremental beam search only approximates this set)
+            part = np.argpartition(Dm, C - 1, axis=1)[:, :C]
+            pd = np.take_along_axis(Dm, part, axis=1)
+            o2 = np.argsort(pd, axis=1, kind="stable")
+            cand_d = np.take_along_axis(pd, o2, axis=1)
+            cand_ids = np.where(np.isfinite(cand_d),
+                                prev[np.take_along_axis(part, o2, axis=1)], -1)
+            kept = rng_prune_batch(V, cand_ids, cand_d, m)
+            overfull: Set[int] = set()
+            for i, u in enumerate(batch):
+                u = int(u)
+                ver = int(sort_rank[u])
+                adj_u = g.open_adj.setdefault(u, [])
+                born_u = g.open_born.setdefault(u, [])
+                for c in kept[i]:
+                    if c < 0:
+                        break
+                    c = int(c)
+                    adj_u.append(c)
+                    born_u.append(ver)
+                    adj_c = g.open_adj[c]
+                    adj_c.append(u)
+                    g.open_born[c].append(ver)
+                    if len(adj_c) > g.m_max:
+                        overfull.add(c)
+                if len(adj_u) > g.m_max:
+                    overfull.add(u)
+                node = int(rnode[i])
+                g.node_members.setdefault(node, []).append(u)
+                g.node_member_vers.setdefault(node, []).append(ver)
+            _reprune_vertices(g, overfull, int(sort_rank[int(batch[-1])]))
+        done = end
+        if progress and (done // progress) > ((done - batch.shape[0]) // progress):
+            logger.info("  [%s] bulk-inserted %d/%d", variant, done, n)
+    return levels

@@ -1,12 +1,22 @@
 """MSTG — multi-segment tree graph index (paper §4, Algorithms 1–3).
 
-Build is host-side and incremental, exactly the paper's recipe: objects are
-inserted in ascending order of the variant's sort key; each insertion touches
-the O(log|A|) segment-tree nodes on the root->leaf path of its tree key
-(Algorithm 1), each touched node's labeled HNSW absorbs the vector
+Build is host-side, in ascending order of the variant's sort key; each object
+touches the O(log|A|) segment-tree nodes on the root->leaf path of its tree
+key (Algorithm 1), each touched node's labeled HNSW absorbs the vector
 (Algorithm 3). Path-copying/persistence (§4.2) and label compression (§4.3)
 collapse into the per-level labeled graphs of :mod:`repro.core.hnsw` — nothing
 is ever duplicated, labels recover any version (Theorem D.1).
+
+Two construction paths produce the same frozen schema (``builder`` knob):
+
+* ``"bulk"`` (default) — :mod:`repro.core.build`: sorted-order batches,
+  candidate generation via batched distance matmuls shared across the
+  ``Lv`` levels of each object's tree path, batched RNG pruning, deferred
+  per-batch re-pruning. ~an order of magnitude faster; edge labels are a
+  superset of the incremental ones (recall preserved at every version).
+* ``"incremental"`` — the paper-exact reference oracle: one beam-search
+  insertion per (object, level), per-insertion re-pruning, exact Theorem
+  D.1 labels. Kept selectable for equivalence tests and faithfulness runs.
 
 The frozen index is a set of dense arrays per variant (DESIGN.md §2):
 
@@ -24,6 +34,7 @@ needs and plans queries via Theorem 4.1.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -34,8 +45,11 @@ from repro.checkpoint import index_io
 from . import intervals as iv
 from . import segment_tree as st
 from .api import IndexSpec
+from .build import BUILDERS, bulk_insert_levels
 from .hnsw import OPEN, NO_EDGE, LabeledLevelGraph
 from .predicates import Predicate, as_mask
+
+logger = logging.getLogger(__name__)
 
 # FrozenVariant array fields, in the order they are persisted.
 _FV_ARRAYS = ("sort_rank", "tkey", "nbr", "lab_b", "lab_e",
@@ -82,20 +96,17 @@ def _variant_ranks(variant: str, rl: np.ndarray, rr: np.ndarray, K: int):
     raise ValueError(f"unknown variant {variant}")
 
 
-def build_variant(vectors: np.ndarray, rl: np.ndarray, rr: np.ndarray, K: int,
-                  variant: str, m: int = 16, ef_con: int = 100,
-                  m_max: Optional[int] = None, n_entries: int = 4,
-                  progress: Optional[int] = None) -> FrozenVariant:
-    """Algorithms 1+2: incremental MSTG construction for one variant."""
-    n = vectors.shape[0]
-    Kpad = st.padded_domain(K)
-    Lv = st.num_levels(Kpad)
-    sort_rank, tkey = _variant_ranks(variant, rl, rr, K)
-    order = np.argsort(sort_rank, kind="stable")
-
+def _insert_incremental(vectors: np.ndarray, order: np.ndarray,
+                        sort_rank: np.ndarray, tkey: np.ndarray, Lv: int, *,
+                        m: int, ef_con: int, m_max: Optional[int],
+                        n_entries: int, progress: Optional[int],
+                        variant: str) -> List[LabeledLevelGraph]:
+    """The paper-exact oracle: one beam-search insertion per (object, level)
+    (Algorithm 3 verbatim), per-insertion RNG re-pruning, exact labels."""
+    n = int(order.shape[0])
     levels = [LabeledLevelGraph(vectors, m=m, ef_con=ef_con, m_max=m_max,
                                 n_entries=n_entries) for _ in range(Lv)]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i, u in enumerate(order):
         u = int(u)
         ver = int(sort_rank[u])
@@ -104,7 +115,41 @@ def build_variant(vectors: np.ndarray, rl: np.ndarray, rr: np.ndarray, K: int,
             node = key >> (Lv - 1 - lvl)
             levels[lvl].insert(u, node, ver)
         if progress and (i + 1) % progress == 0:
-            print(f"  [{variant}] inserted {i + 1}/{n} ({time.time() - t0:.1f}s)")
+            logger.info("  [%s] inserted %d/%d (%.1fs)", variant, i + 1, n,
+                        time.perf_counter() - t0)
+    return levels
+
+
+def build_variant(vectors: np.ndarray, rl: np.ndarray, rr: np.ndarray, K: int,
+                  variant: str, m: int = 16, ef_con: int = 100,
+                  m_max: Optional[int] = None, n_entries: int = 4,
+                  progress: Optional[int] = None, builder: str = "bulk",
+                  batch_size: Optional[int] = None) -> FrozenVariant:
+    """Algorithms 1+2: MSTG construction for one variant.
+
+    ``builder="bulk"`` (default) batches candidate generation and pruning
+    (:mod:`repro.core.build`); ``builder="incremental"`` is the paper-exact
+    per-object reference path. Both freeze to the identical array schema.
+    """
+    n = vectors.shape[0]
+    Kpad = st.padded_domain(K)
+    Lv = st.num_levels(Kpad)
+    sort_rank, tkey = _variant_ranks(variant, rl, rr, K)
+    order = np.argsort(sort_rank, kind="stable")
+
+    if builder == "bulk":
+        levels = bulk_insert_levels(vectors, order, sort_rank, tkey, Lv, m=m,
+                                    ef_con=ef_con, m_max=m_max,
+                                    n_entries=n_entries, batch_size=batch_size,
+                                    progress=progress, variant=variant)
+    elif builder == "incremental":
+        levels = _insert_incremental(vectors, order, sort_rank, tkey, Lv, m=m,
+                                     ef_con=ef_con, m_max=m_max,
+                                     n_entries=n_entries, progress=progress,
+                                     variant=variant)
+    else:
+        raise ValueError(f"unknown builder {builder!r}; expected one of "
+                         f"{BUILDERS}")
 
     # freeze adjacency with a uniform slot count across levels
     S = max(max(g.max_slots(n) for g in levels), 1)
@@ -152,7 +197,8 @@ class MSTGIndex:
                  mask: int = iv.ANY_OVERLAP, variants: Optional[Sequence[str]] = None,
                  m: int = 16, ef_con: int = 100, m_max: Optional[int] = None,
                  n_entries: int = 4, domain: Optional[iv.AttributeDomain] = None,
-                 progress: Optional[int] = None):
+                 progress: Optional[int] = None, builder: str = "bulk",
+                 batch_size: Optional[int] = None):
         vectors = np.ascontiguousarray(vectors, dtype=np.float32)
         lo = np.asarray(lo, dtype=np.float64)
         hi = np.asarray(hi, dtype=np.float64)
@@ -164,20 +210,23 @@ class MSTGIndex:
         self.domain = domain or iv.AttributeDomain.from_ranges(lo, hi)
         self.rl = self.domain.rank(lo)
         self.rr = self.domain.rank(hi)
-        self.params = dict(m=m, ef_con=ef_con, m_max=m_max, n_entries=n_entries)
+        self.params = dict(m=m, ef_con=ef_con, m_max=m_max, n_entries=n_entries,
+                           builder=builder, batch_size=batch_size)
         if variants is None:
             variants = iv.variants_required(mask if mask else iv.ANY_OVERLAP)
         self.spec = IndexSpec(predicate=Predicate(mask), variants=tuple(variants),
                               m=m, ef_con=ef_con, m_max=m_max,
-                              n_entries=n_entries)
+                              n_entries=n_entries, builder=builder,
+                              batch_size=batch_size)
         self.build_seconds: Dict[str, float] = {}
         self.variants: Dict[str, FrozenVariant] = {}
         for v in variants:
-            t0 = time.time()
+            t0 = time.perf_counter()
             self.variants[v] = build_variant(
                 vectors, self.rl, self.rr, self.domain.K, v, m=m, ef_con=ef_con,
-                m_max=m_max, n_entries=n_entries, progress=progress)
-            self.build_seconds[v] = time.time() - t0
+                m_max=m_max, n_entries=n_entries, progress=progress,
+                builder=builder, batch_size=batch_size)
+            self.build_seconds[v] = time.perf_counter() - t0
 
     # ---- lifecycle ----
     @classmethod
@@ -190,7 +239,8 @@ class MSTGIndex:
         return cls(vectors, lo, hi, mask=spec.predicate.mask,
                    variants=spec.variants, m=spec.m, ef_con=spec.ef_con,
                    m_max=spec.m_max, n_entries=spec.n_entries,
-                   domain=domain, progress=progress)
+                   domain=domain, progress=progress, builder=spec.builder,
+                   batch_size=spec.batch_size)
 
     def to_payload(self) -> Tuple[Dict[str, np.ndarray], dict]:
         """The persisted form: (arrays, meta). Embedders (e.g. the streaming

@@ -107,9 +107,19 @@ class RetrievalServer:
     ``embed_fn`` should be batched — called with the list of queued items,
     returning a ``(B, d)`` array. Legacy per-item embedders (one item -> one
     ``(d,)`` vector) are auto-detected and looped over as a fallback.
+
+    Background compaction: when the engine is mutable and compactable (a
+    :class:`repro.streaming.SegmentedIndex`), every tick that applied at
+    least one mutation ends by offering the engine's
+    :class:`repro.streaming.CompactionPolicy` a ``compact()`` — the policy
+    decides whether any segment tier is worth merging, so idle ticks and
+    well-compacted indexes cost nothing. ``auto_compact=False`` restores
+    the manual-only behavior. Per-tick counters land in ``tick_stats``
+    (including ``compactions``) and accumulate in ``stats``.
     """
 
-    def __init__(self, engine, embed_fn, k: int = 10, ef: int = 64):
+    def __init__(self, engine, embed_fn, k: int = 10, ef: int = 64,
+                 auto_compact: bool = True):
         # ``engine`` is a QueryEngine or SegmentedIndex (or anything with the
         # legacy positional .search signature; the deprecated MSTGSearcher
         # wrapper still works).
@@ -117,10 +127,18 @@ class RetrievalServer:
         self.embed_fn = embed_fn
         self.k = k
         self.ef = ef
+        self.auto_compact = auto_compact
         # op-tagged queue: ("query", item, qlo, qhi, mask) |
         # ("upsert", ext_id, item, lo, hi) | ("delete", ext_id)
         self.queue: List[Tuple] = []
         self._embed_batched: Optional[bool] = None  # decided on first tick
+        self.tick_stats: Dict[str, int] = self._zero_stats()  # last tick
+        self.stats: Dict[str, int] = self._zero_stats()       # cumulative
+
+    @staticmethod
+    def _zero_stats() -> Dict[str, int]:
+        return {"ticks": 0, "queries": 0, "upserts": 0, "deletes": 0,
+                "compactions": 0, "compacted_rows": 0}
 
     @classmethod
     def from_index(cls, index, embed_fn, k: int = 10, ef: int = 64, **engine_kw):
@@ -180,12 +198,19 @@ class RetrievalServer:
                          for it in items])
 
     def tick(self):
-        """Apply queued mutations (submit order), then execute all queued
-        requests -> {submit order index: QueryHit}. Mutation entries occupy
-        submit-order slots but produce no result entry."""
+        """Apply queued mutations (submit order), auto-compact if any were
+        applied (policy-gated), then execute all queued requests ->
+        {submit order index: QueryHit}. Mutation entries occupy submit-order
+        slots but produce no result entry; ``tick_stats`` describes what the
+        tick did (queries/upserts/deletes/compactions)."""
         from repro.core import QueryHit, SearchRequest
         if not self.queue:
+            # an idle tick did nothing: tick_stats must say so, not replay
+            # the previous tick's counters into a caller's metrics loop
+            self.tick_stats = self._zero_stats()
             return {}
+        tick_stats = self._zero_stats()
+        tick_stats["ticks"] = 1
         # one batched embed call for the whole tick: queries AND upsert items
         embed_slots = [i for i, op in enumerate(self.queue)
                        if op[0] in ("query", "upsert")]
@@ -202,8 +227,20 @@ class RetrievalServer:
                 self.engine.add(np.array([ext_id], np.int64),
                                 vec_of[i][None, :], np.array([lo]),
                                 np.array([hi]))
+                tick_stats["upserts"] += 1
             elif op[0] == "delete":
                 self.engine.delete(np.array([op[1]], np.int64), strict=False)
+                tick_stats["deletes"] += 1
+        # 1b) background compaction: after a mutating tick, let the engine's
+        # CompactionPolicy decide whether a segment tier is worth merging
+        # (compact() is a cheap no-op when the policy picks no victims)
+        if (self.auto_compact
+                and tick_stats["upserts"] + tick_stats["deletes"] > 0
+                and hasattr(self.engine, "compact")):
+            rep = self.engine.compact()
+            if rep.get("merged"):
+                tick_stats["compactions"] += 1
+                tick_stats["compacted_rows"] += rep.get("rows", 0)
         # 2) queries, grouped by predicate mask
         results = {}
         by_mask: Dict[int, List[int]] = {}
@@ -223,5 +260,9 @@ class RetrievalServer:
                                             k=self.k, ef=self.ef)
             for j, i in enumerate(idxs):
                 results[i] = QueryHit(ids[j], d[j])
+        tick_stats["queries"] = len(results)
+        self.tick_stats = tick_stats
+        for k_, v in tick_stats.items():
+            self.stats[k_] += v
         self.queue.clear()
         return results

@@ -16,6 +16,11 @@ Layout (classic log-structured merge, specialized to the paper's index):
   rows, into one rebuilt segment. After ``compact(full=True)`` with an empty
   delta, the single surviving segment **equals** ``MSTGIndex.build`` over the
   live corpus sorted by external id — bit-identical results on all routes.
+  Segment construction honors the spec's ``builder`` knob: ``flush``/
+  ``compact`` rebuilds run the bulk path by default (an order of magnitude
+  cheaper, so compaction stalls shrink accordingly); pin
+  ``IndexSpec(builder="incremental")`` to freeze with the paper-exact
+  reference builder instead.
 
 Search fans out: every live segment executes the request on its own cached
 :class:`repro.core.QueryEngine` (graph / pruned / flat / auto per segment),

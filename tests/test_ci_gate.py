@@ -4,13 +4,15 @@ import subprocess
 import sys
 
 
-def _run_gate(tmp_path, records, tolerance=0.2):
+def _run_gate(tmp_path, records, tolerance=0.2, field="graph_qps",
+              direction=None):
     hist = tmp_path / "hist.jsonl"
     hist.write_text("".join(json.dumps(r) + "\n" for r in records))
-    return subprocess.run(
-        [sys.executable, "-m", "benchmarks.ci_gate", "--history", str(hist),
-         "--field", "graph_qps", "--tolerance", str(tolerance)],
-        capture_output=True, text=True)
+    cmd = [sys.executable, "-m", "benchmarks.ci_gate", "--history", str(hist),
+           "--field", field, "--tolerance", str(tolerance)]
+    if direction:
+        cmd += ["--direction", direction]
+    return subprocess.run(cmd, capture_output=True, text=True)
 
 
 def test_gate_skips_empty_and_prefield_history(tmp_path):
@@ -47,6 +49,37 @@ def test_gate_passes_within_tolerance_and_fails_beyond(tmp_path):
         {"commit": "x", "graph_qps": 10, "platform": "other"},
         {"commit": "b", "graph_qps": 900, "platform": "p"}])
     assert mixed.returncode == 0
+
+
+def test_gate_direction_min_lower_is_better(tmp_path):
+    """build_seconds-style metrics: baseline is the window *minimum* and the
+    gate fails when the new value rises beyond tolerance."""
+    def rec(commit, secs, platform="p"):
+        return {"commit": commit, "build_seconds": secs, "platform": platform}
+
+    ok = _run_gate(tmp_path, [rec("a", 10.0), rec("b", 11.0)],
+                   field="build_seconds", direction="min")
+    assert ok.returncode == 0 and "OK" in ok.stdout
+    bad = _run_gate(tmp_path, [rec("a", 10.0), rec("b", 13.0)],
+                    field="build_seconds", direction="min")
+    assert bad.returncode == 1 and "REGRESSION" in bad.stdout
+    # a faster-than-ever run obviously passes
+    fast = _run_gate(tmp_path, [rec("a", 10.0), rec("b", 4.0)],
+                     field="build_seconds", direction="min")
+    assert fast.returncode == 0
+    # same-platform-only and skip rules apply unchanged
+    cross = _run_gate(tmp_path, [rec("a", 10.0, "laptop"), rec("b", 99.0)],
+                      field="build_seconds", direction="min")
+    assert cross.returncode == 0 and "platform" in cross.stdout
+
+
+def test_gate_direction_min_anchors_on_window_best(tmp_path):
+    """The min-direction baseline is the *fastest* of the window, so slow
+    creep trips once cumulative slowdown crosses the tolerance."""
+    slide = [{"commit": f"c{i}", "build_seconds": 10.0 * (1.15 ** i),
+              "platform": "p"} for i in range(4)]  # 10, 11.5, 13.2, 15.2
+    r = _run_gate(tmp_path, slide, field="build_seconds", direction="min")
+    assert r.returncode == 1 and "REGRESSION" in r.stdout
 
 
 def test_gate_baseline_cannot_ratchet_down(tmp_path):

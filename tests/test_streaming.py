@@ -398,6 +398,89 @@ def test_retrieval_server_applies_mutations_before_queries(sds, spec):
         static.submit_delete(1)
 
 
+def test_retrieval_server_auto_compacts_per_policy(sds):
+    """tick() runs policy-gated background compaction after mutations: two
+    flush-threshold segments appear across ticks, the policy merges them,
+    and the counters land in tick_stats/stats."""
+    from repro.serving import RetrievalServer
+    spec = IndexSpec(variants=("T", "Tp"), m=8, ef_con=40)
+    s = SegmentedIndex(spec, policy=CompactionPolicy(tier_ratio=4.0),
+                       flush_threshold=20)
+
+    def embed(items):
+        return np.stack([sds.vectors[i] for i in items])
+
+    server = RetrievalServer(s, embed_fn=embed, k=3)
+    for i in range(20):
+        server.submit_upsert(i, i, float(sds.lo[i]), float(sds.hi[i]))
+    server.tick()
+    # one segment: a single tombstone-free victim is never merged
+    assert server.tick_stats["upserts"] == 20
+    assert server.tick_stats["compactions"] == 0
+    assert len(s.segments) == 1
+    for i in range(20, 40):
+        server.submit_upsert(i, i, float(sds.lo[i]), float(sds.hi[i]))
+    server.tick()
+    # the second flush created a same-size tier -> auto-compacted to one
+    assert server.tick_stats["compactions"] == 1
+    assert server.tick_stats["compacted_rows"] == 40
+    assert server.stats["compactions"] == 1 and server.stats["upserts"] == 40
+    assert len(s.segments) == 1 and s.segments[0].n == 40
+    # an idle tick resets tick_stats instead of replaying the last tick's
+    assert server.tick() == {}
+    assert server.tick_stats == server._zero_stats()
+    # auto_compact=False restores manual-only compaction
+    s2 = SegmentedIndex(spec, flush_threshold=10)
+    manual = RetrievalServer(s2, embed_fn=embed, k=3, auto_compact=False)
+    for i in range(20):
+        manual.submit_upsert(i, i, float(sds.lo[i]), float(sds.hi[i]))
+    manual.tick()
+    assert len(s2.segments) == 2 and manual.stats["compactions"] == 0
+
+
+def test_compact_full_with_bulk_builder_matches_static_rebuild(sds):
+    """Satellite: a compact(full=True) whose segments froze via the bulk
+    builder equals a static bulk MSTGIndex.build over the live corpus."""
+    spec = IndexSpec(variants=("T", "Tp"), m=8, ef_con=40, builder="bulk")
+    s = SegmentedIndex(spec)
+    s.add(np.arange(100), sds.vectors[:100], sds.lo[:100], sds.hi[:100])
+    s.flush()
+    s.add(np.arange(100, 160), sds.vectors[100:160], sds.lo[100:160],
+          sds.hi[100:160])
+    s.flush()
+    s.delete(np.arange(20))
+    rep = s.compact(full=True)
+    assert rep["new_segment"] is not None and rep["dropped"] == 20
+    assert s.segments[0].index.spec.builder == "bulk"
+    live = np.arange(20, 160)
+    eng = QueryEngine(MSTGIndex.build(spec, sds.vectors[20:160],
+                                      sds.lo[20:160], sds.hi[20:160]))
+    ds = RangeDataset(vectors=sds.vectors[20:160], lo=sds.lo[20:160],
+                      hi=sds.hi[20:160], queries=sds.queries, span=sds.span)
+    qlo, qhi = make_queries(ds, iv.ANY_OVERLAP, 0.15, seed=2)
+    for route in ("graph", "pruned"):
+        req = SearchRequest(sds.queries, (qlo, qhi), iv.ANY_OVERLAP, k=5,
+                            ef=64, route=route)
+        got, want = s.search(req), eng.search(req)
+        np.testing.assert_array_equal(got.ids, _to_ext(want.ids, live),
+                                      err_msg=route)
+        np.testing.assert_array_equal(got.dists, want.dists, err_msg=route)
+
+
+def test_builder_knob_travels_through_manifest(sds, tmp_path):
+    """The spec's builder/batch_size fields round-trip through save/load so
+    future flushes/compactions keep using the pinned construction path."""
+    spec = IndexSpec(variants=("T",), m=8, ef_con=40, builder="bulk",
+                     batch_size=64)
+    s = SegmentedIndex(spec)
+    s.add(np.arange(30), sds.vectors[:30], sds.lo[:30], sds.hi[:30])
+    root = str(tmp_path / "seg")
+    s.save(root)
+    r = SegmentedIndex.load(root)
+    assert r.spec.builder == "bulk" and r.spec.batch_size == 64
+    assert IndexSpec().builder == "bulk"  # bulk is the fleet-wide default
+
+
 # ---- acceptance (c): exp11 smoke gate ----
 
 def test_exp11_update_benchmark_smoke():
