@@ -9,7 +9,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import ANY_OVERLAP, MSTGIndex, QueryEngine, SearchRequest
+from repro.core import (ANY_OVERLAP, EngineConfig, MSTGIndex, QueryEngine,
+                        SearchRequest)
 from repro.data import make_range_dataset
 
 QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
@@ -42,7 +43,7 @@ def bench_engine(idx=None, route: str = "auto", **kw):
     idx = idx or bench_index()
     key = ("engine", id(idx), route, tuple(sorted(kw.items())))
     if key not in _cache:
-        _cache[key] = QueryEngine(idx, route=route, **kw)
+        _cache[key] = QueryEngine(idx, config=EngineConfig(route=route, **kw))
     return _cache[key]
 
 

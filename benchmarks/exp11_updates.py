@@ -24,8 +24,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import (ANY_OVERLAP, IndexSpec, MSTGIndex, QueryEngine,
-                        SearchRequest)
+from repro.core import (ANY_OVERLAP, EngineConfig, IndexSpec, MSTGIndex,
+                        QueryEngine, SearchRequest)
 from repro.data import (RangeDataset, brute_force_topk, make_queries,
                         make_range_dataset, recall_at_k)
 from repro.streaming import SegmentedIndex
@@ -38,14 +38,15 @@ RECALL_GATE = 0.95
 def run_churn(n: int = 800, d: int = 32, n_queries: int = 16, k: int = K,
               insert_frac: float = 0.10, delete_frac: float = 0.05,
               selectivity: float = 0.05, batch: int = 32, seed: int = 0,
-              spec: IndexSpec = None, engine_kwargs: dict = None) -> dict:
+              spec: IndexSpec = None,
+              engine_config: EngineConfig = None) -> dict:
     """Bulk-load -> flush -> churn (interleaved upserts/deletes) -> measure.
 
     Returns a flat dict of metrics; ``update_recall`` is the streamed
     index's recall@k against the static rebuild's results on the identical
     post-churn corpus (1.0 = updates cost nothing vs a full rebuild)."""
     spec = spec or IndexSpec(variants=("T", "Tp"), m=12, ef_con=64)
-    engine_kwargs = engine_kwargs or {}
+    engine_config = engine_config or EngineConfig()
     ds = make_range_dataset(n=n, d=d, n_queries=n_queries, quantize=64,
                             dist="uniform", seed=seed)
     fresh = make_range_dataset(n=max(int(n * insert_frac), 1), d=d,
@@ -54,7 +55,7 @@ def run_churn(n: int = 800, d: int = 32, n_queries: int = 16, k: int = K,
     corpus = {int(i): (ds.vectors[i], float(ds.lo[i]), float(ds.hi[i]))
               for i in range(n)}
 
-    sidx = SegmentedIndex(spec, engine_kwargs=engine_kwargs)
+    sidx = SegmentedIndex(spec, engine_config=engine_config)
     t0 = time.perf_counter()
     half = n // 2
     sidx.add(np.arange(half), ds.vectors[:half], ds.lo[:half], ds.hi[:half])
@@ -110,7 +111,7 @@ def run_churn(n: int = 800, d: int = 32, n_queries: int = 16, k: int = K,
     t0 = time.perf_counter()
     static = MSTGIndex.build(spec, vecs, lo, hi)
     rebuild_seconds = time.perf_counter() - t0
-    seng = QueryEngine(static, **engine_kwargs)
+    seng = QueryEngine(static, config=engine_config)
     sres = seng.search(req)
     static_ext = np.where(sres.ids >= 0, live[np.clip(sres.ids, 0, None)], -1)
 

@@ -3,6 +3,9 @@
 Default mode prints ``name,us_per_call,derived`` CSV for every experiment
 (BENCH_QUICK=1 shrinks sizes). ``--smoke`` instead runs the tiny CI lane
 (exp1 + kernel bench + planner microbenchmark) and writes BENCH_smoke.json.
+``--scale`` runs the sharded recall-QPS pareto lane at n >= 200k (multi-
+device via XLA_FLAGS=--xla_force_host_platform_device_count) and writes
+BENCH_scale.json.
 """
 import argparse
 import os
@@ -16,8 +19,18 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI lane; writes a JSON perf artifact")
-    ap.add_argument("--out", default="BENCH_smoke.json",
-                    help="output path for --smoke (default: BENCH_smoke.json)")
+    ap.add_argument("--scale", action="store_true",
+                    help="sharded pareto lane at n >= 200k; writes "
+                         "BENCH_scale.json (multi-device when XLA_FLAGS "
+                         "forces a host device count)")
+    ap.add_argument("--out", default=None,
+                    help="output path for --smoke / --scale (defaults: "
+                         "BENCH_smoke.json / BENCH_scale.json)")
+    ap.add_argument("--scale-n", type=int, default=200_000,
+                    help="--scale corpus size (default 200000)")
+    ap.add_argument("--shards", default="1,2,4,8",
+                    help="--scale comma-separated shard counts "
+                         "(default 1,2,4,8)")
     ap.add_argument("--mask", default="any_overlap",
                     help="RR predicate for the smoke lane, in any parse_mask "
                          "spelling: 'any_overlap', '1|2|<', '2,4' (single "
@@ -34,7 +47,17 @@ def main() -> None:
         from repro.core import parse_mask
 
         from .smoke import run_smoke
-        run_smoke(out_path=args.out, mask=parse_mask(args.mask),
+        run_smoke(out_path=args.out or "BENCH_smoke.json",
+                  mask=parse_mask(args.mask), history_path=args.history)
+        return
+
+    if args.scale:
+        from repro.core import parse_mask
+
+        from .scale import run_scale
+        run_scale(out_path=args.out or "BENCH_scale.json", n=args.scale_n,
+                  mask=parse_mask(args.mask),
+                  shard_counts=tuple(int(s) for s in args.shards.split(",")),
                   history_path=args.history)
         return
 

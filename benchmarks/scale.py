@@ -1,0 +1,135 @@
+"""``--scale`` lane: sharded recall-QPS pareto curves at n >= 200k.
+
+The smoke lane (n=800) can't say anything about distributed serving — at toy
+scale recall is trivially 1.0 and the merge traffic rounds to zero. This
+lane builds a corpus two-plus orders larger, shards it over a device mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in CI), and sweeps
+the two axes that matter for a sharded deployment:
+
+* **shard count D** — each count runs as one fused
+  :func:`repro.distributed.topk.sharded_flat_topk` program (exact per-shard
+  scans + collective merge; ``all_gather``/``tournament`` per
+  :func:`resolve_merge`). The exact route is the right scale vehicle: MSTG
+  graph construction is superlinear (~11 s at 5k rows, ~108 s at 20k on CI
+  CPUs), so graph-backend sharding is exercised at smoke scale by
+  ``tests/test_distributed.py`` while this lane measures the fan-out/merge
+  machinery itself at n where it costs something.
+* **per-shard fan-in k'** (``per_shard_k``) — each shard contributes only
+  its local top-k' to the merge. ``k' == k`` is provably exact (recall
+  matches single-device); ``k' < k`` cuts merge bytes ∝ D·Q·k' and can drop
+  true neighbors when one shard holds more than k' of them. Sweeping k'
+  traces the recall-QPS pareto frontier per shard count.
+
+Ground truth is sampled: exact single-device flat top-k over the (Q-sized)
+query sample, not the full query distribution. The headline ``sharded_qps``
+(largest shard count at full fan-in, i.e. recall-exact) feeds
+``benchmarks.ci_gate`` through the shared BENCH_history.jsonl.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import ANY_OVERLAP, SearchRequest, intervals as iv
+from repro.data import make_range_dataset, make_queries, recall_at_k
+from repro.distributed import DeploymentSpec, ShardedDeployment
+from repro.launch.mesh import make_mesh
+
+
+def _pareto_point(dep: ShardedDeployment, req: SearchRequest, tids,
+                  repeats: int = 3) -> dict:
+    res = dep.execute(req)                      # warmup / compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = dep.execute(req)
+        best = min(best, time.perf_counter() - t0)
+    return {"recall_at_10": round(recall_at_k(res.ids, tids), 4),
+            "qps": round(len(req) / best, 1),
+            "merge": res.report.merge}
+
+
+def run_scale(out_path: str = "BENCH_scale.json", n: int = 200_000,
+              d: int = 32, n_queries: int = 32, k: int = 10,
+              mask: int = ANY_OVERLAP, shard_counts=(1, 2, 4, 8),
+              fan_ins=(1, 2, 4, 0), history_path: str = None) -> dict:
+    """Sweep shard count x per-shard fan-in; write BENCH_scale.json.
+
+    ``fan_ins`` entries are ``per_shard_k`` values (0 = full k). Shard
+    counts beyond the device count fall back to the host merge path (still
+    measured, flagged ``merge: "host"``)."""
+    n_dev = len(jax.devices())
+    report: dict = {
+        "schema": 1,
+        "unix_time": time.time(),
+        "platform": platform.platform(),
+        "mask": iv.mask_name(mask),
+        "devices": n_dev,
+        "sizes": {"n": n, "d": d, "queries": n_queries, "k": k},
+    }
+    t0 = time.perf_counter()
+    ds = make_range_dataset(n=n, d=d, n_queries=n_queries, quantize=1024,
+                            dist="uniform", seed=0)
+    qlo, qhi = make_queries(ds, mask, 0.05, seed=11)
+    report["dataset_seconds"] = round(time.perf_counter() - t0, 2)
+
+    # sampled ground truth: exact single-shard scan over the query sample
+    gt = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                spec=DeploymentSpec(n_shards=1, merge="host"))
+    req = SearchRequest(ds.queries, (qlo, qhi), mask, k=k)
+    tids = gt.execute(req).ids
+
+    pareto = []
+    for D in shard_counts:
+        if n % D:
+            continue
+        mesh = make_mesh((D,), ("data",)) if D <= n_dev else None
+        for fk in fan_ins:
+            spec = DeploymentSpec(n_shards=D, per_shard_k=fk,
+                                  merge="auto" if mesh is not None else "host")
+            dep = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                         spec=spec, mesh=mesh)
+            point = _pareto_point(dep, req, tids)
+            point.update({"shards": D, "per_shard_k": fk or k})
+            pareto.append(point)
+            print(f"  shards={D} k'={fk or k} merge={point['merge']:10s} "
+                  f"recall@10={point['recall_at_10']:.3f} "
+                  f"qps={point['qps']:.0f}")
+    report["pareto"] = pareto
+
+    # headline: largest shard count at full fan-in (recall-exact config)
+    exact = [p for p in pareto if p["per_shard_k"] >= k]
+    headline = max(exact, key=lambda p: p["shards"]) if exact else None
+    report["sharded_qps"] = headline["qps"] if headline else None
+    report["sharded_recall_at_10"] = (headline["recall_at_10"]
+                                      if headline else None)
+    report["sharded_shards"] = headline["shards"] if headline else None
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    if history_path:
+        record = {
+            "commit": os.environ.get("GITHUB_SHA", "local")[:12],
+            "unix_time": round(report["unix_time"], 1),
+            "platform": report["platform"],
+            "mask": report["mask"],
+            "scale_n": n,
+            "devices": n_dev,
+            "sharded_qps": report["sharded_qps"],
+            "sharded_recall_at_10": report["sharded_recall_at_10"],
+            "sharded_shards": report["sharded_shards"],
+            "pareto": pareto,
+        }
+        with open(history_path, "a") as f:
+            f.write(json.dumps(record, sort_keys=True) + "\n")
+        print(f"appended {history_path}: sharded_qps="
+              f"{record['sharded_qps']}")
+    return report

@@ -6,10 +6,14 @@ Public surface (the declarative API is the supported entry point):
 * typed requests     — :class:`SearchRequest` -> :class:`SearchResult` with
   :class:`RouteReport` diagnostics (:mod:`repro.core.api`)
 * index lifecycle    — :class:`IndexSpec`, ``MSTGIndex.build/save/load``
-* execution          — :class:`QueryEngine` (auto-routed graph / pruned / flat)
+* execution          — :class:`QueryEngine` configured by one typed
+  :class:`EngineConfig` (auto-routed graph / pruned / flat); sharded
+  multi-device execution lives in :mod:`repro.distributed`
+  (``ShardedDeployment``), reported per shard via :class:`ShardReport`
 
-``MSTGSearcher``/``FlatSearcher`` and raw int masks remain as deprecated
-shims for the tuple-era API.
+The tuple-era ``MSTGSearcher``/``FlatSearcher`` shims and the positional
+``QueryEngine.search(queries, qlo, qhi, mask)`` form were removed in PR 6;
+raw int masks remain accepted anywhere a Predicate is.
 """
 from . import build, intervals, segment_tree
 from .intervals import (LEFT_OVERLAP, QUERY_CONTAINED, RIGHT_OVERLAP,
@@ -22,12 +26,12 @@ from .predicates import (Predicate, LeftOverlap, RightOverlap, QueryContained,
                          QueryContaining, Contains, ContainedBy, Overlaps,
                          Before, After, as_predicate, as_mask)
 from .api import (IndexSpec, QueryHit, RouteReport, SearchRequest,
-                  SearchResult, SegmentReport)
+                  SearchResult, SegmentReport, ShardReport)
 from .mstg import MSTGIndex, FrozenVariant, build_variant
 from .search import (mstg_graph_search, mstg_graph_search_chunked,
                      merge_topk)
 from .flat import flat_search
-from .engine import QueryEngine, MSTGSearcher, FlatSearcher
+from .engine import EngineConfig, QueryEngine
 
 __all__ = [
     # predicate algebra
@@ -36,18 +40,17 @@ __all__ = [
     "After", "as_predicate", "as_mask",
     # typed request/result surface
     "SearchRequest", "SearchResult", "QueryHit", "RouteReport",
-    "SegmentReport", "IndexSpec",
+    "SegmentReport", "ShardReport", "IndexSpec",
     # index + engines
-    "MSTGIndex", "QueryEngine", "FrozenVariant", "build_variant",
-    "AttributeDomain", "mstg_graph_search", "mstg_graph_search_chunked",
-    "merge_topk", "flat_search",
+    "MSTGIndex", "QueryEngine", "EngineConfig", "FrozenVariant",
+    "build_variant", "AttributeDomain", "mstg_graph_search",
+    "mstg_graph_search_chunked", "merge_topk", "flat_search",
     # planner internals
     "SearchTask", "PlanSlot", "plan_searches", "plan_batch_ranked",
     "eval_predicate", "mask_name", "parse_mask", "SelectivityIndex",
-    # legacy bitmask constants + shims
+    # legacy bitmask constants
     "LEFT_OVERLAP", "QUERY_CONTAINED", "RIGHT_OVERLAP", "QUERY_CONTAINING",
     "BEFORE", "AFTER", "ANY_OVERLAP", "RFANN_MASK", "IFANN_MASK", "TSANN_MASK",
-    "MSTGSearcher", "FlatSearcher",
     # submodules
     "build", "intervals", "segment_tree",
 ]

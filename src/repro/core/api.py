@@ -137,6 +137,38 @@ class SegmentReport:
     slot_count: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardReport:
+    """How one shard of a :class:`repro.distributed.ShardedDeployment` served
+    its share of a fanned-out request — the sharded-execution counterpart of
+    :class:`SegmentReport`, so :class:`RouteReport` stays uniform across
+    local, streaming, and sharded execution.
+
+    shard      : shard index on the deployment's corpus axis
+    n          : corpus rows assigned to this shard
+    route      : route the shard's local engine executed ("graph" | "pruned"
+                 | "flat" | "segmented"), or why it contributed nothing
+                 ("lost" = marked down before the request, "error" = its
+                 local search raised and was converted to a miss)
+    alive      : False when the shard contributed no results (lost/error);
+                 such shards also appear in ``RouteReport.missing_shards``
+    k_fetched  : per-shard top-k width fanned in to the merge (the
+                 deployment's ``per_shard_k``, clamped to the request's k)
+    latency_s  : wall-clock seconds of the shard's local search (0.0 when the
+                 whole fan-out ran as one fused ``shard_map`` call — the
+                 device path has no per-shard host timing)
+    slot_count : Theorem 4.1 plan slots the shard's local engine executed
+    """
+
+    shard: int
+    n: int
+    route: str
+    alive: bool = True
+    k_fetched: int = 0
+    latency_s: float = 0.0
+    slot_count: int = 0
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class RouteReport:
     """What the engine did with one request (diagnostics, not results).
@@ -145,7 +177,10 @@ class RouteReport:
                        empty (Q=0) request executes nothing and mirrors the
                        requested value here (possibly "auto"); a streaming
                        :class:`repro.streaming.SegmentedIndex` fan-out reports
-                       "segmented" here and per-segment routes in ``segments``
+                       "segmented" here and per-segment routes in ``segments``;
+                       a :class:`repro.distributed.ShardedDeployment` fan-out
+                       reports "sharded" here and per-shard routes in
+                       ``shards``
     requested        : what the caller asked for (may be "auto")
     est_selectivity  : (Q,) estimated predicate selectivity, when the auto
                        router evaluated it (None for pinned routes)
@@ -154,6 +189,15 @@ class RouteReport:
     cache_hits/misses: selectivity-cache traffic caused by this request
     segments         : per-segment :class:`SegmentReport` records when the
                        request fanned out over a segmented index (else empty)
+    shards           : per-shard :class:`ShardReport` records when the request
+                       fanned out over a sharded deployment (else empty)
+    missing_shards   : shard indices that contributed nothing (lost or
+                       errored); non-empty means the answer is ``degraded``
+                       (complete over the surviving shards, possibly missing
+                       true neighbors that lived on the lost ones)
+    merge            : distributed top-k merge schedule that combined shard
+                       results ("all_gather" | "tournament" | "host"; None
+                       for non-sharded execution)
     """
 
     route: str
@@ -164,6 +208,16 @@ class RouteReport:
     cache_hits: int = 0
     cache_misses: int = 0
     segments: Tuple[SegmentReport, ...] = ()
+    shards: Tuple[ShardReport, ...] = ()
+    missing_shards: Tuple[int, ...] = ()
+    merge: Optional[str] = None
+
+    @property
+    def degraded(self) -> bool:
+        """True when one or more shards contributed nothing — the results are
+        complete over the surviving shards only (degraded recall, not an
+        error)."""
+        return len(self.missing_shards) > 0
 
     @property
     def mean_selectivity(self) -> Optional[float]:
@@ -212,6 +266,13 @@ class SearchResult:
     def valid_mask(self) -> np.ndarray:
         """(Q, k) bool: which result slots hold a real neighbor."""
         return self.ids >= 0
+
+    @property
+    def degraded(self) -> bool:
+        """True when sharded execution lost one or more shards — the answer
+        is complete over the surviving shards only (see
+        ``report.missing_shards``). Always False for non-sharded execution."""
+        return self.report is not None and self.report.degraded
 
     def astuple(self) -> Tuple[np.ndarray, np.ndarray]:
         """The legacy ``(ids, dists)`` pair (for tuple-era call sites)."""

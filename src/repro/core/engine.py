@@ -33,15 +33,30 @@ One object owns everything a request needs:
   one per distinct batch size; padded queries carry empty tasks and cost no
   search steps.
 
+Engine-lifetime tuning lives in one typed :class:`EngineConfig` dataclass
+(``QueryEngine(index, config=EngineConfig(...))``); per-request knobs live on
+the :class:`repro.core.api.SearchRequest`. When both speak to the same knob
+the precedence is deterministic and uniform:
+
+    **request wins over config wins over backend heuristic.**
+
+Concretely: ``route`` resolves request → config; ``fanout`` and ``chunk``
+resolve request → config → backend heuristic (TPU/CPU frontier width, batch
+width chunking); ``ef``/``k``/``max_steps`` are request-only; ``use_kernel``/
+``packed_visited``/routing-model constants are config-only.
+
 Every execution returns a :class:`repro.core.api.SearchResult` whose
 :class:`repro.core.api.RouteReport` records the chosen route, estimated
 selectivity, plan slots, and selectivity-cache traffic. The tuple-era
 positional call ``search(queries, qlo, qhi, mask)`` and the
-``MSTGSearcher``/``FlatSearcher`` wrappers still work but are deprecated
-shims over this surface.
+``MSTGSearcher``/``FlatSearcher`` wrappers (deprecated since PR 2) were
+removed in PR 6 — see the README migration guide. Bare constructor knobs
+(``QueryEngine(index, use_kernel=True)``) still work but are deprecated
+shims that warn once and fold into an :class:`EngineConfig`.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import warnings
 from typing import Dict, List, Optional, Tuple, Union
@@ -70,10 +85,11 @@ def _next_pow2(x: int) -> int:
     return 1 << max(int(x) - 1, 0).bit_length()
 
 
-# Deprecated tuple-API shims warn exactly once per process per shim: serving
-# loops that still cross a shim don't spam one warning per request, while the
-# first crossing is always visible (and fails CI, which escalates
-# DeprecationWarnings attributed to repro.* modules to errors).
+# Deprecated shims (today: bare QueryEngine constructor knobs) warn exactly
+# once per process per shim: serving loops that still cross a shim don't spam
+# one warning per request, while the first crossing is always visible (and
+# fails CI, which escalates DeprecationWarnings attributed to repro.* modules
+# to errors).
 _DEPRECATION_EMITTED: set = set()
 
 
@@ -97,17 +113,25 @@ def _empty_result(Q: int, k: int) -> Tuple[np.ndarray, np.ndarray]:
             np.full((Q, k), np.inf, np.float32))
 
 
-class QueryEngine:
-    """Unified search facade: plan once, execute on the best engine.
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine-lifetime tuning for :class:`QueryEngine`, as one typed value.
+
+    This replaces the constructor-knob sprawl (``use_kernel``, ``route``,
+    ``graph_fanout``, ...) that accumulated across PRs 1-5: configs validate
+    once, travel as a unit (serving fleets, per-shard engines of a
+    :class:`repro.distributed.ShardedDeployment`), and derive variants with
+    :meth:`replace`. A ``None`` on ``graph_fanout``/``graph_chunk`` means
+    *the engine's backend heuristic decides*; a :class:`SearchRequest` field
+    overrides both (request wins over config wins over backend heuristic).
 
     Parameters
     ----------
-    index : MSTGIndex
-        Built index; whichever variants it has bound the masks it can serve.
     use_kernel : bool
         Route distance evaluation through the Pallas kernels.
     route : str
         Default routing policy: ``auto`` | ``graph`` | ``pruned`` | ``flat``.
+        A request's ``route`` overrides it per call.
     flat_threshold : float, optional
         ``None`` (default): ``auto`` routes by a work model — the exact
         pruned scan is chosen while its estimated per-query work
@@ -124,6 +148,8 @@ class QueryEngine:
     pad_queries : bool
         Pad batches to power-of-two sizes so jit traces are reused across
         ragged serving batches.
+    sel_cache_max : int
+        Bound on the selectivity memo (FIFO eviction past it).
     graph_fanout : int, optional
         Frontier vertices the wavefront graph search expands per step when a
         request leaves ``fanout=None``. ``None`` (default) picks per
@@ -136,7 +162,8 @@ class QueryEngine:
         ``lax.while_loop`` to global convergence); ``"auto"`` (default)
         chunks at 16 steps once the padded batch reaches 64 queries — below
         that the per-slice dispatch overhead outweighs the compaction
-        savings. Results are bit-identical in every mode.
+        savings. Results are bit-identical in every mode. A request's
+        ``chunk`` overrides it per call.
     packed_visited : bool
         Use the bit-packed ``(Q, ceil(n/32))`` uint32 visited bitmap (n/8
         bytes per query) instead of the dense ``(Q, n)`` bool reference
@@ -144,37 +171,92 @@ class QueryEngine:
         tests and as a fallback.
     """
 
-    def __init__(self, index: MSTGIndex, use_kernel: bool = False,
-                 route: str = ROUTE_AUTO,
-                 flat_threshold: Optional[float] = None,
-                 selectivity_sample: int = 2048, pad_queries: bool = True,
-                 sel_cache_max: int = 65536,
-                 graph_fanout: Optional[int] = None,
-                 graph_chunk: Union[int, str, None] = "auto",
-                 packed_visited: bool = True,
-                 route_work_ratio: float = 1.0):
-        if route not in _ROUTES:
-            raise ValueError(f"route must be one of {_ROUTES}, got {route!r}")
-        if graph_fanout is not None and graph_fanout < 1:
+    use_kernel: bool = False
+    route: str = ROUTE_AUTO
+    flat_threshold: Optional[float] = None
+    route_work_ratio: float = 1.0
+    selectivity_sample: int = 2048
+    pad_queries: bool = True
+    sel_cache_max: int = 65536
+    graph_fanout: Optional[int] = None
+    graph_chunk: Union[int, str, None] = "auto"
+    packed_visited: bool = True
+
+    def __post_init__(self):
+        if self.route not in _ROUTES:
+            raise ValueError(f"route must be one of {_ROUTES}, got "
+                             f"{self.route!r}")
+        if self.graph_fanout is not None and self.graph_fanout < 1:
             raise ValueError("graph_fanout must be >= 1 (or None: backend "
-                             f"heuristic), got {graph_fanout!r}")
-        if not (graph_chunk is None or graph_chunk == "auto"
-                or (isinstance(graph_chunk, int) and graph_chunk >= 0)):
+                             f"heuristic), got {self.graph_fanout!r}")
+        if not (self.graph_chunk is None or self.graph_chunk == "auto"
+                or (isinstance(self.graph_chunk, int)
+                    and self.graph_chunk >= 0)):
             raise ValueError("graph_chunk must be an int >= 1, 0/None "
                              "(single-loop driver), or \"auto\", got "
-                             f"{graph_chunk!r}")
+                             f"{self.graph_chunk!r}")
+        if self.selectivity_sample < 1:
+            raise ValueError("selectivity_sample must be >= 1")
+        if self.sel_cache_max < 1:
+            raise ValueError("sel_cache_max must be >= 1")
+
+    def replace(self, **overrides) -> "EngineConfig":
+        """A copy with ``overrides`` applied (re-validated)."""
+        return dataclasses.replace(self, **overrides)
+
+
+_ENGINE_KNOBS = frozenset(f.name for f in dataclasses.fields(EngineConfig))
+
+
+class QueryEngine:
+    """Unified search facade: plan once, execute on the best engine.
+
+    Parameters
+    ----------
+    index : MSTGIndex
+        Built index; whichever variants it has bound the masks it can serve.
+    config : EngineConfig, optional
+        Engine-lifetime tuning (kernels, routing policy, wavefront knobs,
+        padding, selectivity estimator) — see :class:`EngineConfig` for every
+        field. Defaults to ``EngineConfig()``.
+    **legacy_knobs
+        The pre-config constructor surface (``QueryEngine(index,
+        use_kernel=True, graph_chunk=16, ...)``). Deprecated: warns once per
+        process and folds the knobs into ``config`` (knobs win over an
+        explicitly passed config). New code should construct an
+        :class:`EngineConfig`.
+    """
+
+    def __init__(self, index: MSTGIndex,
+                 config: Optional[EngineConfig] = None, **legacy_knobs):
+        if legacy_knobs:
+            unknown = sorted(set(legacy_knobs) - _ENGINE_KNOBS)
+            if unknown:
+                raise TypeError(f"unknown QueryEngine knob(s) {unknown}; "
+                                f"valid knobs: {sorted(_ENGINE_KNOBS)}")
+            _warn_deprecated(
+                "QueryEngine.knobs",
+                "bare QueryEngine constructor knobs are deprecated; pass "
+                "QueryEngine(index, config=EngineConfig(...))",
+                stacklevel=2)
+            config = (config or EngineConfig()).replace(**legacy_knobs)
+        config = config if config is not None else EngineConfig()
+        if not isinstance(config, EngineConfig):
+            raise TypeError("config must be an EngineConfig, got "
+                            f"{type(config).__name__}")
+        self.config = config
         self.index = index
-        self.use_kernel = use_kernel
-        self.default_route = route
-        self.flat_threshold = (None if flat_threshold is None
-                               else float(flat_threshold))
-        self.route_work_ratio = float(route_work_ratio)
+        self.use_kernel = config.use_kernel
+        self.default_route = config.route
+        self.flat_threshold = (None if config.flat_threshold is None
+                               else float(config.flat_threshold))
+        self.route_work_ratio = float(config.route_work_ratio)
         self._max_slots = max((fv.nbr.shape[2]
                                for fv in index.variants.values()), default=16)
-        self.pad_queries = pad_queries
-        self.graph_fanout = graph_fanout
-        self.graph_chunk = graph_chunk
-        self.packed_visited = bool(packed_visited)
+        self.pad_queries = config.pad_queries
+        self.graph_fanout = config.graph_fanout
+        self.graph_chunk = config.graph_chunk
+        self.packed_visited = bool(config.packed_visited)
 
         self.corpus = jnp.asarray(index.vectors, jnp.float32)
         self.lo = jnp.asarray(index.lo, jnp.float32)
@@ -186,7 +268,7 @@ class QueryEngine:
         self._sorted_rank: Dict[str, np.ndarray] = {}
 
         n = index.vectors.shape[0]
-        m = min(n, int(selectivity_sample))
+        m = min(n, int(config.selectivity_sample))
         sel = (np.arange(n) if m == n
                else np.random.default_rng(0).choice(n, size=m, replace=False))
         self._sample_lo = np.asarray(index.lo)[sel]
@@ -208,7 +290,7 @@ class QueryEngine:
         # Bounded FIFO: overflow evicts the oldest entries (dict preserves
         # insertion order), never the whole memo.
         self._sel_cache: Dict[tuple, float] = {}
-        self._sel_cache_max = int(sel_cache_max)
+        self._sel_cache_max = int(config.sel_cache_max)
         self.sel_cache_hits = 0
         self.sel_cache_misses = 0
         self.sel_cache_evictions = 0
@@ -323,37 +405,24 @@ class QueryEngine:
         return self._auto_route(self.estimate_selectivity(mask, qlo, qhi), ef)
 
     # ---- execution ----
-    def search(self, request: Union[SearchRequest, np.ndarray],
-               qlo: Optional[np.ndarray] = None,
-               qhi: Optional[np.ndarray] = None, mask: Optional[int] = None,
-               k: int = 10, ef: int = 64, max_steps: Optional[int] = None,
-               fanout: int = 1, route: Optional[str] = None):
+    def search(self, request: SearchRequest, **opts) -> SearchResult:
         """Execute a :class:`repro.core.api.SearchRequest` ->
         :class:`repro.core.api.SearchResult`.
 
         The tuple-era positional form ``search(queries, qlo, qhi, mask, ...)``
-        still works — it returns the bare ``(ids, dists)`` pair — but is
-        deprecated; build a ``SearchRequest`` instead.
+        (deprecated since PR 2) was removed in PR 6 — build a
+        ``SearchRequest`` instead (README has the migration table).
         """
-        if isinstance(request, SearchRequest):
-            if (qlo is not None or qhi is not None or mask is not None
-                    or k != 10 or ef != 64 or max_steps is not None
-                    or fanout != 1 or route is not None):
-                raise TypeError(
-                    "options must be set on the SearchRequest itself; "
-                    "extra search() arguments would be silently ignored")
-            return self.execute(request)
-        _warn_deprecated(
-            "QueryEngine.search",
-            "QueryEngine.search(queries, qlo, qhi, mask) is deprecated; pass "
-            "a repro.core.SearchRequest (returns a SearchResult)",
-            stacklevel=2)
-        if qlo is None or qhi is None or mask is None:
-            raise TypeError("legacy QueryEngine.search() requires queries, "
-                            "qlo, qhi, and mask")
-        req = SearchRequest(request, (qlo, qhi), mask, k=k, ef=ef, route=route,
-                            max_steps=max_steps, fanout=fanout)
-        return self.execute(req).astuple()
+        if not isinstance(request, SearchRequest):
+            raise TypeError(
+                "QueryEngine.search takes a repro.core.SearchRequest; the "
+                "tuple-era positional form search(queries, qlo, qhi, mask) "
+                "was removed — see the README migration guide")
+        if opts:
+            raise TypeError(
+                f"unexpected search option(s) {sorted(opts)} — per-request "
+                "knobs (k, ef, route, ...) go on the SearchRequest")
+        return self.execute(request)
 
     def execute(self, request: SearchRequest) -> SearchResult:
         """Plan, route, and run one request; always returns a SearchResult."""
@@ -550,55 +619,3 @@ class QueryEngine:
                            jnp.asarray(qlo_p, jnp.float32),
                            jnp.asarray(qhi_p, jnp.float32),
                            mask=mask, k=k, use_kernel=self.use_kernel)
-
-
-class MSTGSearcher:
-    """Deprecated compatibility wrapper: the historical tuple-returning
-    graph-path API, now a fixed-route view over :class:`QueryEngine`. New
-    code should call ``QueryEngine.search(SearchRequest(...))``."""
-
-    def __init__(self, index: MSTGIndex, use_kernel: bool = False,
-                 engine: Optional[QueryEngine] = None):
-        _warn_deprecated(
-            "MSTGSearcher",
-            "MSTGSearcher is deprecated; use QueryEngine with a "
-            "SearchRequest(route='graph')", stacklevel=2)
-        self.index = index
-        self.use_kernel = use_kernel
-        self.engine = engine or QueryEngine(index, use_kernel=use_kernel,
-                                            route=ROUTE_GRAPH)
-
-    def search(self, queries, qlo, qhi, mask, k: int = 10, ef: int = 64,
-               max_steps: Optional[int] = None, fanout: int = 1
-               ) -> Tuple[np.ndarray, np.ndarray]:
-        return self.engine.search_graph(queries, qlo, qhi, mask, k=k, ef=ef,
-                                        max_steps=max_steps, fanout=fanout)
-
-
-class FlatSearcher:
-    """Deprecated compatibility wrapper: the tuple-returning exact engines
-    (full brute force + tree-pruned scan) as a fixed-route view over
-    :class:`QueryEngine`. New code should call
-    ``QueryEngine.search(SearchRequest(route='flat'|'pruned'))``."""
-
-    def __init__(self, index: MSTGIndex, use_kernel: bool = False,
-                 engine: Optional[QueryEngine] = None):
-        _warn_deprecated(
-            "FlatSearcher",
-            "FlatSearcher is deprecated; use QueryEngine with a "
-            "SearchRequest(route='flat') or route='pruned'", stacklevel=2)
-        self.index = index
-        self.use_kernel = use_kernel
-        self.engine = engine or QueryEngine(index, use_kernel=use_kernel,
-                                            route=ROUTE_FLAT)
-
-    def search(self, queries, qlo, qhi, mask: int, k: int = 10):
-        """Full-corpus fused brute force (ground-truth grade)."""
-        return self.engine.search_flat(queries, qlo, qhi, mask, k=k)
-
-    def search_pruned(self, queries, qlo, qhi, mask: int, k: int = 10,
-                      block: int = 256, max_candidates: Optional[int] = None):
-        """Tree-pruned exact search: work ∝ selectivity."""
-        return self.engine.search_pruned(queries, qlo, qhi, mask, k=k,
-                                         block=block,
-                                         max_candidates=max_candidates)

@@ -174,5 +174,5 @@ def _pruned_search_variant(arrays: dict, lo_attr, hi_attr, queries, ql, qh,
     return top_i, top_d
 
 
-# FlatSearcher (the host-facing exact-search API) lives in repro.core.engine,
-# built on the QueryEngine facade; this module keeps the jitted engines.
+# The host-facing exact-search API is QueryEngine (repro.core.engine) with
+# route="flat"/"pruned"; this module keeps the jitted engines.

@@ -477,5 +477,5 @@ def merge_topk(ids_a, d_a, ids_b, d_b, k: int):
     return jnp.take_along_axis(ids, order, 1), jnp.take_along_axis(d, order, 1)
 
 
-# MSTGSearcher (the host-facing graph-path API) lives in repro.core.engine,
-# built on the QueryEngine facade; this module keeps the device-level pieces.
+# The host-facing graph-path API is QueryEngine (repro.core.engine) with
+# route="graph"; this module keeps the device-level pieces.

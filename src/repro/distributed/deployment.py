@@ -1,0 +1,374 @@
+"""ShardedDeployment — multi-device serving of RRANN search.
+
+The corpus partitions across the shards of a device mesh
+(:func:`repro.launch.mesh.make_mesh`); each :class:`repro.core.SearchRequest`
+fans out to every shard, runs the *existing* per-shard routes locally (the
+exact pruned scan, the wavefront graph search, or a whole streaming
+:class:`repro.streaming.SegmentedIndex` per shard), and the per-shard top-k
+lists are combined through the :mod:`repro.distributed.topk` merge schedules
+— ``all_gather`` for small meshes, ``tournament`` ppermute for pod-scale
+ones, or a host merge when no mesh is attached.
+
+Three shard layouts:
+
+* :meth:`ShardedDeployment.build` — contiguous corpus slices, one
+  :class:`repro.core.MSTGIndex` + :class:`repro.core.QueryEngine` per shard
+  (every engine route available per shard; local ids are rebased to global
+  row ids).
+* :meth:`ShardedDeployment.from_segmented` — an existing
+  :class:`repro.streaming.SegmentedIndex`'s frozen segments dealt round-robin
+  onto shards (the delta buffer rides on shard 0). A snapshot view: segments
+  are shared, not copied, so mutate the source index and re-derive.
+* :meth:`ShardedDeployment.flat` — raw corpus slices served by the exact
+  flat scan. The only layout with a fully *fused* device path: one
+  ``shard_map`` call (:func:`repro.distributed.topk.sharded_flat_topk`)
+  computes local scans and the merge without ever materializing per-shard
+  results on host — this is what the ``--scale`` bench lane measures.
+
+Fan-in width: ``DeploymentSpec.per_shard_k`` caps how many candidates each
+shard contributes to the merge. ``k' == k`` reproduces the single-device
+answer exactly (every global top-k member lives in some shard's local
+top-k); ``k' < k`` trades recall for merge traffic (bytes ∝ D·Q·k') — the
+recall-QPS pareto knob the scale bench sweeps.
+
+Fault handling (:mod:`repro.distributed.fault`): shards ping a
+:class:`HeartbeatRegistry` on every answer; a shard marked failed
+(:meth:`fail`), timed out past ``shard_timeout_s``, or raising mid-search
+contributes only sentinel rows. The request still answers — a
+degraded-recall :class:`repro.core.SearchResult` with the lost shards in
+``report.missing_shards`` and ``result.degraded == True`` — never an error.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.api import (IndexSpec, RouteReport, SearchRequest,
+                            SearchResult, ShardReport)
+from repro.core.engine import EngineConfig, QueryEngine
+from repro.core.flat import flat_search
+from repro.core.hnsw import NO_EDGE
+from repro.core.mstg import MSTGIndex
+
+from .fault import HeartbeatRegistry
+from .topk import resolve_merge, sharded_flat_topk, sharded_topk_merge
+
+_MERGES = ("auto", "all_gather", "tournament", "host")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentSpec:
+    """How a corpus deploys across shards — the distributed counterpart of
+    :class:`repro.core.EngineConfig` (which it carries, one per-shard copy).
+
+    Parameters
+    ----------
+    n_shards : int
+        Shard count. Device merge schedules additionally need a mesh whose
+        ``corpus_axis`` has exactly this size.
+    corpus_axis : str
+        Mesh axis the corpus partitions over.
+    merge : str
+        ``all_gather`` | ``tournament`` | ``host`` | ``auto``. ``auto``
+        resolves to ``host`` without a mesh, ``all_gather`` for D <= 8, and
+        ``tournament`` for power-of-two D > 8.
+    per_shard_k : int
+        Per-shard fan-in width k' (0 = the request's full k). ``k' == k`` is
+        exact relative to single-device; smaller trades recall for merge
+        bytes.
+    engine : EngineConfig
+        Config for every per-shard :class:`repro.core.QueryEngine`.
+    index : IndexSpec, optional
+        Build spec for :meth:`ShardedDeployment.build` shards (default
+        ``IndexSpec()``).
+    shard_timeout_s : float
+        Heartbeat staleness beyond which a shard counts as lost.
+    """
+
+    n_shards: int = 1
+    corpus_axis: str = "data"
+    merge: str = "auto"
+    per_shard_k: int = 0
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
+    index: Optional[IndexSpec] = None
+    shard_timeout_s: float = 30.0
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if self.merge not in _MERGES:
+            raise ValueError(f"merge must be one of {_MERGES}, got "
+                             f"{self.merge!r}")
+        if self.per_shard_k < 0:
+            raise ValueError("per_shard_k must be >= 0 (0 = full k)")
+        if not isinstance(self.engine, EngineConfig):
+            raise TypeError("engine must be an EngineConfig")
+
+    def replace(self, **overrides) -> "DeploymentSpec":
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclasses.dataclass
+class _Shard:
+    """One shard's serving state: a local engine plus the id rebase."""
+
+    name: str
+    engine: object                 # QueryEngine | SegmentedIndex | None(flat)
+    n: int
+    id_offset: Optional[int]       # local row -> global id shift; None = the
+    #                                engine already returns external ids
+
+
+def _host_merge(ids: np.ndarray, dists: np.ndarray, k: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge stacked (D, Q, k') lists on host, shard-major like all_gather."""
+    D, Q, w = ids.shape
+    flat_i = np.moveaxis(ids, 0, 1).reshape(Q, D * w)
+    flat_d = np.moveaxis(dists, 0, 1).reshape(Q, D * w)
+    order = np.argsort(flat_d, axis=1, kind="stable")[:, :k]
+    gi = np.take_along_axis(flat_i, order, 1)
+    gd = np.take_along_axis(flat_d, order, 1)
+    if gi.shape[1] < k:
+        pad = [(0, 0), (0, k - gi.shape[1])]
+        gi = np.pad(gi, pad, constant_values=NO_EDGE)
+        gd = np.pad(gd, pad, constant_values=np.inf)
+    return gi.astype(np.int64), gd.astype(np.float32)
+
+
+class ShardedDeployment:
+    """Serve one logical corpus from many shards (see module docstring).
+
+    The declarative surface matches :class:`repro.core.QueryEngine`:
+    ``execute(SearchRequest) -> SearchResult`` (and ``search`` as an alias),
+    so a deployment drops into :class:`repro.serving.RetrievalServer`
+    unchanged. ``result.report.route == "sharded"`` with one
+    :class:`repro.core.ShardReport` per shard.
+    """
+
+    def __init__(self, shards: Sequence[_Shard], spec: DeploymentSpec,
+                 mesh=None, *, _flat_arrays=None):
+        if len(shards) != spec.n_shards:
+            raise ValueError(f"{len(shards)} shards built but spec.n_shards "
+                             f"= {spec.n_shards}")
+        if mesh is not None and mesh.shape[spec.corpus_axis] != spec.n_shards:
+            raise ValueError(
+                f"mesh axis {spec.corpus_axis!r} has size "
+                f"{mesh.shape[spec.corpus_axis]} but the deployment has "
+                f"{spec.n_shards} shards")
+        self.shards = list(shards)
+        self.spec = spec
+        self.mesh = mesh
+        self._flat = _flat_arrays      # (corpus, lo, hi) for the fused path
+        self._failed: set = set()
+        self.heartbeats = HeartbeatRegistry(timeout_s=spec.shard_timeout_s)
+        now = time.time()
+        for s in self.shards:
+            self.heartbeats.ping(s.name, 0, now=now)
+        self._step = 0
+
+    # ---- constructors ----
+    @classmethod
+    def build(cls, vectors, lo, hi, *, spec: Optional[DeploymentSpec] = None,
+              mesh=None) -> "ShardedDeployment":
+        """Partition rows into ``n_shards`` contiguous slices and build one
+        MSTG index + engine per slice. Result ids are global row indices."""
+        spec = spec or DeploymentSpec()
+        vectors = np.ascontiguousarray(vectors, np.float32)
+        lo = np.asarray(lo, np.float64)
+        hi = np.asarray(hi, np.float64)
+        ispec = spec.index or IndexSpec()
+        bounds = np.linspace(0, vectors.shape[0], spec.n_shards + 1,
+                             dtype=np.int64)
+        shards = []
+        for i in range(spec.n_shards):
+            a, b = int(bounds[i]), int(bounds[i + 1])
+            idx = MSTGIndex.build(ispec, vectors[a:b], lo[a:b], hi[a:b])
+            shards.append(_Shard(f"shard-{i}",
+                                 QueryEngine(idx, config=spec.engine),
+                                 b - a, a))
+        return cls(shards, spec, mesh)
+
+    @classmethod
+    def from_segmented(cls, segmented, *,
+                       spec: Optional[DeploymentSpec] = None,
+                       mesh=None) -> "ShardedDeployment":
+        """Deal an existing SegmentedIndex's frozen segments round-robin onto
+        shards (delta buffer on shard 0). Segments are shared with the
+        source, not copied — a snapshot view; re-derive after mutations."""
+        from repro.streaming.segmented import SegmentedIndex
+        spec = spec or DeploymentSpec()
+        shards = []
+        for i in range(spec.n_shards):
+            view = SegmentedIndex(segmented.spec, policy=segmented.policy,
+                                  engine_config=spec.engine)
+            shards.append(_Shard(f"shard-{i}", view, 0, None))
+        for j, seg in enumerate(segmented.segments):
+            shards[j % spec.n_shards].engine.segments.append(seg)
+        shards[0].engine.delta = segmented.delta
+        for s in shards:
+            s.n = len(s.engine)        # live rows: tombstones excluded
+        return cls(shards, spec, mesh)
+
+    @classmethod
+    def flat(cls, vectors, lo, hi, *, spec: Optional[DeploymentSpec] = None,
+             mesh=None) -> "ShardedDeployment":
+        """Exact-scan shards over raw corpus slices. With a mesh and a device
+        merge schedule the whole fan-out runs as ONE fused shard_map call
+        (local scan + collective merge, nothing per-shard on host)."""
+        spec = spec or DeploymentSpec()
+        vectors = np.ascontiguousarray(vectors, np.float32)
+        lo = np.asarray(lo, np.float64)
+        hi = np.asarray(hi, np.float64)
+        n = vectors.shape[0]
+        if n % spec.n_shards:
+            raise ValueError(f"flat deployment needs corpus size ({n}) "
+                             f"divisible by n_shards ({spec.n_shards})")
+        nloc = n // spec.n_shards
+        shards = [_Shard(f"shard-{i}", None, nloc, i * nloc)
+                  for i in range(spec.n_shards)]
+        return cls(shards, spec, mesh, _flat_arrays=(vectors, lo, hi))
+
+    # ---- fault injection / liveness ----
+    def fail(self, shard: int) -> None:
+        """Mark a shard down (fleet-controller stand-in). Requests keep
+        answering, degraded."""
+        self._failed.add(int(shard))
+
+    def restore(self, shard: int) -> None:
+        self._failed.discard(int(shard))
+        self.heartbeats.ping(self.shards[shard].name, self._step)
+
+    def _alive(self) -> np.ndarray:
+        """(D,) bool — failed or heartbeat-timed-out shards are down."""
+        dead = set(self.heartbeats.dead_workers())
+        return np.array([(i not in self._failed
+                          and s.name not in dead)
+                         for i, s in enumerate(self.shards)], bool)
+
+    # ---- execution ----
+    def execute(self, request: SearchRequest) -> SearchResult:
+        if not isinstance(request, SearchRequest):
+            raise TypeError("ShardedDeployment serves the declarative API "
+                            "only; pass a repro.core.SearchRequest")
+        D, Q, k = self.spec.n_shards, len(request), request.k
+        k_loc = min(self.spec.per_shard_k, k) if self.spec.per_shard_k else k
+        merge = resolve_merge(self.spec.merge, D) \
+            if (self.mesh is not None and self.spec.merge != "host") else "host"
+        alive = self._alive()
+        self._step += 1
+        if self._flat is not None and merge != "host":
+            return self._execute_flat_fused(request, k_loc, merge, alive)
+
+        ids = np.full((D, Q, k_loc), NO_EDGE, np.int64)
+        dists = np.full((D, Q, k_loc), np.inf, np.float32)
+        reports: List[ShardReport] = []
+        missing: List[int] = []
+        slot_total = 0
+        variants: List[str] = []
+        for i, shard in enumerate(self.shards):
+            if not alive[i]:
+                reports.append(ShardReport(shard=i, n=shard.n, route="lost",
+                                           alive=False, k_fetched=0))
+                missing.append(i)
+                continue
+            t0 = time.perf_counter()
+            try:
+                li, ld, rep = self._run_shard(shard, request, k_loc)
+            except Exception:
+                # a shard raising mid-search is a lost shard, not a lost
+                # request: sentinel rows, flagged, never re-raised
+                reports.append(ShardReport(shard=i, n=shard.n, route="error",
+                                           alive=False, k_fetched=0))
+                missing.append(i)
+                continue
+            ids[i], dists[i] = li, ld
+            self.heartbeats.ping(shard.name, self._step)
+            lat = time.perf_counter() - t0
+            slot_total += rep.slot_count if rep else 0
+            if rep:
+                variants.extend(rep.variants)
+            reports.append(ShardReport(
+                shard=i, n=shard.n,
+                route=rep.route if rep else "flat", k_fetched=k_loc,
+                latency_s=lat, slot_count=rep.slot_count if rep else 0))
+        if merge == "host":
+            gi, gd = _host_merge(ids, dists, k)
+        else:
+            gi, gd = sharded_topk_merge(self.mesh, ids, dists, k,
+                                        axis=self.spec.corpus_axis,
+                                        merge=merge, alive=alive)
+        report = RouteReport(
+            route="sharded", requested=request.route or "auto",
+            est_selectivity=None, slot_count=slot_total,
+            variants=tuple(variants), shards=tuple(reports),
+            missing_shards=tuple(missing), merge=merge)
+        return SearchResult(gi, gd, report)
+
+    # QueryEngine-compatible alias (RetrievalServer & co).
+    def search(self, request: SearchRequest) -> SearchResult:
+        return self.execute(request)
+
+    def _run_shard(self, shard: _Shard, request: SearchRequest, k_loc: int):
+        """One shard's local answer as (Q, k_loc) global-id arrays."""
+        if shard.engine is None:      # flat layout, host path
+            corpus, lo, hi = self._flat
+            a = shard.id_offset
+            b = a + shard.n
+            li, ld = flat_search(
+                corpus[a:b], lo[a:b], hi[a:b], request.vectors,
+                request.qlo.astype(np.float32), request.qhi.astype(np.float32),
+                mask=request.mask, k=min(k_loc, shard.n),
+                use_kernel=self.spec.engine.use_kernel)
+            li, ld, rep = np.asarray(li, np.int64), np.asarray(ld), None
+        else:
+            # the graph route's beam pool is ef wide; keep ef >= k' so the
+            # narrowed fan-in never truncates below the requested width
+            res = shard.engine.execute(dataclasses.replace(
+                request, k=min(k_loc, max(shard.n, 1)),
+                ef=max(request.ef, k_loc)))
+            li, ld, rep = (np.asarray(res.ids, np.int64),
+                           np.asarray(res.dists), res.report)
+        if li.shape[1] < k_loc:      # tiny shard: pad to the uniform width
+            pad = [(0, 0), (0, k_loc - li.shape[1])]
+            li = np.pad(li, pad, constant_values=NO_EDGE)
+            ld = np.pad(ld, pad, constant_values=np.inf)
+        if shard.id_offset is not None:
+            li = np.where(li >= 0, li + shard.id_offset, np.int64(NO_EDGE))
+        return li, ld.astype(np.float32), rep
+
+    def _execute_flat_fused(self, request: SearchRequest, k_loc: int,
+                            merge: str, alive: np.ndarray) -> SearchResult:
+        """The flat layout's one-call device path: shard-local exact scans
+        and the collective merge fused into a single shard_map program."""
+        corpus, lo, hi = self._flat
+        t0 = time.perf_counter()
+        gi, gd = sharded_flat_topk(
+            self.mesh, corpus, lo, hi, request.vectors,
+            request.qlo.astype(np.float32), request.qhi.astype(np.float32),
+            mask=request.mask, k=request.k,
+            corpus_axis=self.spec.corpus_axis, merge=merge,
+            per_shard_k=k_loc if k_loc < request.k else 0, alive=alive,
+            use_kernel=self.spec.engine.use_kernel)
+        gi = np.asarray(gi, np.int64)
+        gd = np.asarray(gd, np.float32)
+        lat = time.perf_counter() - t0
+        now = time.time()
+        for i, s in enumerate(self.shards):
+            if alive[i]:
+                self.heartbeats.ping(s.name, self._step, now=now)
+        reports = tuple(
+            ShardReport(shard=i, n=s.n,
+                        route="flat" if alive[i] else "lost",
+                        alive=bool(alive[i]),
+                        k_fetched=k_loc if alive[i] else 0,
+                        latency_s=lat / len(self.shards))
+            for i, s in enumerate(self.shards))
+        missing = tuple(int(i) for i in np.flatnonzero(~alive))
+        report = RouteReport(
+            route="sharded", requested=request.route or "auto",
+            est_selectivity=None, slot_count=0, variants=(),
+            shards=reports, missing_shards=missing, merge=merge)
+        return SearchResult(gi, gd, report)

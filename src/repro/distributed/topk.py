@@ -9,6 +9,15 @@ filtered top-k, then shards exchange results. Two merge schedules:
 * ``tournament`` — log2(D) ``ppermute`` rounds, each merging two k-lists;
   bytes/device ∝ log2(D)·Q·k. The beyond-paper schedule for pod-scale D
   (D=512: 9 rounds vs 512x gather) — see EXPERIMENTS.md §Perf.
+
+Both schedules accept local lists narrower than the global ``k`` (the
+deployment's ``per_shard_k`` fan-in knob): every intermediate merge retains
+``min(k, candidates so far)`` entries, so no candidate that can reach the
+global top-k is ever dropped and the two schedules stay bit-identical for
+distinct distances. When ``D * k' < k`` the result is padded with
+``NO_EDGE``/``inf`` columns. Dead shards (``alive`` mask) contribute only
+sentinel rows — a lost device degrades recall, never correctness of the
+merge itself.
 """
 from __future__ import annotations
 
@@ -36,66 +45,150 @@ def _axis_size(axis: str) -> int:
     return int(jax.core.axis_frame(axis))
 
 
+def _pad_to_k(ids, dists, k: int):
+    """Right-pad (Q, w) lists to (Q, k) with NO_EDGE/inf sentinel columns."""
+    w = ids.shape[1]
+    if w >= k:
+        return ids, dists
+    pad = [(0, 0), (0, k - w)]
+    return (jnp.pad(ids, pad, constant_values=NO_EDGE),
+            jnp.pad(dists, pad, constant_values=jnp.inf))
+
+
 def global_topk_merge(ids, dists, k: int, axis: str):
-    """all_gather merge inside shard_map: (Q, k) local -> (Q, k) global."""
-    all_ids = jax.lax.all_gather(ids, axis)     # (D, Q, k)
+    """all_gather merge inside shard_map: (Q, k') local -> (Q, k) global.
+
+    Accepts local width k' != k (the ``per_shard_k`` fan-in knob); pads with
+    sentinels when the union D*k' holds fewer than k candidates."""
+    all_ids = jax.lax.all_gather(ids, axis)     # (D, Q, k')
     all_d = jax.lax.all_gather(dists, axis)
     D = all_ids.shape[0]
     Q = all_ids.shape[1]
-    flat_ids = jnp.moveaxis(all_ids, 0, 1).reshape(Q, D * k)
-    flat_d = jnp.moveaxis(all_d, 0, 1).reshape(Q, D * k)
-    neg, pos = jax.lax.top_k(-flat_d, k)
-    return jnp.take_along_axis(flat_ids, pos, 1), -neg
+    w = all_ids.shape[2]
+    flat_ids = jnp.moveaxis(all_ids, 0, 1).reshape(Q, D * w)
+    flat_d = jnp.moveaxis(all_d, 0, 1).reshape(Q, D * w)
+    kk = min(k, D * w)
+    neg, pos = jax.lax.top_k(-flat_d, kk)
+    return _pad_to_k(jnp.take_along_axis(flat_ids, pos, 1), -neg, k)
 
 
 def tournament_topk_merge(ids, dists, k: int, axis: str):
     """Recursive-halving merge: log2(D) ppermute rounds of k-list merges.
 
     After round r, device i holds the merged top-k of its 2^(r+1)-device
-    group; all devices finish with the global top-k (butterfly exchange)."""
+    group; all devices finish with the global top-k (butterfly exchange).
+    Each round keeps ``min(k, 2w)`` of the 2w concatenated candidates, so a
+    narrow local width k' < k widens toward k instead of truncating — the
+    final list is bit-identical to :func:`global_topk_merge` whenever
+    distances are distinct."""
     D = _axis_size(axis)
     rounds = int(np.log2(D))
     assert (1 << rounds) == D, "tournament merge needs power-of-two shards"
     for r in range(rounds):
         stride = 1 << r
-        idx = jax.lax.axis_index(axis)
-        partner = jnp.where((idx // stride) % 2 == 0, idx + stride, idx - stride)
         perm = [(int(i), int((i + stride) if (i // stride) % 2 == 0 else (i - stride)))
                 for i in range(D)]
         other_ids = jax.lax.ppermute(ids, axis, perm)
         other_d = jax.lax.ppermute(dists, axis, perm)
         cat_ids = jnp.concatenate([ids, other_ids], axis=1)
         cat_d = jnp.concatenate([dists, other_d], axis=1)
-        neg, pos = jax.lax.top_k(-cat_d, k)
+        neg, pos = jax.lax.top_k(-cat_d, min(k, cat_d.shape[1]))
         ids = jnp.take_along_axis(cat_ids, pos, 1)
         dists = -neg
-    return ids, dists
+    return _pad_to_k(ids, dists, k)
+
+
+MERGE_SCHEDULES = {"all_gather": global_topk_merge,
+                   "tournament": tournament_topk_merge}
+
+
+def resolve_merge(merge: str, n_shards: int) -> str:
+    """``auto`` -> all_gather for small meshes, tournament for pow2 D > 8."""
+    if merge == "auto":
+        if n_shards > 8 and (n_shards & (n_shards - 1)) == 0:
+            return "tournament"
+        return "all_gather"
+    if merge not in MERGE_SCHEDULES:
+        raise ValueError(f"unknown merge schedule {merge!r}; "
+                         f"expected one of {sorted(MERGE_SCHEDULES)} or 'auto'")
+    return merge
+
+
+def sharded_topk_merge(mesh: Mesh, ids, dists, k: int, *,
+                       axis: str = "data", merge: str = "all_gather",
+                       alive=None) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge host-stacked per-shard results through the device collectives.
+
+    ``ids``/``dists`` are (D, Q, k') arrays — one top-k' list per shard, as
+    produced by heterogeneous per-shard engines (graph / pruned / flat) whose
+    local searches ran on host. Each device receives its own shard's slice,
+    the chosen schedule (all_gather / tournament) merges across the mesh
+    axis, and the replicated (Q, k) global list is returned. ``alive`` is an
+    optional (D,) bool mask: a dead shard's list is replaced by sentinels
+    *on device*, modeling a shard that never answered."""
+    D = int(ids.shape[0])
+    if mesh.shape[axis] != D:
+        raise ValueError(f"stacked results have {D} shards but mesh axis "
+                         f"{axis!r} has size {mesh.shape[axis]}")
+    merge_fn = MERGE_SCHEDULES[resolve_merge(merge, D)]
+    ids = jnp.asarray(ids, jnp.int64 if jax.config.jax_enable_x64
+                      else jnp.int32)
+    dists = jnp.asarray(dists, jnp.float32)
+    alive_arr = (jnp.ones((D,), bool) if alive is None
+                 else jnp.asarray(alive, bool))
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None), P(None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_rep=False)
+    def run(i, d, a):
+        i, d = i[0], d[0]                       # (Q, k') local slice
+        ok = a[jax.lax.axis_index(axis)]
+        i = jnp.where(ok, i, NO_EDGE)
+        d = jnp.where(ok, d, jnp.inf)
+        return merge_fn(i, d, k, axis)
+
+    gi, gd = run(ids, dists, alive_arr)
+    return np.asarray(gi, np.int64), np.asarray(gd, np.float32)
 
 
 def sharded_flat_topk(mesh: Mesh, corpus, lo, hi, queries, ql, qh, *, mask: int,
                       k: int, corpus_axis: str = "data",
-                      merge: str = "all_gather",
+                      merge: str = "all_gather", per_shard_k: int = 0,
+                      alive=None,
                       use_kernel: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Exact distributed RRANN: corpus sharded on ``corpus_axis``, queries
-    replicated, result replicated. Local ids are rebased to global ids."""
+    replicated, result replicated. Local ids are rebased to global ids.
+
+    ``per_shard_k`` < k narrows the per-shard fan-in (less merge traffic,
+    possibly lower recall); 0 means fetch the full k per shard. ``alive`` is
+    an optional (D,) bool mask — a False shard contributes only sentinels,
+    yielding the degraded-recall answer a lost device would."""
     D = mesh.shape[corpus_axis]
     n = corpus.shape[0]
     assert n % D == 0, f"corpus size {n} not divisible by {D} shards"
     nloc = n // D
-    merge_fn = {"all_gather": global_topk_merge,
-                "tournament": tournament_topk_merge}[merge]
+    k_loc = min(per_shard_k, k) if per_shard_k else k
+    k_loc = min(k_loc, nloc)
+    merge_fn = MERGE_SCHEDULES[resolve_merge(merge, D)]
+    alive_arr = (jnp.ones((D,), bool) if alive is None
+                 else jnp.asarray(alive, bool))
 
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(P(corpus_axis, None), P(corpus_axis), P(corpus_axis),
-                  P(None, None), P(None), P(None)),
+                  P(None, None), P(None), P(None), P(None)),
         out_specs=(P(None, None), P(None, None)),
         check_rep=False)
-    def run(c, l, h, q, a, b):
-        ids, d = flat_search(c, l, h, q, a, b, mask=mask, k=k,
+    def run(c, l, h, q, a, b, ok):
+        ids, d = flat_search(c, l, h, q, a, b, mask=mask, k=k_loc,
                              use_kernel=use_kernel)
         shard = jax.lax.axis_index(corpus_axis)
         gids = jnp.where(ids != NO_EDGE, ids + shard * nloc, NO_EDGE)
+        up = ok[shard]
+        gids = jnp.where(up, gids, NO_EDGE)
+        d = jnp.where(up, d, jnp.inf)
         return merge_fn(gids, d, k, corpus_axis)
 
-    return run(corpus, lo, hi, queries, ql, qh)
+    return run(corpus, lo, hi, queries, ql, qh, alive_arr)

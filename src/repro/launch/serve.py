@@ -2,12 +2,17 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 24
   PYTHONPATH=src python -m repro.launch.serve --streaming   # live corpus
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --shards 8  # sharded corpus
 
 Builds an MSTG index over a synthetic corpus, stands up the batched
 RetrievalServer with an LM-embedding front (smoke-scale model), and serves
 RR-filtered ANN requests end to end (generate + retrieve). ``--streaming``
 backs the server with a :class:`repro.streaming.SegmentedIndex` instead and
-interleaves upserts/deletes with the query traffic."""
+interleaves upserts/deletes with the query traffic. ``--shards N`` serves
+from a :class:`repro.distributed.ShardedDeployment` — per-shard MSTG
+engines merged through the device collectives when a mesh covers N, else
+the host merge."""
 from __future__ import annotations
 
 import argparse
@@ -36,14 +41,31 @@ def main():
     ap.add_argument("--streaming", action="store_true",
                     help="serve from a mutable SegmentedIndex and interleave "
                          "upserts/deletes with query traffic")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="serve from an N-shard ShardedDeployment (device "
+                         "merge when the mesh covers N, else host merge)")
     args = ap.parse_args()
+    if args.shards and args.streaming:
+        ap.error("--shards and --streaming are mutually exclusive (shard a "
+                 "SegmentedIndex via ShardedDeployment.from_segmented)")
 
     # 1) corpus + index (the paper's contribution)
     ds = make_range_dataset(n=args.n, d=args.dim, n_queries=args.requests,
                             quantize=128, seed=0)
     spec = IndexSpec(variants=("T", "Tp"), m=12, ef_con=64)
     t0 = time.time()
-    if args.streaming:
+    if args.shards:
+        from repro.distributed import DeploymentSpec, ShardedDeployment
+        from repro.launch.mesh import make_mesh
+        mesh = (make_mesh((args.shards,), ("data",))
+                if args.shards <= len(jax.devices()) else None)
+        qengine = ShardedDeployment.build(
+            ds.vectors, ds.lo, ds.hi, mesh=mesh,
+            spec=DeploymentSpec(n_shards=args.shards, index=spec))
+        print(f"sharded MSTG built: n={args.n} shards={args.shards} "
+              f"mesh={'yes' if mesh is not None else 'no (host merge)'} "
+              f"in {time.time()-t0:.1f}s")
+    elif args.streaming:
         from repro.streaming import SegmentedIndex
         qengine = SegmentedIndex(spec, flush_threshold=args.n)
         qengine.add(np.arange(args.n), ds.vectors, ds.lo, ds.hi)
@@ -98,6 +120,9 @@ def main():
         rep = qengine.compact(full=True)
         print(f"  compacted: merged={rep['merged']} -> {rep['new_segment']} "
               f"(dropped {rep['dropped']} tombstoned rows)")
+    elif args.shards:
+        print(f"  shards={args.shards} "
+              f"degraded_queries={server.tick_stats['degraded_queries']}")
     else:
         print(f"  routes={qengine.route_counts}; "
               f"sel_cache={qengine.sel_cache_hits}h/{qengine.sel_cache_misses}m")

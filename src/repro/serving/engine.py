@@ -120,9 +120,9 @@ class RetrievalServer:
 
     def __init__(self, engine, embed_fn, k: int = 10, ef: int = 64,
                  auto_compact: bool = True):
-        # ``engine`` is a QueryEngine or SegmentedIndex (or anything with the
-        # legacy positional .search signature; the deprecated MSTGSearcher
-        # wrapper still works).
+        # ``engine`` is anything with the declarative .execute(SearchRequest)
+        # entry point: QueryEngine, SegmentedIndex, or a
+        # repro.distributed.ShardedDeployment.
         self.engine = engine
         self.embed_fn = embed_fn
         self.k = k
@@ -138,12 +138,14 @@ class RetrievalServer:
     @staticmethod
     def _zero_stats() -> Dict[str, int]:
         return {"ticks": 0, "queries": 0, "upserts": 0, "deletes": 0,
-                "compactions": 0, "compacted_rows": 0}
+                "compactions": 0, "compacted_rows": 0, "degraded_queries": 0}
 
     @classmethod
-    def from_index(cls, index, embed_fn, k: int = 10, ef: int = 64, **engine_kw):
-        from repro.core import QueryEngine
-        return cls(QueryEngine(index, **engine_kw), embed_fn, k=k, ef=ef)
+    def from_index(cls, index, embed_fn, k: int = 10, ef: int = 64,
+                   config=None):
+        from repro.core import EngineConfig, QueryEngine
+        return cls(QueryEngine(index, config=config or EngineConfig()),
+                   embed_fn, k=k, ef=ef)
 
     @property
     def mutable(self) -> bool:
@@ -251,13 +253,13 @@ class RetrievalServer:
             qlo = np.array([self.queue[i][2] for i in idxs])
             qhi = np.array([self.queue[i][3] for i in idxs])
             qvecs = np.stack([vec_of[i] for i in idxs])
-            if hasattr(self.engine, "execute"):  # QueryEngine / SegmentedIndex
-                res = self.engine.execute(SearchRequest(
-                    qvecs, (qlo, qhi), mask, k=self.k, ef=self.ef))
-                ids, d = res.ids, res.dists
-            else:  # legacy tuple-API searcher
-                ids, d = self.engine.search(qvecs, qlo, qhi, mask,
-                                            k=self.k, ef=self.ef)
+            res = self.engine.execute(SearchRequest(
+                qvecs, (qlo, qhi), mask, k=self.k, ef=self.ef))
+            ids, d = res.ids, res.dists
+            if getattr(res, "degraded", False):
+                # sharded backend answered with shards missing — the answers
+                # are still served, but the operator should see the count
+                tick_stats["degraded_queries"] += len(idxs)
             for j, i in enumerate(idxs):
                 results[i] = QueryHit(ids[j], d[j])
         tick_stats["queries"] = len(results)

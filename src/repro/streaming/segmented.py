@@ -28,8 +28,8 @@ over-fetching ``k + |segment tombstones|`` so tombstone filtering can never
 evict a true neighbor, the delta is scanned exactly, and per-source top-k
 lists are merged on host. Per-segment engines inherit the wavefront graph
 loop — bit-packed visited bitmaps, chunked active-batch compaction, fanout
-heuristics — and ``engine_kwargs`` tunes it fleet-wide (e.g.
-``dict(graph_chunk=16, packed_visited=True)``); a request's pinned
+heuristics — and one :class:`repro.core.EngineConfig` tunes it fleet-wide
+(e.g. ``EngineConfig(graph_chunk=16, packed_visited=True)``); a request's pinned
 ``fanout``/``chunk`` travel through the fan-out untouched. The returned :class:`repro.core.SearchResult`
 carries external ids and a :class:`repro.core.RouteReport` with one
 :class:`repro.core.SegmentReport` per source.
@@ -52,7 +52,7 @@ import numpy as np
 from repro.checkpoint import index_io
 from repro.core.api import (IndexSpec, RouteReport, SearchRequest,
                             SearchResult, SegmentReport)
-from repro.core.engine import QueryEngine
+from repro.core.engine import EngineConfig, QueryEngine
 from repro.core.hnsw import NO_EDGE
 from repro.core.mstg import MSTGIndex
 
@@ -148,19 +148,27 @@ class SegmentedIndex:
     flush_threshold : int, optional
         Auto-flush the delta into a segment once its live size reaches this
         (None = flush only on explicit :meth:`flush` / :meth:`save`).
+    engine_config : EngineConfig, optional
+        Shared config for every per-segment :class:`QueryEngine` (route,
+        use_kernel, flat_threshold, ...). Defaults to ``EngineConfig()``.
     engine_kwargs : dict, optional
-        Forwarded to each per-segment :class:`QueryEngine` (route,
-        use_kernel, flat_threshold, ...).
+        Legacy spelling of ``engine_config`` — converted through
+        ``EngineConfig(**engine_kwargs)`` (and applied on top of
+        ``engine_config`` when both are given).
     """
 
     def __init__(self, spec: Optional[IndexSpec] = None, *,
                  policy: Optional[CompactionPolicy] = None,
                  flush_threshold: Optional[int] = None,
+                 engine_config: Optional[EngineConfig] = None,
                  engine_kwargs: Optional[dict] = None):
         self.spec = spec if spec is not None else IndexSpec()
         self.policy = policy or CompactionPolicy()
         self.flush_threshold = flush_threshold
-        self.engine_kwargs = dict(engine_kwargs or {})
+        cfg = engine_config if engine_config is not None else EngineConfig()
+        if engine_kwargs:
+            cfg = cfg.replace(**engine_kwargs)
+        self.engine_config = cfg
         self.delta = DeltaBuffer()
         self.segments: List[Segment] = []
         self.ops = {"adds": 0, "deletes": 0, "flushes": 0, "compactions": 0}
@@ -312,7 +320,7 @@ class SegmentedIndex:
     def _engine(self, seg: Segment) -> QueryEngine:
         if seg.seg_id not in self._engines:
             self._engines[seg.seg_id] = QueryEngine(seg.index,
-                                                    **self.engine_kwargs)
+                                                    config=self.engine_config)
         return self._engines[seg.seg_id]
 
     def execute(self, request: SearchRequest) -> SearchResult:
@@ -355,7 +363,7 @@ class SegmentedIndex:
         if len(self.delta):
             ext, dists = self.delta.search(
                 request.vectors, request.qlo, request.qhi, request.mask, k,
-                use_kernel=self.engine_kwargs.get("use_kernel", False))
+                use_kernel=self.engine_config.use_kernel)
             ids_list.append(ext)
             d_list.append(dists)
             seg_reports.append(SegmentReport(
@@ -438,6 +446,7 @@ class SegmentedIndex:
     @classmethod
     def load(cls, root: str, *, policy: Optional[CompactionPolicy] = None,
              flush_threshold: Optional[int] = None,
+             engine_config: Optional[EngineConfig] = None,
              engine_kwargs: Optional[dict] = None) -> "SegmentedIndex":
         """Restore a :meth:`save` directory — segments, tombstones, and the
         unflushed delta — with bit-identical search results."""
@@ -447,7 +456,8 @@ class SegmentedIndex:
             raise index_io.IndexIOError(
                 f"{root}: not a {_MANIFEST_FORMAT} manifest")
         self = cls(IndexSpec.from_dict(manifest["spec"]), policy=policy,
-                   flush_threshold=flush_threshold, engine_kwargs=engine_kwargs)
+                   flush_threshold=flush_threshold,
+                   engine_config=engine_config, engine_kwargs=engine_kwargs)
         self._seg_counter = int(manifest.get("seg_counter", 0))
         self.ops.update(manifest.get("ops", {}))
         for entry in manifest["segments"]:

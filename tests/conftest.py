@@ -37,12 +37,3 @@ def built_index(small_ds):
     ds = small_ds
     return MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp", "Tpp"),
                      m=8, ef_con=40)
-
-
-@pytest.fixture(autouse=True)
-def _fresh_deprecation_guard():
-    """The tuple-API shims warn once per *process*; reset the guard per test
-    so pytest.warns assertions stay order-independent across the suite."""
-    from repro.core.engine import reset_deprecation_warnings
-    reset_deprecation_warnings()
-    yield

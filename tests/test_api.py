@@ -12,7 +12,7 @@ from repro.core import (After, Before, ContainedBy, Contains, IndexSpec,
                         QueryHit, RightOverlap, SearchRequest, SearchResult,
                         as_mask, as_predicate, intervals as iv, parse_mask)
 from repro.core import predicates as preds
-from repro.data import make_queries, brute_force_topk
+from repro.data import make_queries
 
 
 # ---- predicate algebra <-> mask round-trips ----
@@ -213,34 +213,23 @@ def test_index_load_rejects_non_index(tmp_path):
         MSTGIndex.load(p)
 
 
-# ---- legacy shims ----
+# ---- tuple API removal ----
 
-def test_legacy_tuple_api_still_works(small_ds, built_index):
-    from repro.core.engine import reset_deprecation_warnings
+def test_tuple_search_api_is_removed(small_ds, built_index):
+    """The tuple-era surface is gone: positional search args raise with a
+    pointer to the migration guide, and the Searcher shims no longer exist."""
+    import repro.core
     ds = small_ds
     eng = QueryEngine(built_index)
     qlo, qhi = make_queries(ds, 15, 0.15, seed=7)
-    with pytest.warns(DeprecationWarning):
-        out = eng.search(ds.queries, qlo, qhi, 15, k=5)
-    assert isinstance(out, tuple)
-    reset_deprecation_warnings()  # each shim warns once per process
-    with pytest.warns(DeprecationWarning), pytest.raises(TypeError):
-        eng.search(ds.queries, qlo, qhi)  # forgotten mask must not be mask 0
-    res = eng.search(SearchRequest(ds.queries, (qlo, qhi), 15, k=5))
-    np.testing.assert_array_equal(out[0], res.ids)
-    np.testing.assert_array_equal(out[1], res.dists)
+    with pytest.raises(TypeError, match="SearchRequest"):
+        eng.search(np.asarray(ds.queries))           # queries array, no request
+    with pytest.raises(TypeError):
+        eng.search(ds.queries, qlo, qhi, 15)         # old positional arity
     with pytest.raises(TypeError, match="on the SearchRequest"):
         # options alongside a request would be silently ignored — rejected
         eng.search(SearchRequest(ds.queries, (qlo, qhi), 15), k=100)
-    from repro.core import FlatSearcher, MSTGSearcher
-    with pytest.warns(DeprecationWarning):
-        gs = MSTGSearcher(built_index)
-    ids, d = gs.search(ds.queries, qlo, qhi, 15, k=5)
-    assert ids.shape == (len(qlo), 5)
-    with pytest.warns(DeprecationWarning):
-        fs = FlatSearcher(built_index)
-    fids, fd = fs.search(ds.queries, qlo, qhi, 15, k=5)
-    tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                 qlo, qhi, 15, 5)
-    np.testing.assert_allclose(np.sort(fd, 1), np.sort(tds, 1),
-                               rtol=1e-4, atol=1e-4)
+    assert not hasattr(repro.core, "MSTGSearcher")
+    assert not hasattr(repro.core, "FlatSearcher")
+    with pytest.raises(ImportError):
+        from repro.core import MSTGSearcher  # noqa: F401

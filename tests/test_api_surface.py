@@ -30,6 +30,27 @@ def test_key_surface_types_construct():
     assert IndexSpec().predicate == Overlaps()
 
 
+def test_engine_config_and_shard_report_construct():
+    from repro.core import EngineConfig, ShardReport
+    cfg = EngineConfig(route="pruned", sel_cache_max=16)
+    assert cfg.route == "pruned"
+    assert cfg.replace(route="auto").route == "auto"
+    rep = ShardReport(shard=3, n=100, route="lost", alive=False)
+    assert rep.shard == 3 and not rep.alive
+
+
+def test_distributed_surface_imports():
+    from repro.distributed import (DeploymentSpec, HeartbeatRegistry,
+                                   MERGE_SCHEDULES, ShardedDeployment,
+                                   resolve_merge, sharded_flat_topk,
+                                   sharded_topk_merge)  # noqa: F401
+    assert set(MERGE_SCHEDULES) == {"all_gather", "tournament"}
+    assert resolve_merge("auto", 4) == "all_gather"
+    assert resolve_merge("auto", 16) == "tournament"
+    spec = DeploymentSpec(n_shards=4, per_shard_k=5)
+    assert spec.replace(merge="tournament").merge == "tournament"
+
+
 def test_serving_and_checkpoint_surface_imports():
     from repro.serving import RetrievalServer, ServeEngine  # noqa: F401
     from repro.checkpoint import IndexIOError, index_io

@@ -1,9 +1,13 @@
-"""Distributed top-k: single-device meshes inline; an 8-device fake mesh runs
-in a subprocess (XLA device count must be fixed before jax init)."""
+"""Distributed serving: ShardedDeployment fan-out/merge/fault semantics on
+the host path inline; the in-process device-merge tests (bit-parity between
+schedules, sharded-vs-single parity grid) skip below 8 devices and run in
+CI's ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` lane; an 8-device
+subprocess covers the fused kernel when the parent owns only one device."""
 import os
 import subprocess
 import sys
 import textwrap
+import time
 
 import numpy as np
 import pytest
@@ -12,9 +16,21 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.core import ANY_OVERLAP
-from repro.distributed import sharded_flat_topk
+from repro.core import (ANY_OVERLAP, EngineConfig, IndexSpec, QueryEngine,
+                        SearchRequest)
+from repro.core.hnsw import NO_EDGE
+from repro.distributed import (DeploymentSpec, ShardedDeployment,
+                               sharded_flat_topk)
 from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _mesh8():
+    from repro.launch.mesh import make_mesh
+    return make_mesh((8,), ("data",))
 
 
 def test_sharded_flat_single_device(small_ds):
@@ -33,6 +49,233 @@ def test_sharded_flat_single_device(small_ds):
                                  qlo, qhi, ANY_OVERLAP, 10)
     np.testing.assert_allclose(np.sort(np.asarray(d), 1), np.sort(tds, 1),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---- host path: fan-out/merge/fault semantics, no mesh required ----
+
+def test_deployment_host_merge_matches_single_engine(small_ds, built_index):
+    """4 exact shards merged on host == the single-device exact answer."""
+    ds = small_ds
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=5)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=10)
+    single = QueryEngine(built_index).search(
+        SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=10, route="flat"))
+    dep = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                 spec=DeploymentSpec(n_shards=4))
+    res = dep.execute(req)
+    assert res.report.route == "sharded" and res.report.merge == "host"
+    assert len(res.report.shards) == 4 and not res.degraded
+    np.testing.assert_allclose(np.sort(res.dists, 1), np.sort(single.dists, 1),
+                               rtol=1e-4, atol=1e-4)
+    assert res.recall_vs(single) == 1.0
+
+
+def test_shard_loss_degrades_never_raises(small_ds):
+    """A failed shard yields a flagged degraded answer with sentinel rows
+    from its range — and restore() heals it."""
+    ds = small_ds
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.3, seed=6)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=10)
+    dep = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                 spec=DeploymentSpec(n_shards=4))
+    nloc = ds.vectors.shape[0] // 4
+    full = dep.execute(req)
+    dep.fail(2)
+    res = dep.execute(req)
+    assert res.degraded and res.report.missing_shards == (2,)
+    rep = res.report.shards[2]
+    assert rep.shard == 2 and not rep.alive and rep.route == "lost"
+    assert rep.k_fetched == 0
+    assert all(r.alive for i, r in enumerate(res.report.shards) if i != 2)
+    # nothing from the lost shard's row range leaks into the answer
+    got = res.ids[res.ids >= 0]
+    assert not ((got >= 2 * nloc) & (got < 3 * nloc)).any()
+    dep.restore(2)
+    healed = dep.execute(req)
+    assert not healed.degraded
+    np.testing.assert_array_equal(healed.ids, full.ids)
+
+
+def test_shard_exception_and_heartbeat_timeout_flagged(small_ds):
+    ds = small_ds
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.3, seed=7)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=5)
+    # a shard raising mid-search is reported as route="error", not re-raised
+    dep = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                 spec=DeploymentSpec(n_shards=3))
+    dep.shards[1].engine = object()          # .execute() -> AttributeError
+    res = dep.execute(req)
+    assert res.degraded and res.report.missing_shards == (1,)
+    assert res.report.shards[1].route == "error"
+    assert not res.report.shards[1].alive
+    # heartbeat staleness past shard_timeout_s counts every shard as lost
+    dep2 = ShardedDeployment.flat(
+        ds.vectors, ds.lo, ds.hi,
+        spec=DeploymentSpec(n_shards=2, shard_timeout_s=0.005))
+    time.sleep(0.02)
+    stale = dep2.execute(req)
+    assert stale.degraded and stale.report.missing_shards == (0, 1)
+    assert not stale.valid_mask.any()
+    for i in range(2):
+        dep2.restore(i)                      # restore pings the heartbeat
+    assert not dep2.execute(req).degraded
+
+
+def test_per_shard_k_narrowing_and_padding(small_ds):
+    """D*k' < k pads the merged answer with sentinel columns instead of
+    inventing candidates; k' == k stays exact."""
+    ds = small_ds
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.3, seed=8)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=10)
+    dep = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                 spec=DeploymentSpec(n_shards=4,
+                                                     per_shard_k=1))
+    res = dep.execute(req)                   # union of 4 candidates, k=10
+    assert (res.ids[:, 4:] == NO_EDGE).all()
+    assert np.isinf(res.dists[:, 4:]).all()
+    assert all(r.k_fetched == 1 for r in res.report.shards)
+    assert (res.valid_mask.sum(1) <= 4).all()
+    # the merged prefix is sorted and the global best survives narrowing:
+    # every shard forwards its local minimum, so the true rank-1 id is there
+    exact = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                   spec=DeploymentSpec(n_shards=4))
+    eres = exact.execute(req)
+    np.testing.assert_array_equal(res.ids[:, 0], eres.ids[:, 0])
+    assert (np.diff(res.dists[:, :4], axis=1) >= 0).all()
+
+
+def test_from_segmented_matches_direct_search(small_ds):
+    """Sharding a SegmentedIndex round-robin must not change exact-route
+    answers (segments are shared, ids are external either way)."""
+    from repro.streaming import SegmentedIndex
+    ds = small_ds
+    n = 400
+    spec = IndexSpec(variants=("T", "Tp"), m=8, ef_con=40)
+    seg = SegmentedIndex(spec)
+    ids = np.arange(n)
+    seg.add(ids[:200], ds.vectors[:200], ds.lo[:200], ds.hi[:200])
+    seg.flush()
+    seg.add(ids[200:], ds.vectors[200:n], ds.lo[200:n], ds.hi[200:n])
+    seg.flush()
+    seg.delete(np.arange(20, 40))
+    dep = ShardedDeployment.from_segmented(
+        seg, spec=DeploymentSpec(n_shards=2))
+    assert sum(s.n for s in dep.shards) == len(seg)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.25, seed=9)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=8,
+                        route="pruned")
+    a = seg.search(req)
+    b = dep.execute(req)
+    np.testing.assert_allclose(np.sort(a.dists, 1), np.sort(b.dists, 1),
+                               rtol=1e-4, atol=1e-4)
+    assert b.recall_vs(a) == 1.0
+
+
+def test_deployment_spec_validation(small_ds):
+    ds = small_ds
+    with pytest.raises(ValueError):
+        DeploymentSpec(n_shards=0)
+    with pytest.raises(ValueError):
+        DeploymentSpec(merge="bogus")
+    with pytest.raises(ValueError):
+        DeploymentSpec(per_shard_k=-1)
+    with pytest.raises(TypeError):
+        DeploymentSpec(engine={"route": "flat"})
+    with pytest.raises(ValueError, match="divisible"):
+        ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                               spec=DeploymentSpec(n_shards=7))  # 600 % 7
+    dep = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                 spec=DeploymentSpec(n_shards=2))
+    with pytest.raises(TypeError, match="SearchRequest"):
+        dep.execute(ds.queries)
+
+
+# ---- device merges: run under the 8-virtual-device CPU lane ----
+
+@needs8
+def test_merge_schedules_bit_parity_8dev(small_ds):
+    """all_gather and tournament return bit-identical ids AND distances on
+    the same 8-shard corpus (distinct distances)."""
+    ds = small_ds
+    mesh = _mesh8()
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=5)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=10)
+    out = {}
+    for merge in ("all_gather", "tournament"):
+        dep = ShardedDeployment.flat(
+            ds.vectors, ds.lo, ds.hi, mesh=mesh,
+            spec=DeploymentSpec(n_shards=8, merge=merge))
+        res = dep.execute(req)
+        assert res.report.merge == merge
+        out[merge] = res
+    np.testing.assert_array_equal(out["all_gather"].ids,
+                                  out["tournament"].ids)
+    np.testing.assert_array_equal(out["all_gather"].dists,
+                                  out["tournament"].dists)
+    # and both equal the host merge (same candidates, same order)
+    host = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                  spec=DeploymentSpec(n_shards=8,
+                                                      merge="host"))
+    np.testing.assert_array_equal(out["all_gather"].ids,
+                                  host.execute(req).ids)
+
+
+@needs8
+@pytest.mark.parametrize("mask", [1, 2, 3, 4, 8, 15, 48, 63])
+def test_sharded_vs_single_parity_grid_8dev(small_ds, built_index, mask):
+    """The smoke grid: every route on every predicate family answers from 8
+    shards what one device answers — exactly for the exact routes, at
+    matched recall for the graph route (per-shard graphs differ from the
+    single graph, so parity there is recall, not bits)."""
+    ds = small_ds
+    mesh = _mesh8()
+    dep = ShardedDeployment.build(
+        ds.vectors, ds.lo, ds.hi, mesh=mesh,
+        spec=DeploymentSpec(
+            n_shards=8,
+            index=IndexSpec(variants=("T", "Tp", "Tpp"), m=8, ef_con=40)))
+    single = QueryEngine(built_index)
+    qlo, qhi = make_queries(ds, mask, 0.25, seed=10 + mask)
+    exact = single.search(SearchRequest(ds.queries, (qlo, qhi), mask, k=10,
+                                        route="flat"))
+    for route in ("flat", "pruned", "graph"):
+        res = dep.execute(SearchRequest(ds.queries, (qlo, qhi), mask, k=10,
+                                        ef=64, route=route))
+        assert res.report.merge == "all_gather" and not res.degraded
+        if route == "graph":
+            assert res.recall_vs(exact) >= 0.9, (mask, route)
+        else:
+            np.testing.assert_allclose(np.sort(res.dists, 1),
+                                       np.sort(exact.dists, 1),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"{mask}/{route}")
+            assert res.recall_vs(exact) == 1.0, (mask, route)
+
+
+@needs8
+def test_fused_flat_device_path_matches_host_8dev(small_ds):
+    """The fused shard_map path (per_shard_k narrowing included) returns
+    what the host-orchestrated merge returns, and a dead shard is masked
+    identically on device."""
+    ds = small_ds
+    mesh = _mesh8()
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.25, seed=12)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=10)
+    for fk in (0, 4):
+        dev = ShardedDeployment.flat(
+            ds.vectors, ds.lo, ds.hi, mesh=mesh,
+            spec=DeploymentSpec(n_shards=8, per_shard_k=fk))
+        host = ShardedDeployment.flat(
+            ds.vectors, ds.lo, ds.hi,
+            spec=DeploymentSpec(n_shards=8, per_shard_k=fk, merge="host"))
+        dev.fail(5)
+        host.fail(5)
+        a = dev.execute(req)
+        b = host.execute(req)
+        assert a.degraded and a.report.missing_shards == (5,)
+        assert a.report.shards[5].route == "lost"
+        np.testing.assert_array_equal(a.ids, b.ids)
+        np.testing.assert_allclose(a.dists, b.dists, rtol=1e-5, atol=1e-6)
 
 
 _SUBPROCESS_PROG = textwrap.dedent("""

@@ -1,12 +1,14 @@
 """Vectorized planner (property-based vs the scalar Theorem 4.1 reference)
 and the QueryEngine facade (routing, padding, end-to-end recall)."""
+import dataclasses
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as hst
 
 from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, QUERY_CONTAINING,
-                        MSTGIndex, Overlaps, QueryEngine, SearchRequest,
-                        intervals as iv)
+                        EngineConfig, MSTGIndex, Overlaps, QueryEngine,
+                        SearchRequest, intervals as iv)
 from repro.core.engine import ROUTE_GRAPH, ROUTE_PRUNED, _next_pow2
 from repro.data import make_queries, brute_force_topk
 
@@ -98,7 +100,7 @@ def test_engine_routes_agree_and_pruned_is_exact(small_ds, built_index):
 
 def test_engine_auto_routing_by_selectivity(small_ds, built_index):
     ds = small_ds
-    eng = QueryEngine(built_index, flat_threshold=0.15)
+    eng = QueryEngine(built_index, config=EngineConfig(flat_threshold=0.15))
     # narrow query -> low selectivity -> pruned; wide -> graph
     qlo_n, qhi_n = make_queries(ds, ANY_OVERLAP, 0.02, seed=41)
     qlo_w, qhi_w = make_queries(ds, ANY_OVERLAP, 0.6, seed=41)
@@ -117,8 +119,8 @@ def test_engine_auto_routing_by_selectivity(small_ds, built_index):
 def test_engine_padding_is_invisible(small_ds, built_index):
     """Bucketed (padded) batches return exactly what unpadded batches do."""
     ds = small_ds
-    eng_pad = QueryEngine(built_index, pad_queries=True)
-    eng_raw = QueryEngine(built_index, pad_queries=False)
+    eng_pad = QueryEngine(built_index, config=EngineConfig(pad_queries=True))
+    eng_raw = QueryEngine(built_index, config=EngineConfig(pad_queries=False))
     qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=43)
     for Q in (1, 3, 7):  # all pad up to buckets
         req = _req(ds.queries[:Q], qlo[:Q], qhi[:Q], Overlaps(),
@@ -135,7 +137,7 @@ def test_engine_pruned_exact_despite_bad_estimator(small_ds, built_index):
     sampled selectivity estimate — a pathological estimator must not cause
     truncation (regression: cap used to be 2x the sampled selectivity)."""
     ds = small_ds
-    eng = QueryEngine(built_index, selectivity_sample=4)
+    eng = QueryEngine(built_index, config=EngineConfig(selectivity_sample=4))
     qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.05, seed=47)
     tids, tds = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
                                  qlo, qhi, ANY_OVERLAP, 10)
@@ -166,7 +168,7 @@ def test_selectivity_cache_bounded_fifo_eviction(small_ds, built_index):
     """Overflow evicts the oldest entries only (FIFO), never the whole memo,
     and the hit/miss/eviction counters stay consistent throughout."""
     ds = small_ds
-    eng = QueryEngine(built_index, sel_cache_max=8)
+    eng = QueryEngine(built_index, config=EngineConfig(sel_cache_max=8))
     vals = built_index.domain.values
     qlo = vals[:12].copy()                    # 12 distinct rank signatures
     qhi = qlo + (vals[-1] - vals[0])
@@ -195,7 +197,7 @@ def test_auto_route_parity_with_pinned_route(small_ds, built_index):
     slot count, and variants — with selectivity answered from the O(1) rank
     table before any device work (no sample scan on the request path)."""
     ds = small_ds
-    eng = QueryEngine(built_index, flat_threshold=0.15)
+    eng = QueryEngine(built_index, config=EngineConfig(flat_threshold=0.15))
     for sel, want_route in ((0.02, ROUTE_PRUNED), (0.6, ROUTE_GRAPH)):
         qlo, qhi = make_queries(ds, ANY_OVERLAP, sel, seed=53)
         auto = eng.search(_req(ds.queries, qlo, qhi, ANY_OVERLAP))
@@ -249,23 +251,63 @@ def test_selectivity_table_built_and_bounded(small_ds, built_index):
     np.testing.assert_allclose(est, want, atol=1e-12)
 
 
-def test_deprecation_warns_exactly_once_per_process(small_ds, built_index):
-    """Tuple-API shims emit one DeprecationWarning per process per shim,
-    attributed to the caller (stacklevel points at this file)."""
+def test_legacy_constructor_knobs_warn_once_and_fold(built_index):
+    """Bare constructor knobs still work but warn exactly once per process
+    (attributed to the caller) and fold into the typed EngineConfig; unknown
+    knobs and non-EngineConfig configs are rejected outright."""
     import warnings as w
-    from repro.core import MSTGSearcher
     from repro.core.engine import reset_deprecation_warnings
-    ds = small_ds
-    eng = QueryEngine(built_index)
-    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=7)
     reset_deprecation_warnings()
     with w.catch_warnings(record=True) as rec:
         w.simplefilter("always")
-        eng.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=5)
-        eng.search(ds.queries, qlo, qhi, ANY_OVERLAP, k=5)
-        MSTGSearcher(built_index, engine=eng)
-        MSTGSearcher(built_index, engine=eng)
+        eng1 = QueryEngine(built_index, pad_queries=False, sel_cache_max=7)
+        eng2 = QueryEngine(built_index, selectivity_sample=3)
     deps = [r for r in rec if issubclass(r.category, DeprecationWarning)]
-    assert len(deps) == 2                     # one per shim, not per call
-    for r in deps:                            # correct stacklevel: the caller
-        assert r.filename == __file__
+    assert len(deps) == 1                     # once per process, not per call
+    assert deps[0].filename == __file__       # stacklevel points at the caller
+    assert eng1.config.pad_queries is False and eng1.config.sel_cache_max == 7
+    assert eng2.config.selectivity_sample == 3
+    # knobs layered on an explicit config win over that config
+    base = EngineConfig(sel_cache_max=5, pad_queries=False)
+    with w.catch_warnings():
+        w.simplefilter("ignore", DeprecationWarning)
+        eng3 = QueryEngine(built_index, config=base, sel_cache_max=9)
+    assert eng3.config.sel_cache_max == 9 and eng3.config.pad_queries is False
+    with pytest.raises(TypeError, match="unknown QueryEngine knob"):
+        QueryEngine(built_index, beam_width=32)
+    with pytest.raises(TypeError, match="EngineConfig"):
+        QueryEngine(built_index, config={"route": "flat"})
+    reset_deprecation_warnings()
+
+
+def test_engine_config_validates_and_replaces():
+    cfg = EngineConfig()
+    assert cfg.route == "auto" and cfg.flat_threshold is None
+    assert cfg.replace(route="pruned").route == "pruned"
+    assert cfg.route == "auto"                # replace() copies, frozen intact
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.route = "flat"
+    for bad in (dict(route="beam"), dict(graph_fanout=0),
+                dict(graph_chunk=-1), dict(graph_chunk="wide"),
+                dict(selectivity_sample=0), dict(sel_cache_max=0)):
+        with pytest.raises(ValueError):
+            EngineConfig(**bad)
+        with pytest.raises(ValueError):
+            cfg.replace(**bad)                # replace() re-validates
+
+
+def test_request_wins_over_config_wins_over_heuristic(small_ds, built_index):
+    """The documented precedence: a SearchRequest field beats the
+    EngineConfig value, which beats the backend heuristic."""
+    ds = small_ds
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=67)
+    eng = QueryEngine(built_index, config=EngineConfig(route="pruned"))
+    res = eng.search(_req(ds.queries, qlo, qhi, ANY_OVERLAP))
+    assert res.report.route == "pruned"       # config overrides auto-routing
+    res = eng.search(_req(ds.queries, qlo, qhi, ANY_OVERLAP, route="flat"))
+    assert res.report.route == "flat"         # request overrides config
+    # fanout: request > config > backend heuristic (CPU heuristic is 1)
+    eng2 = QueryEngine(built_index, config=EngineConfig(graph_fanout=2))
+    assert eng2._resolve_fanout(64, None) == 2
+    assert eng2._resolve_fanout(64, 5) == 5
+    assert QueryEngine(built_index)._resolve_fanout(64, None) == 1

@@ -15,8 +15,8 @@ from hypothesis import given, settings, strategies as hst
 import jax.numpy as jnp
 
 from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, QUERY_CONTAINING,
-                        LEFT_OVERLAP, RIGHT_OVERLAP, QueryEngine,
-                        SearchRequest, intervals as iv)
+                        LEFT_OVERLAP, RIGHT_OVERLAP, EngineConfig,
+                        QueryEngine, SearchRequest, intervals as iv)
 from repro.core.search import (mstg_graph_search, mstg_graph_search_chunked,
                                packed_words)
 from repro.data import make_queries
@@ -37,14 +37,16 @@ ROUTES = ("graph", "pruned", "flat")
 @pytest.fixture(scope="module")
 def ref_engine(built_index):
     """The seed-equivalent reference: dense visited, single while_loop."""
-    return QueryEngine(built_index, packed_visited=False, graph_chunk=None)
+    return QueryEngine(built_index, config=EngineConfig(packed_visited=False,
+                                                        graph_chunk=None))
 
 
 @pytest.fixture(scope="module")
 def wave_engine(built_index):
     """The wavefront path under test: packed visited, forced tiny chunks (so
     compaction triggers even at test batch sizes)."""
-    return QueryEngine(built_index, packed_visited=True, graph_chunk=7)
+    return QueryEngine(built_index, config=EngineConfig(packed_visited=True,
+                                                        graph_chunk=7))
 
 
 def _slot_args(eng, variant_slot, queries):
@@ -198,8 +200,8 @@ def test_segmented_fanout_inherits_wavefront(small_ds):
     n = 220
     spec = IndexSpec(variants=("T", "Tp"), m=8, ef_con=40)
 
-    def build(engine_kwargs):
-        seg = SegmentedIndex(spec, engine_kwargs=engine_kwargs)
+    def build(engine_config):
+        seg = SegmentedIndex(spec, engine_config=engine_config)
         ids = np.arange(n)
         seg.add(ids[:150], ds.vectors[:150], ds.lo[:150], ds.hi[:150])
         seg.flush()
@@ -210,8 +212,8 @@ def test_segmented_fanout_inherits_wavefront(small_ds):
                 ds.lo[40:60], ds.hi[40:60])          # upserts -> delta
         return seg
 
-    ref = build(dict(packed_visited=False, graph_chunk=None))
-    wave = build(dict(packed_visited=True, graph_chunk=5))
+    ref = build(EngineConfig(packed_visited=False, graph_chunk=None))
+    wave = build(EngineConfig(packed_visited=True, graph_chunk=5))
     qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.25, seed=17)
     for route in ("graph", "pruned"):
         req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=8, ef=32,

@@ -1,13 +1,11 @@
 """Serving engine: generation determinism, cache seeding, retrieval server."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import (ANY_OVERLAP, MSTGSearcher, Overlaps, QueryEngine,
-                        QueryHit)
+from repro.core import ANY_OVERLAP, Overlaps, QueryEngine, QueryHit
 from repro.data import make_queries, brute_force_topk, recall_at_k
 from repro.models.transformer import LM
 from repro.serving import RetrievalServer, ServeEngine
@@ -74,19 +72,18 @@ def test_retrieval_server_batches_by_mask(small_ds, built_index):
     assert server.tick() == {}  # empty tick is a no-op
 
 
-def test_retrieval_server_legacy_searcher_and_per_item_embed(small_ds,
-                                                             built_index):
-    """Tuple-era path: MSTGSearcher engine + per-item embed_fn fallback."""
+def test_retrieval_server_per_item_embed_fallback(small_ds, built_index):
+    """Per-item embed_fn (scalar item -> (d,)) still works: the server probes
+    once, then falls back to mapping items through the embedder."""
     ds = small_ds
 
-    def embed_one(i):  # legacy per-item embedder (scalar item -> (d,))
+    def embed_one(i):  # per-item embedder (scalar item -> (d,))
         if isinstance(i, list):
             raise TypeError("not batched")
         return ds.queries[i]
 
-    with pytest.warns(DeprecationWarning):
-        searcher = MSTGSearcher(built_index)
-    server = RetrievalServer(searcher, embed_fn=embed_one, k=10)
+    server = RetrievalServer(QueryEngine(built_index), embed_fn=embed_one,
+                             k=10)
     qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=4)
     for i in range(4):
         server.submit(i, qlo[i], qhi[i], ANY_OVERLAP)
