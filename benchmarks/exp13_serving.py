@@ -1,0 +1,417 @@
+"""Exp. 13 — serving latency/throughput: async continuous batching vs sync
+tick (beyond-paper §Serving).
+
+Both servers execute the same workload on the same engine with the graph
+route pinned, so every served answer is bit-identical to solo execution and
+recall is equal **by construction** — the comparison isolates the serving
+discipline:
+
+* **sync** — back-to-back :meth:`RetrievalServer.tick` calls: each tick runs
+  its whole accumulated queue to global convergence (stragglers hold the
+  batch, arrivals wait out the tick, small batches pad up);
+* **async** — :class:`AsyncRetrievalServer`: bounded admission, micro-batch
+  dispatch, and wavefront slot refill keep the device batch occupied while
+  requests enter/leave mid-flight.
+
+Load generation: a **closed loop** (fixed backlog, one giant batch — the
+regime that favors sync's whole-queue tick) and an **open loop** (Poisson
+arrivals replayed on the wall clock at a sweep of offered rates, long
+enough that queueing reaches steady state: p50/p95/p99 end-to-end latency,
+shed + deadline-missed counts per rate). The stream length matters: short
+bursts degenerate into closed-loop runs that hide the serving-discipline
+difference. At steady state the sync tick pays its structural costs —
+arrivals wait out the whole in-progress tick, and moderate queues keep the
+batch under the engine's chunked-driver threshold where the single-loop
+search re-traces per call — while the async front end keeps capped-slot
+wavefront streams warm and refills them mid-flight.
+
+**Sustained QPS is goodput under an SLO** (the MLPerf server-scenario
+convention): answers delivered within a latency budget per second — a mode
+has not "sustained" a rate if latency diverges while a backlog absorbs the
+excess, which is exactly what the unbounded sync tick does at overload.
+The budget is platform-relative: ``slo_ms = max(50, 25 x solo_p50)`` with
+``solo_p50`` the measured single-query graph-route latency, both recorded
+in the report. Async requests carry ``deadline_ms = slo_ms`` so admission
+control can do its job (EDF + shed-expired); sync has no deadline concept
+— late answers are counted against it post hoc, the client-side
+abandonment view. Each mode's headline number is its peak goodput over the
+**under-load** rates (offered ≥ 0.5x sync's closed-loop capacity): that is
+the load a serving SLA is provisioned for. The lightest swept rate is kept
+in the report to document the keep-up regime, where any discipline serves
+everything and the comparison is ~1.0 by construction. Per-rate rows keep
+both raw and goodput curves plus p50/p99 and shed / deadline-missed
+counts.
+
+Writes ``BENCH_serving.json``; ``--history`` appends ``serving_qps`` +
+``serving_p99_ms`` (gated by ``ci_gate --direction min``) to the shared
+bench trajectory file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import numpy as np
+
+from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, EngineConfig,
+                        MSTGIndex, QueryEngine, Rejected, SearchRequest,
+                        intervals as iv)
+from repro.data import (brute_force_topk, make_queries, make_range_dataset,
+                        recall_at_k)
+from repro.serving import AsyncRetrievalServer, RetrievalServer, SLOPolicy
+
+from .common import emit, time_call
+
+
+def make_workload(ds, masks, sel: float = 0.10, seed: int = 5):
+    """Per-request (mask, qlo, qhi, query_row) tuples, masks round-robin —
+    a mixed-predicate stream is what splits the sync server into per-mask
+    groups."""
+    per_mask = {}
+    for m in masks:
+        per_mask[m] = make_queries(ds, m, sel, seed=seed)
+    Q = ds.queries.shape[0]
+    work = []
+    for i in range(Q):
+        m = masks[i % len(masks)]
+        qlo, qhi = per_mask[m]
+        work.append((m, float(qlo[i]), float(qhi[i]), i))
+    return work
+
+
+def poisson_arrivals(n: int, rate_qps: float, seed: int = 9) -> np.ndarray:
+    """Cumulative arrival offsets (seconds) of an open-loop Poisson stream."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, n))
+
+
+def _latency_stats(lat_ms) -> dict:
+    if not len(lat_ms):
+        return {"p50": None, "p95": None, "p99": None, "mean": None}
+    a = np.asarray(lat_ms)
+    return {"p50": round(float(np.percentile(a, 50)), 3),
+            "p95": round(float(np.percentile(a, 95)), 3),
+            "p99": round(float(np.percentile(a, 99)), 3),
+            "mean": round(float(a.mean()), 3)}
+
+
+def run_sync_open(engine, embed_fn, work, arrivals, k, ef,
+                  slo_ms=None) -> dict:
+    """Replay the arrival trace against back-to-back ``tick()`` calls: every
+    request joins the next tick after its arrival; a tick serves its whole
+    queue at once. ``slo_ms`` only scores goodput — the sync server has no
+    deadline concept, so every answer is produced and late ones are counted
+    against it (client-side abandonment)."""
+    srv = RetrievalServer(engine, embed_fn, k=k, ef=ef)
+    lat = {}
+    t0 = time.perf_counter()
+    nxt = 0
+    submitted = {}
+    order = 0
+    while len(lat) < len(work):
+        now = time.perf_counter() - t0
+        while nxt < len(work) and arrivals[nxt] <= now:
+            m, qlo, qhi, row = work[nxt]
+            srv.submit(row, qlo, qhi, m)
+            submitted[order] = nxt
+            order += 1
+            nxt += 1
+        if not srv.queue:
+            if nxt < len(work):
+                time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t0)))
+            continue
+        base = order - len(srv.queue)
+        res = srv.tick()
+        done = time.perf_counter() - t0
+        for qi in res:
+            ridx = submitted[base + qi]
+            lat[ridx] = ((done - arrivals[ridx]) * 1e3, res[qi])
+    wall = time.perf_counter() - t0
+    lat_ms = [v[0] for v in lat.values()]
+    good = (sum(1 for v in lat_ms if v <= slo_ms) if slo_ms is not None
+            else len(lat_ms))
+    return {"lat": lat, "wall_s": wall,
+            "qps": round(len(lat) / wall, 2),
+            "goodput_qps": round(good / wall, 2),
+            "stats": _latency_stats(lat_ms),
+            "shed": 0, "deadline_missed": len(lat_ms) - good}
+
+
+def run_async_open(engine, embed_fn, work, arrivals, k, ef,
+                   policy=None, deadline_ms=None) -> dict:
+    """Replay the same trace against the continuous-batching front end.
+    ``deadline_ms`` rides on every request, so the scheduler's admission
+    control (EDF ordering + shed-expired) is live during the replay."""
+    # latency-provisioned depth: 64 in-flight rows keeps the in-service time
+    # (Little's law: inflight / throughput) inside an interactive SLO.
+    # bucket=32 caps both variant streams at 32-row slots: a handful of jit
+    # shapes that warmup covers, so arrival timing can't surface fresh
+    # compiles mid-replay (uncapped adaptive buckets retrace per pow2 shape
+    # combo), while sparse fan-out streams still shrink below the cap
+    srv = AsyncRetrievalServer(
+        engine, embed_fn, k=k, ef=ef, max_inflight=64, bucket=32,
+        policy=policy or SLOPolicy(max_wait_ms=1.0, max_batch=64))
+    lat = {}
+    shed = 0
+    tickets = {}
+    t0 = time.perf_counter()
+    nxt = 0
+    while len(lat) + shed < len(work):
+        now = time.perf_counter() - t0
+        while nxt < len(work) and arrivals[nxt] <= now:
+            m, qlo, qhi, row = work[nxt]
+            out = srv.submit(row, qlo, qhi, m, deadline_ms=deadline_ms)
+            if isinstance(out, Rejected):
+                shed += 1
+            else:
+                tickets[out] = nxt
+            nxt += 1
+        if srv.idle and nxt < len(work):
+            time.sleep(max(0.0, arrivals[nxt] - (time.perf_counter() - t0)))
+            continue
+        for t, res in srv.step().items():
+            ridx = tickets.get(t)
+            if ridx is None:
+                continue
+            if isinstance(res, Rejected):
+                shed += 1
+            else:
+                done = time.perf_counter() - t0
+                lat[ridx] = ((done - arrivals[ridx]) * 1e3, res)
+    wall = time.perf_counter() - t0
+    snap = srv.snapshot()
+    lat_ms = [v[0] for v in lat.values()]
+    good = (sum(1 for v in lat_ms if v <= deadline_ms)
+            if deadline_ms is not None else len(lat_ms))
+    return {"lat": lat, "wall_s": wall,
+            "qps": round(len(lat) / wall, 2),
+            "goodput_qps": round(good / wall, 2),
+            "stats": _latency_stats(lat_ms),
+            "shed": shed, "deadline_missed": snap["deadline_missed"],
+            "occupancy": round(snap.get("batch_occupancy", 1.0), 4),
+            "refill_efficiency": round(snap.get("refill_efficiency", 1.0), 4),
+            "refills": snap.get("refills", 0)}
+
+
+def run_closed(engine, embed_fn, work, k, ef, mode: str,
+               repeats: int = 3) -> float:
+    """Peak sustained QPS with the full workload as backlog (one shot per
+    repeat, best-of)."""
+    def sync_once():
+        srv = RetrievalServer(engine, embed_fn, k=k, ef=ef)
+        for m, qlo, qhi, row in work:
+            srv.submit(row, qlo, qhi, m)
+        return srv.tick()
+
+    def async_once():
+        srv = AsyncRetrievalServer(
+            engine, embed_fn, k=k, ef=ef, max_inflight=128, bucket=64,
+            policy=SLOPolicy(max_wait_ms=0.0, max_batch=128))
+        for m, qlo, qhi, row in work:
+            srv.submit(row, qlo, qhi, m)
+        return srv.run_until_idle()
+
+    fn = sync_once if mode == "sync" else async_once
+    dt, out = time_call(fn, repeats=repeats, best=True)
+    n_served = len([r for r in out.values()
+                    if not isinstance(r, Rejected)])
+    return round(n_served / dt, 2)
+
+
+def _recall(ds, work, hits, k) -> float:
+    """Recall@k of served answers vs brute force over the same predicate."""
+    got, want = [], []
+    for (m, qlo, qhi, row), hit in hits:
+        tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi,
+                                   ds.queries[row:row + 1],
+                                   np.array([qlo]), np.array([qhi]), m, k)
+        want.append(tids[0])
+        got.append(hit.ids[:k])
+    if not got:
+        return 0.0
+    return round(float(recall_at_k(np.stack(got), np.stack(want))), 4)
+
+
+def run_serving_bench(out_path: str = "BENCH_serving.json", n: int = 2000,
+                      d: int = 32, n_requests: int = 384, k: int = 10,
+                      ef: int = 64, history_path: str = None,
+                      rates=None) -> dict:
+    report = {"schema": 1, "unix_time": time.time(),
+              "platform": platform.platform(),
+              "sizes": {"n": n, "d": d, "requests": n_requests, "k": k,
+                        "ef": ef}}
+    ds = make_range_dataset(n=n, d=d, n_queries=n_requests, quantize=128,
+                            seed=0)
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"), m=12,
+                    ef_con=64)
+    masks = (ANY_OVERLAP, QUERY_CONTAINED)
+    report["masks"] = [iv.mask_name(m) for m in masks]
+    work = make_workload(ds, masks, sel=0.10)
+    embed_fn = lambda items: ds.queries[np.asarray(items)]
+    # the graph route is pinned on both servers: answers are bit-identical
+    # to solo execution on either path, so recall is equal by construction
+    # (recorded once to document it)
+    engine = QueryEngine(idx, config=EngineConfig(route="graph"))
+
+    # platform-relative SLO anchor: solo single-query latency on this box
+    def solo_once(i):
+        m, qlo, qhi, row = work[i]
+        return engine.execute(SearchRequest(
+            ds.queries[row:row + 1], (np.array([qlo]), np.array([qhi])), m,
+            k=k, ef=ef, route="graph"))
+    solo_once(0)
+    solo_ms = []
+    for i in range(16):
+        t0 = time.perf_counter()
+        solo_once(i)
+        solo_ms.append((time.perf_counter() - t0) * 1e3)
+    solo_p50 = float(np.percentile(solo_ms, 50))
+    slo_ms = round(max(50.0, 25.0 * solo_p50), 1)
+    report["slo"] = {"solo_p50_ms": round(solo_p50, 2), "slo_ms": slo_ms,
+                     "rule": "max(50, 25 * solo_p50)"}
+    print(f"  solo p50={solo_p50:.2f} ms -> slo={slo_ms} ms")
+
+    # warm both serving paths (jit traces for the pow2 buckets they touch)
+    _ = run_closed(engine, embed_fn, work[:16], k, ef, "sync", repeats=1)
+    _ = run_closed(engine, embed_fn, work[:16], k, ef, "async", repeats=1)
+
+    sync_qps = run_closed(engine, embed_fn, work, k, ef, "sync")
+    async_qps = run_closed(engine, embed_fn, work, k, ef, "async")
+    report["closed_loop"] = {"sync_qps": sync_qps, "async_qps": async_qps,
+                            "speedup": round(async_qps / sync_qps, 3)}
+
+    if rates is None:
+        # anchored to sync's closed-loop (giant-batch) capacity; low enough
+        # that both modes' steady-state capacity is bracketed from below
+        rates = [round(sync_qps * f, 1) for f in (0.3, 0.6, 1.0)]
+    # unmeasured open-loop passes per mode at the sweep's extreme rates: the
+    # open-loop batch compositions (small per-mask pow2 buckets, stream
+    # concat/gather shape combos) differ from the closed-loop ones AND vary
+    # with arrival timing, so a first-touch jit compile inside a measured run
+    # would be charged to whichever rate ran first
+    for warm_rate in (rates[0], rates[-1]):
+        warm_arr = poisson_arrivals(len(work), warm_rate)
+        run_sync_open(engine, embed_fn, work, warm_arr, k, ef, slo_ms=slo_ms)
+        run_async_open(engine, embed_fn, work, warm_arr, k, ef,
+                       deadline_ms=slo_ms)
+    open_rows = []
+    for rate in rates:
+        arr = poisson_arrivals(len(work), rate)
+        # best-of-2 per mode: one replay is a single sample of a timing-
+        # dependent process; a stray compile or scheduler hiccup in either
+        # mode would otherwise masquerade as a serving-discipline difference
+        s = max((run_sync_open(engine, embed_fn, work, arr, k, ef,
+                               slo_ms=slo_ms)
+                 for _ in range(2)), key=lambda r: r["goodput_qps"])
+        a = max((run_async_open(engine, embed_fn, work, arr, k, ef,
+                                deadline_ms=slo_ms)
+                 for _ in range(2)), key=lambda r: r["goodput_qps"])
+        row = {"offered_qps": rate,
+               "sync": {kk: s[kk] for kk in ("qps", "goodput_qps", "stats",
+                                             "shed", "deadline_missed")},
+               "async": {kk: a[kk] for kk in ("qps", "goodput_qps", "stats",
+                                              "shed", "deadline_missed",
+                                              "occupancy",
+                                              "refill_efficiency",
+                                              "refills")}}
+        open_rows.append(row)
+        print(f"  rate={rate}: sync good={s['goodput_qps']} qps={s['qps']} "
+              f"p50={s['stats']['p50']} p99={s['stats']['p99']} | "
+              f"async good={a['goodput_qps']} qps={a['qps']} "
+              f"p50={a['stats']['p50']} p99={a['stats']['p99']} "
+              f"shed={a['shed']} occ={a.get('occupancy')}")
+        if rate == rates[-1]:
+            # recall parity documented at the last (most stressed) rate
+            report["recall"] = {
+                "sync": _recall(ds, work,
+                                [(work[i], v[1]) for i, v in
+                                 s["lat"].items()], k),
+                "async": _recall(ds, work,
+                                 [(work[i], v[1].hit) for i, v in
+                                  a["lat"].items()], k)}
+    report["open_loop"] = open_rows
+    # sustained QPS per mode = peak goodput over the under-load rates
+    # (offered >= 0.5x sync's closed-loop capacity — the lighter rates
+    # document the keep-up regime where every discipline serves everything);
+    # each mode carries its own latency at its own peak
+    loaded = [r for r in open_rows if r["offered_qps"] >= 0.5 * sync_qps]
+    if not loaded:          # custom --rates sweep entirely below capacity
+        loaded = open_rows
+    best_a = max(loaded, key=lambda r: r["async"]["goodput_qps"])
+    best_s = max(loaded, key=lambda r: r["sync"]["goodput_qps"])
+    report["headline"] = {
+        "serving_qps": best_a["async"]["goodput_qps"],
+        "serving_p50_ms": best_a["async"]["stats"]["p50"],
+        "serving_p99_ms": best_a["async"]["stats"]["p99"],
+        "sync_qps": best_s["sync"]["goodput_qps"],
+        "sync_p50_ms": best_s["sync"]["stats"]["p50"],
+        "sync_p99_ms": best_s["sync"]["stats"]["p99"],
+        "slo_ms": slo_ms,
+        "speedup_open_loop": round(best_a["async"]["goodput_qps"]
+                                   / max(best_s["sync"]["goodput_qps"],
+                                         1e-9), 3),
+        "speedup_closed_loop": report["closed_loop"]["speedup"],
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    print(json.dumps(report["headline"], indent=2))
+    if history_path:
+        record = {
+            "commit": os.environ.get("GITHUB_SHA", "local")[:12],
+            "unix_time": round(report["unix_time"], 1),
+            "platform": report["platform"],
+            "serving_qps": report["headline"]["serving_qps"],
+            "serving_p99_ms": report["headline"]["serving_p99_ms"],
+            "serving_speedup": report["headline"]["speedup_open_loop"],
+        }
+        with open(history_path, "a") as f:
+            f.write(json.dumps(record, sort_keys=True) + "\n")
+        print(f"appended {history_path}: {json.dumps(record, sort_keys=True)}")
+    return report
+
+
+def run():
+    """CSV mode (benchmarks.run default lane): closed-loop sync vs async."""
+    from .common import bench_dataset, bench_index, K
+    ds = bench_dataset()
+    idx = bench_index(ds)
+    engine = QueryEngine(idx, config=EngineConfig(route="graph"))
+    masks = (ANY_OVERLAP, QUERY_CONTAINED)
+    work = make_workload(ds, masks, sel=0.10)
+    embed_fn = lambda items: ds.queries[np.asarray(items)]
+    _ = run_closed(engine, embed_fn, work[:8], K, 64, "sync", repeats=1)
+    _ = run_closed(engine, embed_fn, work[:8], K, 64, "async", repeats=1)
+    sync_qps = run_closed(engine, embed_fn, work, K, 64, "sync")
+    async_qps = run_closed(engine, embed_fn, work, K, 64, "async")
+    emit("exp13/sync_tick_qps", 1e6 / sync_qps, f"qps={sync_qps}")
+    emit("exp13/async_qps", 1e6 / async_qps,
+         f"qps={async_qps};speedup={async_qps / sync_qps:.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI sizes; writes BENCH_serving.json")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help="append serving_qps/serving_p99_ms JSON line")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        run_serving_bench(out_path=args.out, n=args.n or 1200, d=32,
+                          n_requests=args.requests or 384,
+                          history_path=args.history)
+    else:
+        run_serving_bench(out_path=args.out, n=args.n or 4000, d=32,
+                          n_requests=args.requests or 768,
+                          history_path=args.history)
+
+
+if __name__ == "__main__":
+    main()

@@ -47,8 +47,19 @@ def main() -> None:
         from repro.core import parse_mask
 
         from .smoke import run_smoke
-        run_smoke(out_path=args.out or "BENCH_smoke.json",
-                  mask=parse_mask(args.mask), history_path=args.history)
+        report = run_smoke(out_path=args.out or "BENCH_smoke.json",
+                           mask=parse_mask(args.mask),
+                           history_path=args.history)
+        # per-section failures are isolated inside run_smoke (each records
+        # into report["errors"] and the remaining sections still run +
+        # land in history); surface them as a non-zero exit at the end so
+        # a serving/kernel regression can't silently pass the lane
+        errors = report.get("errors", {})
+        if errors:
+            for sec, msg in errors.items():
+                print(f"SMOKE SECTION FAILED: {sec}: {msg}",
+                      file=sys.stderr)
+            sys.exit(1)
         return
 
     if args.scale:
@@ -64,11 +75,12 @@ def main() -> None:
     from . import (exp1_rrann, exp2_index_cost, exp3_rfann, exp4_ifann,
                    exp5_tsann, exp6_scalability, exp7_selectivity,
                    exp8_distributions, exp9_oracle, exp10_params,
-                   exp11_updates, exp12_wavefront, kernel_bench)
+                   exp11_updates, exp12_wavefront, exp13_serving,
+                   kernel_bench)
     mods = [exp1_rrann, exp2_index_cost, exp3_rfann, exp4_ifann, exp5_tsann,
             exp6_scalability, exp7_selectivity, exp8_distributions,
             exp9_oracle, exp10_params, exp11_updates, exp12_wavefront,
-            kernel_bench]
+            exp13_serving, kernel_bench]
     print("name,us_per_call,derived")
     failed = 0
     for mod in mods:

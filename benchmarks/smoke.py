@@ -19,6 +19,7 @@ import json
 import os
 import platform
 import time
+import traceback
 
 import numpy as np
 
@@ -100,21 +101,24 @@ def streaming_churn_metrics(n: int = 400, d: int = 24) -> dict:
 
 def append_history(report: dict, history_path: str) -> dict:
     """One compact JSON line per run, keyed by commit, appended so the bench
-    trajectory accumulates across scheduled CI runs."""
-    sel05 = report["exp1_rrann"].get("sel_05", {})
+    trajectory accumulates across scheduled CI runs. Tolerant of missing
+    sections (a failed section records None for its fields — ci_gate skips
+    records without the gated field instead of crashing the lane)."""
+    sel05 = report.get("exp1_rrann", {}).get("sel_05", {})
     auto = sel05.get("engine_auto", {})
     streaming = report.get("streaming", {})
+    build = report.get("build_seconds", {})
+    planner = report.get("planner", {})
     record = {
         "commit": os.environ.get("GITHUB_SHA", "local")[:12],
         "unix_time": round(report["unix_time"], 1),
         "platform": report.get("platform"),
         "mask": report.get("mask", iv.mask_name(ANY_OVERLAP)),
         "builder": report.get("builder"),
-        "build_seconds": report["build_seconds"]["total"],
-        "build_seconds_variants": {k: v for k, v in
-                                   report["build_seconds"].items()
+        "build_seconds": build.get("total"),
+        "build_seconds_variants": {k: v for k, v in build.items()
                                    if k != "total"},
-        "planner_speedup": report["planner"]["speedup"],
+        "planner_speedup": planner.get("speedup"),
         "auto_qps": auto.get("qps"),
         "auto_recall_at_10": auto.get("recall_at_10"),
         "graph_qps": report.get("graph_qps"),
@@ -122,9 +126,25 @@ def append_history(report: dict, history_path: str) -> dict:
         "update_recall": streaming.get("update_recall"),
         "update_ops_per_sec": streaming.get("update_ops_per_sec"),
     }
+    if report.get("errors"):
+        record["errors"] = sorted(report["errors"])
     with open(history_path, "a") as f:
         f.write(json.dumps(record, sort_keys=True) + "\n")
     return record
+
+
+def _section(report: dict, name: str, fn) -> bool:
+    """Run one smoke section; a failure records into ``report["errors"]``
+    and lets the remaining sections run (per-exp isolation: a serving or
+    kernel regression can't mask the graph/build metrics in history)."""
+    try:
+        fn()
+        return True
+    except Exception as e:  # noqa: BLE001
+        report.setdefault("errors", {})[name] = f"{type(e).__name__}: {e}"
+        print(f"smoke section {name!r} FAILED: {type(e).__name__}: {e}")
+        traceback.print_exc()
+        return False
 
 
 def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
@@ -151,84 +171,101 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
     report["builder"] = idx.spec.builder
     report["index_bytes"] = idx.index_bytes()
 
-    # exp1 (RRANN): engine QPS + recall at two selectivities, on the
-    # declarative SearchRequest surface
     eng = QueryEngine(idx)
-    rrann = {}
-    for sel in (0.05, 0.10):
-        qlo, qhi = make_queries(ds, mask, sel, seed=11)
-        tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
-                                   qlo, qhi, mask, k)
-        row = {}
-        for name, route in (("engine_auto", None), ("graph", "graph"),
-                            ("pruned", "pruned")):
-            req = SearchRequest(ds.queries, (qlo, qhi), mask, k=k, ef=64,
-                                route=route)
 
-            def cold_search(req=req):
-                # auto-route pays selectivity estimation on every timed call
-                # (comparable with pre-cache history entries)
-                eng._sel_cache.clear()
-                return eng.search(req)
+    def sec_exp1():
+        # exp1 (RRANN): engine QPS + recall at two selectivities, on the
+        # declarative SearchRequest surface
+        rrann = {}
+        for sel in (0.05, 0.10):
+            qlo, qhi = make_queries(ds, mask, sel, seed=11)
+            tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                       qlo, qhi, mask, k)
+            row = {}
+            for name, route in (("engine_auto", None), ("graph", "graph"),
+                                ("pruned", "pruned")):
+                req = SearchRequest(ds.queries, (qlo, qhi), mask, k=k, ef=64,
+                                    route=route)
 
-            # best-of-N: this box's CPU is noisily shared, and the
-            # engine_auto >= min(graph, pruned) invariant drowns in
-            # mean-of-N scheduler noise
-            dt, res = time_call(cold_search, repeats=7, best=True)
-            row[name] = {"qps": round(n_queries / dt, 1),
-                         "recall_at_10": round(res.recall_vs(tids), 4)}
-        rrann[f"sel_{int(sel * 100):02d}"] = row
-    report["exp1_rrann"] = rrann
-    # headline wavefront fields (tracked by history + the CI perf gate)
-    report["graph_qps"] = rrann["sel_05"]["graph"]["qps"]
+                def cold_search(req=req):
+                    # auto-route pays selectivity estimation on every timed
+                    # call (comparable with pre-cache history entries)
+                    eng._sel_cache.clear()
+                    return eng.search(req)
 
-    from .exp12_wavefront import wavefront_metrics
-    # mixed-selectivity batch: convergence skew (the thing compaction wins
-    # on) only exists when narrow and wide queries share a batch
-    wf = wavefront_metrics(eng, ds, mask=mask, sel=(0.02, 0.30), ef=64, k=k)
-    report["wasted_eval_frac"] = round(wf["wasted_eval_frac_chunked"], 4)
-    report["wavefront"] = {
-        "steps_global": wf["steps_global"],
-        "conv_steps_p50": round(wf["conv_steps_p50"], 1),
-        "conv_steps_p90": round(wf["conv_steps_p90"], 1),
-        "wasted_eval_frac_single": round(wf["wasted_eval_frac_single"], 4),
-        "wasted_eval_frac_chunked": round(wf["wasted_eval_frac_chunked"], 4),
-    }
+                # best-of-N: this box's CPU is noisily shared, and the
+                # engine_auto >= min(graph, pruned) invariant drowns in
+                # mean-of-N scheduler noise
+                dt, res = time_call(cold_search, repeats=7, best=True)
+                row[name] = {"qps": round(n_queries / dt, 1),
+                             "recall_at_10": round(res.recall_vs(tids), 4)}
+            rrann[f"sel_{int(sel * 100):02d}"] = row
+        report["exp1_rrann"] = rrann
+        # headline wavefront fields (tracked by history + the CI perf gate)
+        report["graph_qps"] = rrann["sel_05"]["graph"]["qps"]
 
-    # planner microbenchmark (acceptance: >= 10x over the seed scalar loop)
-    report["planner"] = {k_: (round(v, 4) if isinstance(v, float) else v)
-                         for k_, v in planner_microbench(idx, mask=mask).items()}
+    def sec_wavefront():
+        from .exp12_wavefront import wavefront_metrics
+        # mixed-selectivity batch: convergence skew (the thing compaction
+        # wins on) only exists when narrow and wide queries share a batch
+        wf = wavefront_metrics(eng, ds, mask=mask, sel=(0.02, 0.30), ef=64,
+                               k=k)
+        report["wasted_eval_frac"] = round(wf["wasted_eval_frac_chunked"], 4)
+        report["wavefront"] = {
+            "steps_global": wf["steps_global"],
+            "conv_steps_p50": round(wf["conv_steps_p50"], 1),
+            "conv_steps_p90": round(wf["conv_steps_p90"], 1),
+            "wasted_eval_frac_single": round(wf["wasted_eval_frac_single"], 4),
+            "wasted_eval_frac_chunked": round(wf["wasted_eval_frac_chunked"], 4),
+        }
 
-    # streaming churn lane: recall after 10% inserts + 5% deletes vs a
-    # static rebuild of the post-churn corpus
-    report["streaming"] = streaming_churn_metrics()
+    def sec_planner():
+        # planner microbenchmark (acceptance: >= 10x over the seed loop)
+        report["planner"] = {
+            k_: (round(v, 4) if isinstance(v, float) else v)
+            for k_, v in planner_microbench(idx, mask=mask).items()}
 
-    # kernel bench (interpret mode on CPU: correctness-path timing only)
-    import jax.numpy as jnp
-    from repro.kernels import ops
-    from repro.kernels.ref import pairwise_l2_masked_ref
-    rng = np.random.default_rng(0)
-    Qn, Nn, dk = 8, 512, 32
-    q = rng.normal(0, 1, (Qn, dk)).astype(np.float32)
-    c = rng.normal(0, 1, (Nn, dk)).astype(np.float32)
-    lo = rng.uniform(0, 100, Nn).astype(np.float32)
-    hi = lo + 10
-    ql = np.full(Qn, 20, np.float32)
-    qh = np.full(Qn, 60, np.float32)
-    dt_ref, _ = time_call(lambda: np.asarray(pairwise_l2_masked_ref(
-        jnp.asarray(q), jnp.asarray(c), jnp.asarray(lo), jnp.asarray(hi),
-        jnp.asarray(ql), jnp.asarray(qh), mask)))
-    dt_pal, _ = time_call(lambda: np.asarray(ops.pairwise_l2_masked(
-        q, c, lo, hi, ql, qh, mask)))
-    from .kernel_bench import _wavefront_step_inputs
-    wf_in = _wavefront_step_inputs(rng, Qn, Nn, dk, M=24, L=32)
-    dt_gtk, _ = time_call(lambda: np.asarray(ops.gathered_topk(*wf_in)[1]))
-    dt_gtk_ref, _ = time_call(lambda: np.asarray(ops.gathered_topk_ref(
-        *(jnp.asarray(a) for a in wf_in))[1]))
-    report["kernel"] = {"pairwise_ref_us": round(dt_ref * 1e6, 1),
-                       "pairwise_pallas_interpret_us": round(dt_pal * 1e6, 1),
-                       "gathered_topk_interpret_us": round(dt_gtk * 1e6, 1),
-                       "gathered_topk_ref_us": round(dt_gtk_ref * 1e6, 1)}
+    def sec_streaming():
+        # streaming churn lane: recall after 10% inserts + 5% deletes vs a
+        # static rebuild of the post-churn corpus
+        report["streaming"] = streaming_churn_metrics()
+
+    def sec_kernel():
+        # kernel bench (interpret mode on CPU: correctness-path timing only)
+        import jax.numpy as jnp
+        from repro.kernels import ops
+        from repro.kernels.ref import pairwise_l2_masked_ref
+        rng = np.random.default_rng(0)
+        Qn, Nn, dk = 8, 512, 32
+        q = rng.normal(0, 1, (Qn, dk)).astype(np.float32)
+        c = rng.normal(0, 1, (Nn, dk)).astype(np.float32)
+        lo = rng.uniform(0, 100, Nn).astype(np.float32)
+        hi = lo + 10
+        ql = np.full(Qn, 20, np.float32)
+        qh = np.full(Qn, 60, np.float32)
+        dt_ref, _ = time_call(lambda: np.asarray(pairwise_l2_masked_ref(
+            jnp.asarray(q), jnp.asarray(c), jnp.asarray(lo), jnp.asarray(hi),
+            jnp.asarray(ql), jnp.asarray(qh), mask)))
+        dt_pal, _ = time_call(lambda: np.asarray(ops.pairwise_l2_masked(
+            q, c, lo, hi, ql, qh, mask)))
+        from .kernel_bench import _wavefront_step_inputs
+        wf_in = _wavefront_step_inputs(rng, Qn, Nn, dk, M=24, L=32)
+        dt_gtk, _ = time_call(lambda: np.asarray(
+            ops.gathered_topk(*wf_in)[1]))
+        dt_gtk_ref, _ = time_call(lambda: np.asarray(ops.gathered_topk_ref(
+            *(jnp.asarray(a) for a in wf_in))[1]))
+        report["kernel"] = {
+            "pairwise_ref_us": round(dt_ref * 1e6, 1),
+            "pairwise_pallas_interpret_us": round(dt_pal * 1e6, 1),
+            "gathered_topk_interpret_us": round(dt_gtk * 1e6, 1),
+            "gathered_topk_ref_us": round(dt_gtk_ref * 1e6, 1)}
+
+    # each section is isolated: one failing experiment records an error and
+    # the rest still produce their metrics (and the history line)
+    for name, fn in (("exp1_rrann", sec_exp1), ("wavefront", sec_wavefront),
+                     ("planner", sec_planner), ("streaming", sec_streaming),
+                     ("kernel", sec_kernel)):
+        _section(report, name, fn)
 
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
@@ -237,5 +274,6 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
     if history_path:
         record = append_history(report, history_path)
         print(f"appended {history_path}: {json.dumps(record, sort_keys=True)}")
-    print(json.dumps(report["planner"], indent=2))
+    if "planner" in report:
+        print(json.dumps(report["planner"], indent=2))
     return report

@@ -25,11 +25,11 @@ from .intervals import (LEFT_OVERLAP, QUERY_CONTAINED, RIGHT_OVERLAP,
 from .predicates import (Predicate, LeftOverlap, RightOverlap, QueryContained,
                          QueryContaining, Contains, ContainedBy, Overlaps,
                          Before, After, as_predicate, as_mask)
-from .api import (IndexSpec, QueryHit, RouteReport, SearchRequest,
-                  SearchResult, SegmentReport, ShardReport)
+from .api import (IndexSpec, QueryHit, Rejected, RouteReport, SearchRequest,
+                  SearchResult, SegmentReport, Served, ShardReport)
 from .mstg import MSTGIndex, FrozenVariant, build_variant
-from .search import (mstg_graph_search, mstg_graph_search_chunked,
-                     merge_topk)
+from .search import (WavefrontStream, mstg_graph_search,
+                     mstg_graph_search_chunked, merge_topk)
 from .flat import flat_search
 from .engine import EngineConfig, QueryEngine
 
@@ -40,11 +40,12 @@ __all__ = [
     "After", "as_predicate", "as_mask",
     # typed request/result surface
     "SearchRequest", "SearchResult", "QueryHit", "RouteReport",
-    "SegmentReport", "ShardReport", "IndexSpec",
+    "SegmentReport", "ShardReport", "IndexSpec", "Rejected", "Served",
     # index + engines
     "MSTGIndex", "QueryEngine", "EngineConfig", "FrozenVariant",
     "build_variant", "AttributeDomain", "mstg_graph_search",
-    "mstg_graph_search_chunked", "merge_topk", "flat_search",
+    "mstg_graph_search_chunked", "WavefrontStream", "merge_topk",
+    "flat_search",
     # planner internals
     "SearchTask", "PlanSlot", "plan_searches", "plan_batch_ranked",
     "eval_predicate", "mask_name", "parse_mask", "SelectivityIndex",

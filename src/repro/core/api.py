@@ -41,6 +41,52 @@ class QueryHit(NamedTuple):
         return int((self.ids >= 0).sum())
 
 
+@dataclasses.dataclass(frozen=True)
+class Rejected:
+    """A typed shed outcome: the serving layer declined an operation instead
+    of raising (admission control is flow control, not an error).
+
+    reason : why the op was shed — ``"queue_full"`` (bounded admission queue
+             at capacity), ``"deadline_expired"`` (the request's
+             ``deadline_ms`` passed before dispatch), ``"shutdown"`` (the
+             server is draining), or ``"not_mutable"`` (a mutation submitted
+             against a frozen index).
+    op     : operation kind (``"query"`` | ``"upsert"`` | ``"delete"``).
+    queue_depth : admission-queue depth observed at the shed decision.
+    """
+
+    reason: str
+    op: str = "query"
+    queue_depth: int = 0
+
+    def __bool__(self) -> bool:          # `if outcome:` reads as "served?"
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class Served:
+    """A completed serving outcome: the answer plus its latency breakdown.
+
+    hit       : the :class:`QueryHit` (None for completed mutations).
+    queue_ms  : submission -> dispatch wait (admission-queue time).
+    e2e_ms    : submission -> completion, end to end.
+    degraded  : sharded execution lost one or more shards for this answer
+                (see :attr:`SearchResult.degraded`).
+    deadline_missed : the request carried a ``deadline_ms`` and completed
+                past it (served anyway — the scheduler only *sheds* requests
+                whose deadline expires before dispatch).
+    """
+
+    hit: Optional[QueryHit]
+    queue_ms: float = 0.0
+    e2e_ms: float = 0.0
+    degraded: bool = False
+    deadline_missed: bool = False
+
+    def __bool__(self) -> bool:
+        return True
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class SearchRequest:
     """A filtered top-k batch: vectors + query ranges + a predicate.
@@ -58,6 +104,14 @@ class SearchRequest:
     ``chunk=0`` pins the single-``lax.while_loop`` driver (``fanout=1,
     chunk=0`` reproduces the seed's one-expansion single-loop behavior bit
     for bit).
+
+    ``deadline_ms`` and ``priority`` are serving-level SLO metadata: the
+    engine itself never reads them (an expired request still executes if
+    handed to :meth:`repro.core.QueryEngine.execute` directly), but the
+    async serving scheduler (:mod:`repro.serving.scheduler`) uses them for
+    earliest-deadline-first micro-batch ordering and shed-on-overload
+    decisions. ``deadline_ms`` is relative to submission; ``priority``
+    breaks ties (higher first).
     """
 
     vectors: np.ndarray
@@ -69,6 +123,8 @@ class SearchRequest:
     max_steps: Optional[int] = None
     fanout: Optional[int] = None
     chunk: Optional[int] = None
+    deadline_ms: Optional[float] = None
+    priority: int = 0
 
     def __post_init__(self):
         vecs = np.ascontiguousarray(self.vectors, dtype=np.float32)
@@ -95,6 +151,8 @@ class SearchRequest:
         if self.chunk is not None and self.chunk < 0:
             raise ValueError("chunk must be >= 1, 0 (pin the single-loop "
                              "driver), or None (engine decides)")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError("deadline_ms must be > 0 (or None: no deadline)")
         object.__setattr__(self, "vectors", vecs)
         object.__setattr__(self, "ranges", rng)
         object.__setattr__(self, "predicate", as_predicate(self.predicate))

@@ -457,6 +457,315 @@ def mstg_graph_search_chunked(arrays: dict, queries, version, key_lo, key_hi,
     return out_ids, out_d, stats
 
 
+# ---- continuous-batching stream (slot refill between chunks) ---------------
+
+def _tree_concat_rows(a, b):
+    """Concatenate two state pytrees along the row axis; scalar leaves (the
+    step counter) keep ``a``'s value — the counter only bounds chunk length,
+    never a row's trajectory."""
+    return jax.tree_util.tree_map(
+        lambda x, y: x if x.ndim == 0 else jnp.concatenate([x, y], axis=0),
+        a, b)
+
+
+@jax.jit
+def _refill_rows(old, new, idx):
+    """Admit a newcomer block into a live batch: concat along rows, then
+    gather ``idx`` — fused in ONE compiled computation. Eager per-leaf
+    concatenates would each compile per (live, newcomer) shape pair, and
+    those pairs depend on arrival timing, so a serving process would keep
+    hitting fresh compiles mid-flight; fused, the retrace space is the
+    power-of-two (old bucket, new block, out bucket) triples."""
+    cat = _tree_concat_rows(old, new)
+    return jax.tree_util.tree_map(
+        lambda a: a if a.ndim == 0 else a[idx], cat)
+
+
+class WavefrontStream:
+    """Continuous-batching wavefront driver over one MSTG variant.
+
+    The chunked driver (:func:`mstg_graph_search_chunked`) compacts converged
+    rows *out* of the active batch; this driver additionally admits **newly
+    arrived** queries *into* the freed slots between chunks — true continuous
+    batching: the device batch stays near-full while individual queries enter
+    and leave mid-flight.
+
+    Correctness contract: per-row trajectories are independent (the step body
+    is the identity for converged rows, and init/distance/merge are all
+    row-local), so every query's ``(ids, dists)`` is **bit-identical** to
+    running it alone through :func:`mstg_graph_search` /
+    :func:`mstg_graph_search_chunked` with the same ``ef`` / ``fanout`` /
+    ``packed`` / ``use_kernel`` / ``max_steps`` — regardless of which other
+    queries shared its batch or when it was admitted (property-tested in
+    ``tests/test_serving_async.py``).
+
+    Usage::
+
+        stream = WavefrontStream(dv.tree(), ef=64, Kpad=dv.meta.Kpad)
+        stream.admit(tags, queries, version, key_lo, key_hi, max_steps=320)
+        while not stream.idle:
+            for tag, ids, dists, steps in stream.step():
+                ...   # one converged (or budget-truncated) query
+
+    ``tags`` are opaque non-negative ints the caller uses to route results;
+    harvested rows return the full ``ef``-wide beam (slice ``[:k]`` for a
+    request's k — a prefix slice, so per-request k costs nothing).
+
+    Batch mechanics: rows live in power-of-two buckets (jit-cache reuse,
+    same policy as the engine); ``max_bucket`` caps rows in flight and must
+    be a power of two. Padding rows are empty-task or duplicated rows with
+    ``tag -1`` — never harvested. The per-chunk step budget is
+    ``min(chunk, min remaining budget over live rows)`` so a truncated query
+    stops at *exactly* its ``max_steps``, matching solo execution bit for
+    bit.
+
+    Occupancy / refill accounting for the serving metrics layer:
+    ``executed_row_steps`` (slots x steps paid), ``useful_row_steps``
+    (per-row convergence steps actually needed), ``refills`` /
+    ``refilled_rows`` (admissions into an already-running batch),
+    ``occupancy_rows`` / ``occupancy_capacity`` (live rows vs bucket width
+    summed per chunk).
+    """
+
+    def __init__(self, arrays: dict, *, ef: int, Kpad: int,
+                 use_kernel: bool = False, fanout: int = 1, chunk: int = 16,
+                 min_bucket: int = 8, max_bucket: int = 256,
+                 packed: bool = True):
+        if max_bucket < 1 or (max_bucket & (max_bucket - 1)):
+            raise ValueError(f"max_bucket must be a power of two, got "
+                             f"{max_bucket}")
+        self.arrays = arrays
+        self.ef = int(ef)
+        self.fanout = max(1, int(fanout))
+        self.chunk = max(1, int(chunk))
+        self.min_bucket = min(int(min_bucket), max_bucket)
+        self.max_bucket = int(max_bucket)
+        self._kw = dict(ef=self.ef, Kpad=int(Kpad),
+                        use_kernel=bool(use_kernel), packed=bool(packed))
+        # pending admissions (host-side, FIFO)
+        self._pending: list = []
+        # in-flight device state; perm -1 marks pad/dead rows
+        self._qs = self._ver = self._nodes = self._state = None
+        self._perm = np.zeros(0, np.int64)
+        self._steps_run = np.zeros(0, np.int64)
+        self._budget = np.zeros(0, np.int64)
+        self._active = np.zeros(0, bool)
+        # cumulative counters (serving metrics)
+        self.admitted = 0
+        self.completed = 0
+        self.refills = 0
+        self.refilled_rows = 0
+        self.chunks = 0
+        self.executed_row_steps = 0
+        self.useful_row_steps = 0
+        self.occupancy_rows = 0
+        self.occupancy_capacity = 0
+
+    # ---- introspection ----
+    @property
+    def inflight(self) -> int:
+        """Real (tagged) rows currently in the device batch."""
+        return int((self._perm >= 0).sum())
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    @property
+    def idle(self) -> bool:
+        return not self._pending and self.inflight == 0
+
+    @property
+    def refill_efficiency(self) -> float:
+        """useful / executed row-steps (1.0 = every paid slot-step advanced
+        an unconverged query)."""
+        if not self.executed_row_steps:
+            return 1.0
+        return self.useful_row_steps / self.executed_row_steps
+
+    # ---- admission ----
+    def admit(self, tags, queries, version, key_lo, key_hi,
+              max_steps) -> None:
+        """Queue rows for admission at the next :meth:`step`. One entry per
+        row; ``max_steps`` is scalar or per-row."""
+        queries = np.ascontiguousarray(queries, np.float32)
+        tags = np.asarray(tags, np.int64).ravel()
+        version = np.asarray(version, np.int64).ravel()
+        key_lo = np.asarray(key_lo, np.int64).ravel()
+        key_hi = np.asarray(key_hi, np.int64).ravel()
+        budget = np.broadcast_to(np.asarray(max_steps, np.int64),
+                                 tags.shape).copy()
+        if np.any(tags < 0):
+            raise ValueError("tags must be >= 0 (-1 is the pad sentinel)")
+        if np.any(budget < 1):
+            raise ValueError("max_steps must be >= 1")
+        for i in range(tags.shape[0]):
+            self._pending.append((int(tags[i]), queries[i], int(version[i]),
+                                  int(key_lo[i]), int(key_hi[i]),
+                                  int(budget[i])))
+        self.admitted += int(tags.shape[0])
+
+    # ---- internals ----
+    def _init_new(self, count: int):
+        """Pop ``count`` pending rows, init their state padded to a
+        power-of-two block (pad rows carry empty tasks: version -1,
+        key_lo > key_hi — converged before their first step)."""
+        rows = self._pending[:count]
+        del self._pending[:count]
+        Nb = max(self.min_bucket, _next_pow2(count))
+        pad = Nb - count
+        d = rows[0][1].shape[0]
+        q = np.zeros((Nb, d), np.float32)
+        ver = np.full(Nb, -1, np.int64)
+        klo = np.ones(Nb, np.int64)
+        khi = np.zeros(Nb, np.int64)
+        perm = np.full(Nb, -1, np.int64)
+        budget = np.zeros(Nb, np.int64)
+        for i, (tag, qv, v, lo, hi, b) in enumerate(rows):
+            q[i], ver[i], klo[i], khi[i] = qv, v, lo, hi
+            perm[i], budget[i] = tag, b
+        qs = jnp.asarray(q)
+        vj = jnp.asarray(ver, jnp.int32)
+        nodes, state, active = _graph_init(
+            self.arrays, qs, vj, jnp.asarray(klo, jnp.int32),
+            jnp.asarray(khi, jnp.int32), **self._kw)
+        return (qs, vj, nodes, state, np.asarray(active), perm, budget,
+                np.zeros(Nb, np.int64), pad)
+
+    def _compose(self) -> bool:
+        """Drop dead rows, admit pending ones into the freed slots, and
+        repack to a power-of-two bucket. Returns True when a runnable batch
+        exists."""
+        keep_mask = ((self._perm >= 0) & self._active
+                     & (self._steps_run < self._budget))
+        keep = np.flatnonzero(keep_mask)
+        n_live = keep.size
+        n_new = min(len(self._pending), max(0, self.max_bucket - n_live))
+        if n_live == 0 and n_new == 0:
+            self._qs = self._ver = self._nodes = self._state = None
+            self._perm = np.zeros(0, np.int64)
+            self._active = np.zeros(0, bool)
+            return False
+        if n_new == 0:
+            # no admissions: rebucket only when shrinking pays or a live-but-
+            # finished (budget-exhausted) row must be evicted; dead inactive
+            # rows ride along as identity steps, exactly like the chunked
+            # driver's compaction policy
+            cur = self._perm.shape[0]
+            bucket = min(max(self.min_bucket, _next_pow2(n_live)), cur)
+            zombies = bool(np.any(self._active & ~keep_mask))
+            if bucket == cur and not zombies:
+                return True
+            idx, n_pad = self._pad_idx(keep, bucket,
+                                       np.flatnonzero(~self._active))
+            self._gather(idx, n_pad)
+            return True
+        if n_live:
+            self.refills += 1
+            self.refilled_rows += n_new
+        (nqs, nver, nnodes, nstate, nactive, nperm, nbudget, nsteps,
+         n_pad) = self._init_new(n_new)
+        if n_live == 0:
+            # nothing in flight survives: adopt the newcomer block as-is
+            self._qs, self._ver = nqs, nver
+            self._nodes, self._state = nnodes, nstate
+            self._active, self._perm = nactive, nperm
+            self._budget, self._steps_run = nbudget, nsteps
+            return True
+        # gather (kept live rows | newcomer rows | pads) from the virtual
+        # concat [old; newcomer block] in one fused device call
+        old_rows = self._perm.shape[0]
+        active = np.concatenate([self._active, nactive])
+        perm = np.concatenate([self._perm, nperm])
+        budget = np.concatenate([self._budget, nbudget])
+        steps = np.concatenate([self._steps_run, nsteps])
+        bucket = max(self.min_bucket, _next_pow2(n_live + n_new))
+        take = np.concatenate([keep, old_rows + np.arange(n_new)])
+        idx, n_pad = self._pad_idx(take, bucket, np.flatnonzero(~active))
+        self._qs, self._ver, self._nodes, self._state = _refill_rows(
+            (self._qs, self._ver, self._nodes, self._state),
+            (nqs, nver, nnodes, nstate), jnp.asarray(idx))
+        self._active = active[idx]
+        perm = perm[idx]
+        if n_pad:
+            perm[idx.size - n_pad:] = -1
+        self._perm = perm
+        self._budget = budget[idx]
+        self._steps_run = steps[idx]
+        return True
+
+    @staticmethod
+    def _pad_idx(take: np.ndarray, bucket: int, inactive: np.ndarray):
+        """Row-index vector of length ``bucket``: the kept rows plus pad
+        slots. Pads point at an inactive source row when one exists (zero
+        marginal work: converged rows run the identity), else duplicate the
+        first kept row. Returns ``(idx, n_pad)``."""
+        pad = bucket - take.size
+        if pad <= 0:
+            return take, 0
+        src = inactive[0] if inactive.size else take[0]
+        return np.concatenate([take, np.full(pad, src, np.int64)]), pad
+
+    def _gather(self, idx: np.ndarray, n_pad: int) -> None:
+        idx_dev = jnp.asarray(idx)
+        self._qs, self._ver, self._nodes, self._state = _gather_rows(
+            (self._qs, self._ver, self._nodes, self._state), idx_dev)
+        self._active = self._active[idx]
+        perm = self._perm[idx]
+        if n_pad:
+            perm[idx.size - n_pad:] = -1
+        self._perm = perm
+        self._budget = self._budget[idx]
+        self._steps_run = self._steps_run[idx]
+
+    # ---- the serving loop entry point ----
+    def step(self):
+        """Compose (drop converged + refill from pending), run one chunk,
+        and harvest rows that converged or exhausted their budget.
+
+        Returns a list of ``(tag, ids, dists, steps)`` — ids/dists are the
+        full ``ef``-wide beam (NO_EDGE / +inf padded), steps the row's
+        convergence (or truncation) step count.
+        """
+        if not self._compose():
+            return []
+        real = self._perm >= 0
+        live = real & self._active & (self._steps_run < self._budget)
+        remaining = self._budget[live] - self._steps_run[live]
+        limit = min(self.chunk, int(remaining.min())) if remaining.size \
+            else self.chunk
+        bucket = self._perm.shape[0]
+        self.occupancy_rows += int(live.sum())
+        self.occupancy_capacity += bucket
+        self._state, active, ran = _graph_chunk(
+            self.arrays, self._qs, self._ver, self._nodes, self._state,
+            jnp.asarray(limit, jnp.int32), fanout=self.fanout, **self._kw)
+        ran = int(ran)
+        self._active = np.asarray(active)
+        self._steps_run = self._steps_run + ran
+        self.chunks += 1
+        self.executed_row_steps += bucket * ran
+        # harvest: converged, or truncated at exactly their step budget
+        done = np.flatnonzero(real & (~self._active
+                                      | (self._steps_run >= self._budget)))
+        if done.size == 0:
+            return []
+        ids_h, d_h, steps_h = _harvest(self._state, done, self.ef)
+        out = [(int(self._perm[r]), ids_h[j], d_h[j], int(steps_h[j]))
+               for j, r in enumerate(done)]
+        self._perm[done] = -1
+        self.completed += done.size
+        self.useful_row_steps += int(steps_h.sum())
+        return out
+
+    def drain(self):
+        """Run :meth:`step` until idle; returns every harvested row."""
+        out = []
+        while not self.idle:
+            out.extend(self.step())
+        return out
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def merge_topk(ids_a, d_a, ids_b, d_b, k: int):
     """Merge two (Q, k) result sets, dropping duplicate ids (Theorem 4.1 plans

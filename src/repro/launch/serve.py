@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --requests 24
   PYTHONPATH=src python -m repro.launch.serve --streaming   # live corpus
+  PYTHONPATH=src python -m repro.launch.serve --async       # SLO front end
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --shards 8  # sharded corpus
 
@@ -12,7 +13,10 @@ backs the server with a :class:`repro.streaming.SegmentedIndex` instead and
 interleaves upserts/deletes with the query traffic. ``--shards N`` serves
 from a :class:`repro.distributed.ShardedDeployment` — per-shard MSTG
 engines merged through the device collectives when a mesh covers N, else
-the host merge."""
+the host merge. ``--async`` routes the same traffic through the
+continuous-batching :class:`repro.serving.AsyncRetrievalServer` (bounded
+admission, EDF deadlines, typed shedding) and prints its metrics
+snapshot."""
 from __future__ import annotations
 
 import argparse
@@ -44,6 +48,13 @@ def main():
     ap.add_argument("--shards", type=int, default=0, metavar="N",
                     help="serve from an N-shard ShardedDeployment (device "
                          "merge when the mesh covers N, else host merge)")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve through the continuous-batching async front "
+                         "end (SLO admission + wavefront slot refill) and "
+                         "print its metrics snapshot")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for --async traffic (late "
+                         "queued requests are shed as Rejected)")
     args = ap.parse_args()
     if args.shards and args.streaming:
         ap.error("--shards and --streaming are mutually exclusive (shard a "
@@ -97,9 +108,51 @@ def main():
 
     # 3) batched retrieval serving: Predicate submits, one embed call per tick
     embed_fn = lambda items: ds.queries[np.asarray(items)]  # stub embedding
-    server = RetrievalServer(qengine, embed_fn, k=args.k, ef=64)
     qlo, qhi = make_queries(ds, Overlaps().mask, 0.15, seed=2)
     rng = np.random.default_rng(7)
+
+    if args.use_async:
+        from repro.serving import AsyncRetrievalServer, SLOPolicy
+        server = AsyncRetrievalServer(
+            qengine, embed_fn, k=args.k, ef=64,
+            policy=SLOPolicy(max_wait_ms=1.0, max_batch=32))
+        n_mut = 0
+        t0 = time.time()
+        for i in range(args.requests):
+            if args.streaming and i % 4 == 1:
+                j = i % args.n
+                server.submit_upsert(args.n + i, i, ds.lo[j], ds.hi[j])
+                server.submit_delete(int(rng.integers(0, args.n)))
+                n_mut += 2
+            pred = Overlaps() if i % 2 == 0 else QueryContained()
+            server.submit(i, qlo[i], qhi[i], pred,
+                          deadline_ms=args.deadline_ms)
+        results = server.run_until_idle()
+        dt = time.time() - t0
+        served = {t: r for t, r in results.items() if r and r.hit is not None}
+        ok = sum(1 for r in served.values() if r.hit.valid.any())
+        print(f"async served {len(served)} requests (+{n_mut} mutations) in "
+              f"{dt*1e3:.1f} ms ({len(served)/dt:.1f} qps); {ok} non-empty")
+        snap = server.snapshot()
+        print(f"  metrics: served={snap['served']} shed={snap['shed']} "
+              f"deadline_missed={snap['deadline_missed']} "
+              f"degraded={snap['degraded']}")
+        print(f"  queue-wait ms p50/p95/p99: "
+              f"{snap['queue_wait_ms']['p50']:.2f}/"
+              f"{snap['queue_wait_ms']['p95']:.2f}/"
+              f"{snap['queue_wait_ms']['p99']:.2f}")
+        print(f"  e2e ms p50/p95/p99: {snap['e2e_ms']['p50']:.2f}/"
+              f"{snap['e2e_ms']['p95']:.2f}/{snap['e2e_ms']['p99']:.2f}")
+        if "batch_occupancy" in snap:
+            print(f"  occupancy={snap['batch_occupancy']:.2f} "
+                  f"refill_eff={snap['refill_efficiency']:.2f} "
+                  f"refills={snap['refills']}")
+        for t in list(served)[:3]:
+            print(f"  ticket {t}: top ids "
+                  f"{served[t].hit.ids[:5].tolist()}")
+        return
+
+    server = RetrievalServer(qengine, embed_fn, k=args.k, ef=64)
     n_mut = 0
     for i in range(args.requests):
         if args.streaming and i % 4 == 1:  # live traffic: mutate mid-stream
@@ -114,7 +167,11 @@ def main():
     dt = time.time() - t0
     ok = sum(1 for hit in results.values() if hit.valid.any())
     print(f"served {len(results)} requests (+{n_mut} mutations) in "
-          f"{dt*1e3:.1f} ms ({len(results)/dt:.1f} qps); {ok} non-empty")
+          f"{dt*1e3:.1f} ms ({len(results)/dt:.1f} qps); "
+          f"embed/mutate/search s="
+          f"{server.tick_stats['embed_s']:.3f}/"
+          f"{server.tick_stats['mutate_s']:.3f}/"
+          f"{server.tick_stats['search_s']:.3f}; {ok} non-empty")
     if args.streaming:
         print(f"  streaming stats: {qengine.stats()}")
         rep = qengine.compact(full=True)

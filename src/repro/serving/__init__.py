@@ -1,1 +1,11 @@
 from .engine import ServeEngine, RetrievalServer, seed_caches
+from .ops import QueryOp, UpsertOp, DeleteOp
+from .scheduler import SLOPolicy, Scheduler, ServerMetrics, StreamingHistogram
+from .async_engine import AsyncRetrievalServer
+
+__all__ = [
+    "ServeEngine", "RetrievalServer", "seed_caches",
+    "QueryOp", "UpsertOp", "DeleteOp",
+    "SLOPolicy", "Scheduler", "ServerMetrics", "StreamingHistogram",
+    "AsyncRetrievalServer",
+]

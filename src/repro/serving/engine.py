@@ -4,6 +4,7 @@ paper's deployment: RR-filtered vector search behind a model endpoint)."""
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -12,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.transformer import LM, Segment
+from repro.serving.ops import DeleteOp, QueryOp, UpsertOp
 
 
 def _seed_leaf(prefill_leaf, target_sds, prompt_len: int):
@@ -128,17 +130,21 @@ class RetrievalServer:
         self.k = k
         self.ef = ef
         self.auto_compact = auto_compact
-        # op-tagged queue: ("query", item, qlo, qhi, mask) |
-        # ("upsert", ext_id, item, lo, hi) | ("delete", ext_id)
-        self.queue: List[Tuple] = []
+        # typed op queue (repro.serving.ops) in submit order
+        self.queue: List[Any] = []
         self._embed_batched: Optional[bool] = None  # decided on first tick
-        self.tick_stats: Dict[str, int] = self._zero_stats()  # last tick
-        self.stats: Dict[str, int] = self._zero_stats()       # cumulative
+        self.tick_stats: Dict[str, Any] = self._zero_stats()  # last tick
+        self.stats: Dict[str, Any] = self._zero_stats()       # cumulative
 
     @staticmethod
-    def _zero_stats() -> Dict[str, int]:
+    def _zero_stats() -> Dict[str, Any]:
+        # counts are ints; *_s entries are wall-clock seconds for the tick's
+        # phases (embed / mutations+compaction / search / whole tick), so the
+        # sync server reports numbers comparable to the async ServerMetrics
         return {"ticks": 0, "queries": 0, "upserts": 0, "deletes": 0,
-                "compactions": 0, "compacted_rows": 0, "degraded_queries": 0}
+                "compactions": 0, "compacted_rows": 0, "degraded_queries": 0,
+                "embed_s": 0.0, "mutate_s": 0.0, "search_s": 0.0,
+                "tick_s": 0.0}
 
     @classmethod
     def from_index(cls, index, embed_fn, k: int = 10, ef: int = 64,
@@ -156,8 +162,8 @@ class RetrievalServer:
         """Queue one request; ``predicate`` is a repro.core Predicate, a raw
         int mask, or a parseable string like ``"any_overlap"``."""
         from repro.core import as_mask
-        self.queue.append(("query", item, float(qlo), float(qhi),
-                           as_mask(predicate)))
+        self.queue.append(QueryOp(item, float(qlo), float(qhi),
+                                  as_mask(predicate)))
 
     def submit_upsert(self, ext_id: int, item, lo: float, hi: float):
         """Queue a corpus upsert: ``item`` is embedded on the next tick (in
@@ -166,14 +172,14 @@ class RetrievalServer:
         if not self.mutable:
             raise TypeError("engine is a frozen index; upserts need a "
                             "repro.streaming.SegmentedIndex")
-        self.queue.append(("upsert", int(ext_id), item, float(lo), float(hi)))
+        self.queue.append(UpsertOp(int(ext_id), item, float(lo), float(hi)))
 
     def submit_delete(self, ext_id: int):
         """Queue a corpus delete (tombstone) of ``ext_id``."""
         if not self.mutable:
             raise TypeError("engine is a frozen index; deletes need a "
                             "repro.streaming.SegmentedIndex")
-        self.queue.append(("delete", int(ext_id)))
+        self.queue.append(DeleteOp(int(ext_id)))
 
     def _embed(self, items: List[Any]) -> np.ndarray:
         """One stacked embedding call for the whole tick (per-item fallback).
@@ -213,25 +219,28 @@ class RetrievalServer:
             return {}
         tick_stats = self._zero_stats()
         tick_stats["ticks"] = 1
+        t_tick = time.perf_counter()
         # one batched embed call for the whole tick: queries AND upsert items
         embed_slots = [i for i, op in enumerate(self.queue)
-                       if op[0] in ("query", "upsert")]
-        items = [self.queue[i][1] if self.queue[i][0] == "query"
-                 else self.queue[i][2] for i in embed_slots]
+                       if isinstance(op, (QueryOp, UpsertOp))]
+        items = [self.queue[i].item for i in embed_slots]
         vec_of = {}
         if items:
+            t0 = time.perf_counter()
             vecs = self._embed(items)
+            tick_stats["embed_s"] = time.perf_counter() - t0
             vec_of = {i: vecs[j] for j, i in enumerate(embed_slots)}
         # 1) mutations, strictly in submit order
+        t0 = time.perf_counter()
         for i, op in enumerate(self.queue):
-            if op[0] == "upsert":
-                _, ext_id, _, lo, hi = op
-                self.engine.add(np.array([ext_id], np.int64),
-                                vec_of[i][None, :], np.array([lo]),
-                                np.array([hi]))
+            if isinstance(op, UpsertOp):
+                self.engine.add(np.array([op.ext_id], np.int64),
+                                vec_of[i][None, :], np.array([op.lo]),
+                                np.array([op.hi]))
                 tick_stats["upserts"] += 1
-            elif op[0] == "delete":
-                self.engine.delete(np.array([op[1]], np.int64), strict=False)
+            elif isinstance(op, DeleteOp):
+                self.engine.delete(np.array([op.ext_id], np.int64),
+                                   strict=False)
                 tick_stats["deletes"] += 1
         # 1b) background compaction: after a mutating tick, let the engine's
         # CompactionPolicy decide whether a segment tier is worth merging
@@ -243,15 +252,17 @@ class RetrievalServer:
             if rep.get("merged"):
                 tick_stats["compactions"] += 1
                 tick_stats["compacted_rows"] += rep.get("rows", 0)
+        tick_stats["mutate_s"] = time.perf_counter() - t0
         # 2) queries, grouped by predicate mask
+        t0 = time.perf_counter()
         results = {}
         by_mask: Dict[int, List[int]] = {}
         for i, op in enumerate(self.queue):
-            if op[0] == "query":
-                by_mask.setdefault(op[4], []).append(i)
+            if isinstance(op, QueryOp):
+                by_mask.setdefault(op.mask, []).append(i)
         for mask, idxs in by_mask.items():
-            qlo = np.array([self.queue[i][2] for i in idxs])
-            qhi = np.array([self.queue[i][3] for i in idxs])
+            qlo = np.array([self.queue[i].qlo for i in idxs])
+            qhi = np.array([self.queue[i].qhi for i in idxs])
             qvecs = np.stack([vec_of[i] for i in idxs])
             res = self.engine.execute(SearchRequest(
                 qvecs, (qlo, qhi), mask, k=self.k, ef=self.ef))
@@ -262,7 +273,9 @@ class RetrievalServer:
                 tick_stats["degraded_queries"] += len(idxs)
             for j, i in enumerate(idxs):
                 results[i] = QueryHit(ids[j], d[j])
+        tick_stats["search_s"] = time.perf_counter() - t0
         tick_stats["queries"] = len(results)
+        tick_stats["tick_s"] = time.perf_counter() - t_tick
         self.tick_stats = tick_stats
         for k_, v in tick_stats.items():
             self.stats[k_] += v

@@ -72,6 +72,29 @@ def test_retrieval_server_batches_by_mask(small_ds, built_index):
     assert server.tick() == {}  # empty tick is a no-op
 
 
+def test_tick_stats_report_wall_clock_phase_timings(small_ds, built_index):
+    """tick() must account its wall-clock time per phase: embed / mutate /
+    search durations land in tick_stats and accumulate into stats."""
+    ds = small_ds
+    server = RetrievalServer(QueryEngine(built_index),
+                             embed_fn=lambda items: ds.queries[
+                                 np.asarray(items)], k=5)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=4)
+    for i in range(4):
+        server.submit(i, qlo[i], qhi[i], ANY_OVERLAP)
+    server.tick()
+    st = server.tick_stats
+    for key in ("embed_s", "mutate_s", "search_s", "tick_s"):
+        assert key in st and st[key] >= 0.0
+    assert st["embed_s"] > 0.0 and st["search_s"] > 0.0
+    assert st["mutate_s"] < 0.05               # no mutations: scan-only phase
+    assert st["tick_s"] >= st["embed_s"] + st["mutate_s"] + st["search_s"]
+    assert server.stats["tick_s"] == st["tick_s"]  # cumulative mirrors
+    # an empty tick is a no-op and must not clobber the recorded timings
+    assert server.tick() == {}
+    assert server.stats["search_s"] == st["search_s"]
+
+
 def test_retrieval_server_per_item_embed_fallback(small_ds, built_index):
     """Per-item embed_fn (scalar item -> (d,)) still works: the server probes
     once, then falls back to mapping items through the embedder."""

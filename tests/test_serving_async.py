@@ -1,0 +1,421 @@
+"""Async serving front end: SLO scheduler semantics, slot-refill
+bit-identity, mutation interleave, and fault degradation under load.
+
+The headline contract: every hit served by the continuous-batching
+:class:`AsyncRetrievalServer` is **bit-identical** (ids AND distances) to
+running that query alone through ``engine.execute`` at the same
+(k, ef, route, fanout) — admission order, micro-batch grouping, and
+mid-flight slot refill must be invisible in the results.
+"""
+import functools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, QUERY_CONTAINING,
+                        LEFT_OVERLAP, RIGHT_OVERLAP, EngineConfig, Overlaps,
+                        QueryEngine, Rejected, SearchRequest, Served,
+                        intervals as iv)
+from repro.data import make_queries, make_range_dataset
+from repro.serving import (AsyncRetrievalServer, DeleteOp, QueryOp, Scheduler,
+                           SLOPolicy, StreamingHistogram, UpsertOp)
+
+MASKS = [
+    ANY_OVERLAP,
+    QUERY_CONTAINED,
+    QUERY_CONTAINING,
+    LEFT_OVERLAP,
+    RIGHT_OVERLAP,
+    LEFT_OVERLAP | RIGHT_OVERLAP,
+    QUERY_CONTAINED | QUERY_CONTAINING,
+    LEFT_OVERLAP | QUERY_CONTAINED | RIGHT_OVERLAP,
+]
+ROUTES = ("graph", "pruned", "flat")
+
+
+class FakeClock:
+    """Deterministic injectable clock (seconds)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, s: float) -> None:
+        self.t += s
+
+
+def _q(i=0, deadline_ms=None, priority=0):
+    return QueryOp(i, 0.0, 1.0, ANY_OVERLAP, deadline_ms=deadline_ms,
+                   priority=priority)
+
+
+# ---- scheduler: bounded admission, dispatch triggers, EDF, shedding ----
+
+def test_bounded_queue_sheds_typed_rejection():
+    sch = Scheduler(SLOPolicy(max_queue=2, max_wait_ms=0.0))
+    assert isinstance(sch.offer(_q(0)), int)
+    assert isinstance(sch.offer(_q(1)), int)
+    rej = sch.offer(_q(2))
+    assert isinstance(rej, Rejected) and rej.reason == "queue_full"
+    assert not rej and rej.queue_depth == 2  # falsy outcome, never raises
+
+
+def test_due_triggers_max_wait_max_batch_and_mutations():
+    clk = FakeClock()
+    sch = Scheduler(SLOPolicy(max_wait_ms=5.0, max_batch=3), clock=clk)
+    assert not sch.due()                      # empty queue: nothing due
+    sch.offer(_q(0))
+    assert not sch.due()                      # young single query waits
+    clk.advance(0.006)
+    assert sch.due()                          # oldest waited past max_wait
+    sch2 = Scheduler(SLOPolicy(max_wait_ms=1e9, max_batch=3), clock=clk)
+    for i in range(3):
+        sch2.offer(_q(i))
+    assert sch2.due()                         # full batch dispatches early
+    sch3 = Scheduler(SLOPolicy(max_wait_ms=1e9), clock=clk)
+    sch3.offer(DeleteOp(7))
+    assert sch3.due()                         # mutations never wait
+
+
+def test_edf_orders_by_deadline_then_priority_then_fifo():
+    clk = FakeClock()
+    sch = Scheduler(SLOPolicy(max_wait_ms=0.0), clock=clk)
+    t_none = sch.offer(_q(0))                     # no deadline -> last
+    t_late = sch.offer(_q(1, deadline_ms=500.0))
+    t_soon = sch.offer(_q(2, deadline_ms=100.0))
+    t_hi = sch.offer(_q(3, priority=5))           # no deadline, high priority
+    rnd = sch.next_round()
+    assert [e.ticket for e in rnd.queries] == [t_soon, t_late, t_hi, t_none]
+    assert not rnd.mutations and not rnd.shed and sch.depth == 0
+
+
+def test_fifo_when_edf_disabled():
+    sch = Scheduler(SLOPolicy(max_wait_ms=0.0, edf=False))
+    tickets = [sch.offer(_q(i, deadline_ms=1e3 - i)) for i in range(4)]
+    assert [e.ticket for e in sch.next_round().queries] == tickets
+
+
+def test_expired_entries_shed_at_dispatch():
+    clk = FakeClock()
+    sch = Scheduler(SLOPolicy(max_wait_ms=0.0), clock=clk)
+    t_dead = sch.offer(_q(0, deadline_ms=10.0))
+    t_live = sch.offer(_q(1, deadline_ms=1e4))
+    clk.advance(0.05)                         # 50ms > 10ms deadline
+    rnd = sch.next_round()
+    assert [e.ticket for e in rnd.queries] == [t_live]
+    (e, rej), = rnd.shed
+    assert e.ticket == t_dead and rej.reason == "deadline_expired"
+    keep = Scheduler(SLOPolicy(max_wait_ms=0.0, shed_expired=False),
+                     clock=clk)
+    keep.offer(_q(0, deadline_ms=10.0))
+    clk.advance(0.05)
+    rnd = keep.next_round()                   # policy off: run it anyway
+    assert len(rnd.queries) == 1 and not rnd.shed
+
+
+def test_mutation_barrier_blocks_query_reordering():
+    """EDF may reorder queries among themselves but never across a mutation:
+    a query submitted after an upsert must not run in the round before it."""
+    sch = Scheduler(SLOPolicy(max_wait_ms=0.0))
+    t_q1 = sch.offer(_q(0))                        # before the barrier
+    sch.offer(UpsertOp(9, 9, 0.0, 1.0))
+    t_urgent = sch.offer(_q(1, deadline_ms=1.0))   # urgent, after barrier
+    r1 = sch.next_round()
+    assert [e.ticket for e in r1.queries] == [t_q1] and not r1.mutations
+    r2 = sch.next_round()
+    assert [type(e.op) for e in r2.mutations] == [UpsertOp]
+    assert [e.ticket for e in r2.queries] == [t_urgent]
+
+
+def test_capacity_caps_round_and_close_sheds_shutdown():
+    sch = Scheduler(SLOPolicy(max_wait_ms=0.0, max_batch=64))
+    for i in range(6):
+        sch.offer(_q(i))
+    rnd = sch.next_round(capacity=2)
+    assert len(rnd.queries) == 2 and sch.depth == 4
+    shed = sch.close()
+    assert len(shed) == 4
+    assert all(r.reason == "shutdown" for _, r in shed)
+    assert sch.offer(_q(99)).reason == "shutdown"  # closed: admission off
+
+
+def test_streaming_histogram_percentiles_bound_samples():
+    h = StreamingHistogram()
+    vals = [0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0]
+    for v in vals:
+        h.record(v)
+    assert h.count == 10 and h.max_ms == 256.0
+    assert abs(h.mean - np.mean(vals)) < 1e-9
+    # conservative: the estimate never under-reports the true percentile,
+    # and log-spaced bins keep it within one bin width (~9%) above it
+    for p in (50, 95, 99):
+        true = float(np.percentile(vals, p, method="inverted_cdf"))
+        assert true <= h.percentile(p) <= true * 1.12
+    assert h.percentile(100) == 256.0
+    assert StreamingHistogram().percentile(99) == 0.0
+
+
+# ---- continuous path: slot refill is invisible in the results ----
+
+@functools.lru_cache(maxsize=1)
+def _grid_ctx():
+    """Shared tiny corpus + engine for the bit-identity grid (module-scope
+    cache; @given-decorated tests cannot take fixtures under the offline
+    hypothesis fallback shim)."""
+    from repro.core import MSTGIndex
+    ds = make_range_dataset(n=240, d=12, n_queries=12, quantize=32, seed=2)
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp", "Tpp"),
+                    m=8, ef_con=32)
+    return ds, QueryEngine(idx)
+
+
+def _solo_reference(eng, ds, mask, route, qlo, qhi, k, ef):
+    """Each query executed alone — the ground truth the server must match."""
+    out = []
+    for i in range(len(qlo)):
+        res = eng.execute(SearchRequest(
+            ds.queries[i:i + 1], (qlo[i:i + 1], qhi[i:i + 1]), mask, k=k,
+            ef=ef, route=route))
+        out.append((np.asarray(res.ids[0]), np.asarray(res.dists[0])))
+    return out
+
+
+def _serve_in_waves(eng, ds, mask, route, qlo, qhi, k, ef, wave_sizes,
+                    steps_between=2):
+    """Submit queries in waves with stream steps in between, so later waves
+    are admitted into slots freed mid-flight (true refill), then drain."""
+    srv = AsyncRetrievalServer(
+        eng, lambda items: ds.queries[np.asarray(items)], k=k, ef=ef,
+        route=route, max_inflight=16, chunk=3,
+        policy=SLOPolicy(max_wait_ms=0.0, max_batch=4))
+    tickets = {}
+    i = 0
+    for w in wave_sizes:
+        for _ in range(w):
+            if i >= len(qlo):
+                break
+            tickets[srv.submit(i, qlo[i], qhi[i], mask)] = i
+            i += 1
+        for _ in range(steps_between):
+            srv.step()
+    while i < len(qlo):
+        tickets[srv.submit(i, qlo[i], qhi[i], mask)] = i
+        i += 1
+    res = srv.run_until_idle()
+    assert set(res) == set(tickets)
+    by_query = {}
+    for t, out in res.items():
+        assert isinstance(out, Served) and out
+        by_query[tickets[t]] = out
+    return srv, by_query
+
+
+@pytest.mark.parametrize("mask", MASKS, ids=iv.mask_name)
+@pytest.mark.parametrize("route", ROUTES)
+def test_async_grid_bit_identical_to_solo(mask, route):
+    """8-mask x 3-route grid: staggered admission + slot refill (graph) /
+    micro-batching (pruned, flat) returns solo-execution results bit for
+    bit."""
+    ds, eng = _grid_ctx()
+    qlo, qhi = make_queries(ds, mask, 0.2, seed=11)
+    k, ef = 8, 24
+    want = _solo_reference(eng, ds, mask, route, qlo, qhi, k, ef)
+    _, got = _serve_in_waves(eng, ds, mask, route, qlo, qhi, k, ef,
+                             wave_sizes=(5, 4, 3))
+    assert set(got) == set(range(len(qlo)))
+    for i, (wi, wd) in enumerate(want):
+        np.testing.assert_array_equal(got[i].hit.ids, wi)
+        np.testing.assert_array_equal(got[i].hit.dists, wd)
+
+
+@settings(max_examples=10, deadline=None)
+@given(hst.integers(0, 2**30), hst.sampled_from([1, 2, 3, 5]),
+       hst.sampled_from([1, 2, 4]))
+def test_async_refill_property_random_waves(seed, wave, steps_between):
+    """Random wave shapes and step interleavings on the wavefront path stay
+    bit-identical to solo execution (the property behind continuous
+    batching: refill changes *when* a row runs, never *what* it computes)."""
+    ds, eng = _grid_ctx()
+    rng = np.random.default_rng(seed)
+    mask = MASKS[int(rng.integers(0, len(MASKS)))]
+    qlo, qhi = make_queries(ds, mask, 0.25, seed=seed % 89)
+    k, ef = 6, 16
+    want = _solo_reference(eng, ds, mask, "graph", qlo, qhi, k, ef)
+    _, got = _serve_in_waves(eng, ds, mask, "graph", qlo, qhi, k, ef,
+                             wave_sizes=[wave] * 6,
+                             steps_between=steps_between)
+    for i, (wi, wd) in enumerate(want):
+        np.testing.assert_array_equal(got[i].hit.ids, wi)
+        np.testing.assert_array_equal(got[i].hit.dists, wd)
+
+
+def test_refill_actually_happens_and_is_observable():
+    """The staggered schedule above must exercise real mid-flight refill —
+    otherwise the grid test proves nothing about it."""
+    ds, eng = _grid_ctx()
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=11)
+    srv, _ = _serve_in_waves(eng, ds, ANY_OVERLAP, "graph", qlo, qhi, 8, 24,
+                             wave_sizes=(4, 4, 4), steps_between=3)
+    snap = srv.snapshot()
+    assert snap["refills"] > 0 and snap["refilled_rows"] > 0
+    assert 0.0 < snap["batch_occupancy"] <= 1.0
+    assert 0.0 < snap["refill_efficiency"] <= 1.0
+    assert snap["served"] == len(qlo) and snap["shed_total"] == 0
+
+
+# ---- server-level SLO behavior ----
+
+def test_async_deadline_shed_and_missed_flag(small_ds, built_index):
+    ds = small_ds
+    clk = FakeClock()
+    eng = QueryEngine(built_index)
+    srv = AsyncRetrievalServer(
+        eng, lambda items: ds.queries[np.asarray(items)], k=5, ef=16,
+        policy=SLOPolicy(max_wait_ms=0.0), clock=clk)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=3)
+    t_dead = srv.submit(0, qlo[0], qhi[0], ANY_OVERLAP, deadline_ms=5.0)
+    t_slow = srv.submit(1, qlo[1], qhi[1], ANY_OVERLAP, deadline_ms=1e7)
+    clk.advance(0.05)  # 50ms: t_dead expired in queue, t_slow still live
+    res = srv.run_until_idle()
+    assert res[t_dead].reason == "deadline_expired"
+    assert isinstance(res[t_slow], Served) and not res[t_slow].deadline_missed
+    # a request that is dispatched in time but *finishes* past its deadline
+    # is served and flagged, never shed: dispatch it (tiny chunk so it stays
+    # in flight), then advance the clock past the deadline before draining
+    slow = AsyncRetrievalServer(
+        eng, lambda items: ds.queries[np.asarray(items)], k=5, ef=16,
+        chunk=1, route="graph",                  # wavefront: stays in flight
+        policy=SLOPolicy(max_wait_ms=0.0), clock=clk)
+    t_late = slow.submit(2, qlo[2], qhi[2], ANY_OVERLAP, deadline_ms=5.0)
+    slow.step()                              # dispatched before expiry
+    clk.advance(1.0)                         # 1s >> the 5ms deadline
+    res = slow.run_until_idle()
+    assert isinstance(res[t_late], Served)
+    assert res[t_late].deadline_missed
+    assert slow.snapshot()["deadline_missed"] == 1
+    snap = srv.snapshot()
+    assert snap["shed"]["deadline_expired"] == 1
+    assert snap["deadline_missed"] == 0 and snap["served"] == 1
+
+
+def test_async_close_sheds_queue_but_drains_inflight(small_ds, built_index):
+    ds = small_ds
+    srv = AsyncRetrievalServer(
+        QueryEngine(built_index), lambda items: ds.queries[np.asarray(items)],
+        k=5, ef=16, policy=SLOPolicy(max_wait_ms=0.0, max_batch=2))
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=3)
+    tickets = [srv.submit(i, qlo[i], qhi[i], ANY_OVERLAP) for i in range(6)]
+    srv.step()                                # dispatches first 2 in-flight
+    res = srv.close()
+    assert sum(1 for r in res.values() if isinstance(r, Rejected)
+               and r.reason == "shutdown") == 4
+    assert isinstance(srv.submit(9, qlo[0], qhi[0], ANY_OVERLAP), Rejected)
+    final = srv.run_until_idle()              # in-flight pair still completes
+    served = [t for t in tickets if isinstance(final.get(t), Served)]
+    assert len(served) == 2
+
+
+def test_async_step_stats_and_metrics_shape(small_ds, built_index):
+    ds = small_ds
+    srv = AsyncRetrievalServer(
+        QueryEngine(built_index), lambda items: ds.queries[np.asarray(items)],
+        k=5, ef=16, policy=SLOPolicy(max_wait_ms=0.0))
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=3)
+    for i in range(4):
+        srv.submit(i, qlo[i], qhi[i], ANY_OVERLAP)
+    srv.run_until_idle()
+    st = srv.step_stats
+    for key in ("dispatched", "served", "shed", "admitted_rows",
+                "harvested_rows", "queue_depth", "inflight", "step_s"):
+        assert key in st
+    snap = srv.snapshot()
+    assert snap["submitted"] == snap["admitted"] == 4
+    assert snap["served"] == 4
+    assert snap["e2e_ms"]["p99"] >= snap["e2e_ms"]["p50"] > 0.0
+    assert snap["queue_wait_ms"]["max"] >= 0.0
+
+
+# ---- composition: mutable + sharded backends through the async path ----
+
+def test_segmented_mutations_interleave_with_queries(small_ds):
+    """SegmentedIndex behind the scheduler: a query submitted after an upsert
+    sees it (barrier), and the upserted vector is retrievable; deletes
+    submitted after a query do not affect it."""
+    from repro.core import IndexSpec
+    from repro.streaming import SegmentedIndex
+
+    ds = small_ds
+    n = 300
+    seg = SegmentedIndex(IndexSpec(variants=("T", "Tp"), m=8, ef_con=40))
+    seg.add(np.arange(n), ds.vectors[:n], ds.lo[:n], ds.hi[:n])
+    seg.flush()
+    probe = ds.vectors[5] + 1e-4 * np.ones_like(ds.vectors[5])
+
+    def embed(items):
+        return np.stack([probe if it == "probe" else ds.queries[it]
+                         for it in items])
+
+    srv = AsyncRetrievalServer(seg, embed, k=5, ef=32,
+                               policy=SLOPolicy(max_wait_ms=0.0))
+    assert srv.mutable
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.3, seed=7)
+    t_before = srv.submit(0, float(ds.lo.min()), float(ds.hi.max()),
+                          ANY_OVERLAP)
+    t_up = srv.submit_upsert(7777, "probe", float(ds.lo.min()),
+                             float(ds.hi.max()))
+    t_after = srv.submit("probe", float(ds.lo.min()), float(ds.hi.max()),
+                         ANY_OVERLAP)
+    t_del = srv.submit_delete(7777)
+    res = srv.run_until_idle()
+    assert all(isinstance(res[t], Served)
+               for t in (t_before, t_up, t_after, t_del))
+    assert res[t_up].hit is None and res[t_del].hit is None
+    assert 7777 not in res[t_before].hit.ids       # barrier: not yet visible
+    assert res[t_after].hit.ids[0] == 7777         # nearest to its own vector
+    assert srv.snapshot()["mutations"] == 2
+
+
+def test_frozen_backend_rejects_mutations_not_mutable(small_ds, built_index):
+    ds = small_ds
+    srv = AsyncRetrievalServer(
+        QueryEngine(built_index), lambda items: ds.queries[np.asarray(items)])
+    rej = srv.submit_upsert(1, 0, 0.0, 1.0)
+    assert isinstance(rej, Rejected) and rej.reason == "not_mutable"
+    assert srv.submit_delete(1).reason == "not_mutable"
+    assert srv.snapshot()["shed"]["not_mutable"] == 2
+
+
+def test_shard_loss_mid_stream_degrades_without_stalling(small_ds):
+    """ShardedDeployment behind the scheduler: kill a shard between waves —
+    later responses flag degraded=True, earlier ones don't, the scheduler
+    keeps serving (no stall, no raise), and restore() heals."""
+    from repro.distributed import DeploymentSpec, ShardedDeployment
+
+    ds = small_ds
+    dep = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                 spec=DeploymentSpec(n_shards=4))
+    srv = AsyncRetrievalServer(
+        dep, lambda items: ds.queries[np.asarray(items)], k=8, ef=32,
+        policy=SLOPolicy(max_wait_ms=0.0, max_batch=4))
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.3, seed=6)
+    wave1 = [srv.submit(i, qlo[i], qhi[i], ANY_OVERLAP) for i in range(4)]
+    r1 = srv.run_until_idle()
+    dep.fail(2)                                    # mid-stream shard loss
+    wave2 = [srv.submit(i, qlo[i], qhi[i], ANY_OVERLAP) for i in range(4, 8)]
+    r2 = srv.run_until_idle()
+    dep.restore(2)
+    wave3 = [srv.submit(i, qlo[i], qhi[i], ANY_OVERLAP) for i in range(8, 12)]
+    r3 = srv.run_until_idle()
+    for t in wave1:
+        assert isinstance(r1[t], Served) and not r1[t].degraded
+    for t in wave2:
+        assert isinstance(r2[t], Served) and r2[t].degraded
+        assert r2[t].hit.ids.shape == (8,)         # degraded, still answers
+    for t in wave3:
+        assert isinstance(r3[t], Served) and not r3[t].degraded
+    snap = srv.snapshot()
+    assert snap["served"] == 12 and snap["degraded"] == 4
+    assert snap["shed_total"] == 0                 # loss never sheds
