@@ -9,6 +9,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
+from repro import obs
 from repro.core import (ANY_OVERLAP, EngineConfig, MSTGIndex, QueryEngine,
                         SearchRequest)
 from repro.data import make_range_dataset
@@ -54,18 +55,51 @@ def request(queries, qlo, qhi, predicate=ANY_OVERLAP, k=K, ef=64, route=None):
                          route=route)
 
 
-def time_call(fn, *args, repeats: int = 3, best: bool = False, **kw):
+_last_timing: dict = {}
+
+
+def time_call(fn, *args, repeats: int = 3, best: bool = False,
+              name: str = None, **kw):
     """Time ``fn``: mean over ``repeats`` by default; ``best=True`` takes the
     fastest repeat instead — the standard filter for scheduler noise on
-    shared CI machines, used by the smoke lane's QPS rows."""
+    shared CI machines, used by the smoke lane's QPS rows.
+
+    Every repeat is also recorded into the process obs registry
+    (``bench_repeat_ms{call=<name or fn name>}``) and into the module-level
+    :func:`last_timing` summary, so benches can report p50/p95 spread
+    alongside the best-of-N headline without changing the return shape."""
     fn(*args, **kw)  # warmup / compile
+    label = name or getattr(fn, "__name__", "call") or "call"
+    hist = obs.get_registry().histogram(
+        "bench_repeat_ms", "per-repeat wall time of time_call benchmarks",
+        labels=("call",), lo_ms=1e-3, hi_ms=6e4)
     times = []
     out = None
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn(*args, **kw)
-        times.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        hist.observe(dt * 1e3, call=label)
+    srt = sorted(times)
+    _last_timing.clear()
+    _last_timing.update({
+        "call": label,
+        "repeats": repeats,
+        "best_s": srt[0],
+        "mean_s": sum(times) / len(times),
+        "p50_s": srt[len(srt) // 2],
+        "p95_s": srt[min(len(srt) - 1, int(0.95 * len(srt)))],
+    })
     return (min(times) if best else sum(times) / len(times)), out
+
+
+def last_timing() -> dict:
+    """Per-repeat spread of the most recent :func:`time_call`:
+    ``{call, repeats, best_s, mean_s, p50_s, p95_s}`` (empty before any
+    call). Lets callers report percentile spread next to the headline
+    number without widening time_call's ``(time, out)`` return."""
+    return dict(_last_timing)
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

@@ -88,6 +88,17 @@ def poisson_arrivals(n: int, rate_qps: float, seed: int = 9) -> np.ndarray:
     return np.cumsum(rng.exponential(1.0 / rate_qps, n))
 
 
+# both servers expose the same ServerMetrics snapshot schema (repro.obs
+# StreamingHistogram summaries underneath); the per-rate rows read this one
+# shared view from each so the artifact never needs per-server parsing
+SNAPSHOT_KEYS = ("submitted", "admitted", "served", "shed",
+                 "deadline_missed", "degraded", "queue_wait_ms", "e2e_ms")
+
+
+def _server_view(snap: dict) -> dict:
+    return {k: snap[k] for k in SNAPSHOT_KEYS}
+
+
 def _latency_stats(lat_ms) -> dict:
     if not len(lat_ms):
         return {"p50": None, "p95": None, "p99": None, "mean": None}
@@ -137,7 +148,8 @@ def run_sync_open(engine, embed_fn, work, arrivals, k, ef,
             "qps": round(len(lat) / wall, 2),
             "goodput_qps": round(good / wall, 2),
             "stats": _latency_stats(lat_ms),
-            "shed": 0, "deadline_missed": len(lat_ms) - good}
+            "shed": 0, "deadline_missed": len(lat_ms) - good,
+            "server": _server_view(srv.snapshot())}
 
 
 def run_async_open(engine, embed_fn, work, arrivals, k, ef,
@@ -193,7 +205,8 @@ def run_async_open(engine, embed_fn, work, arrivals, k, ef,
             "shed": shed, "deadline_missed": snap["deadline_missed"],
             "occupancy": round(snap.get("batch_occupancy", 1.0), 4),
             "refill_efficiency": round(snap.get("refill_efficiency", 1.0), 4),
-            "refills": snap.get("refills", 0)}
+            "refills": snap.get("refills", 0),
+            "server": _server_view(snap)}
 
 
 def run_closed(engine, embed_fn, work, k, ef, mode: str,
@@ -311,12 +324,13 @@ def run_serving_bench(out_path: str = "BENCH_serving.json", n: int = 2000,
                  for _ in range(2)), key=lambda r: r["goodput_qps"])
         row = {"offered_qps": rate,
                "sync": {kk: s[kk] for kk in ("qps", "goodput_qps", "stats",
-                                             "shed", "deadline_missed")},
+                                             "shed", "deadline_missed",
+                                             "server")},
                "async": {kk: a[kk] for kk in ("qps", "goodput_qps", "stats",
                                               "shed", "deadline_missed",
                                               "occupancy",
                                               "refill_efficiency",
-                                              "refills")}}
+                                              "refills", "server")}}
         open_rows.append(row)
         print(f"  rate={rate}: sync good={s['goodput_qps']} qps={s['qps']} "
               f"p50={s['stats']['p50']} p99={s['stats']['p99']} | "

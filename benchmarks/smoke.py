@@ -27,7 +27,7 @@ from repro.core import (ANY_OVERLAP, MSTGIndex, QueryEngine, SearchRequest,
                         intervals as iv)
 from repro.data import make_range_dataset, make_queries, brute_force_topk, recall_at_k
 
-from .common import time_call
+from .common import last_timing, time_call
 
 
 def _plan_batch_scalar(index: MSTGIndex, mask: int, ql, qh):
@@ -196,13 +196,22 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
                 # best-of-N: this box's CPU is noisily shared, and the
                 # engine_auto >= min(graph, pruned) invariant drowns in
                 # mean-of-N scheduler noise
-                dt, res = time_call(cold_search, repeats=7, best=True)
+                dt, res = time_call(cold_search, repeats=7, best=True,
+                                    name=f"smoke_{name}")
+                lt = last_timing()
+                # percentile spread across the 7 repeats, next to the
+                # best-of-N headline (flags noisy boxes in the artifact)
                 row[name] = {"qps": round(n_queries / dt, 1),
-                             "recall_at_10": round(res.recall_vs(tids), 4)}
+                             "recall_at_10": round(res.recall_vs(tids), 4),
+                             "repeat_ms_p50": round(lt["p50_s"] * 1e3, 2),
+                             "repeat_ms_p95": round(lt["p95_s"] * 1e3, 2)}
             rrann[f"sel_{int(sel * 100):02d}"] = row
         report["exp1_rrann"] = rrann
         # headline wavefront fields (tracked by history + the CI perf gate)
         report["graph_qps"] = rrann["sel_05"]["graph"]["qps"]
+        report["graph_qps_repeat_ms"] = {
+            "p50": rrann["sel_05"]["graph"]["repeat_ms_p50"],
+            "p95": rrann["sel_05"]["graph"]["repeat_ms_p95"]}
 
     def sec_wavefront():
         from .exp12_wavefront import wavefront_metrics

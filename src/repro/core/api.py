@@ -112,6 +112,13 @@ class SearchRequest:
     earliest-deadline-first micro-batch ordering and shed-on-overload
     decisions. ``deadline_ms`` is relative to submission; ``priority``
     breaks ties (higher first).
+
+    ``trace=True`` records a :class:`repro.obs.Trace` of this one request —
+    plan, route decision, per-slot/per-shard execution, merge — returned on
+    :attr:`SearchResult.trace` (``result.explain()`` renders it;
+    ``result.trace.save(path)`` writes Chrome-trace JSON). The default is
+    the no-op fast path; see also ``EngineConfig.trace_sample`` for
+    engine-level sampling.
     """
 
     vectors: np.ndarray
@@ -125,6 +132,7 @@ class SearchRequest:
     chunk: Optional[int] = None
     deadline_ms: Optional[float] = None
     priority: int = 0
+    trace: bool = False
 
     def __post_init__(self):
         vecs = np.ascontiguousarray(self.vectors, dtype=np.float32)
@@ -287,11 +295,15 @@ class RouteReport:
 @dataclasses.dataclass(frozen=True, eq=False)
 class SearchResult:
     """Filtered top-k results: ``(Q, k)`` ids (< 0 = empty slot) and squared
-    distances (+inf = empty slot), plus the engine's :class:`RouteReport`."""
+    distances (+inf = empty slot), plus the engine's :class:`RouteReport`.
+    ``trace`` carries the request's :class:`repro.obs.Trace` when it ran
+    with ``SearchRequest(trace=True)`` (or was sampled by the engine) —
+    render with :meth:`explain`, export with ``result.trace.save(path)``."""
 
     ids: np.ndarray
     dists: np.ndarray
     report: Optional[RouteReport] = None
+    trace: Optional[object] = None
 
     def __post_init__(self):
         ids = np.asarray(self.ids)
@@ -335,6 +347,52 @@ class SearchResult:
     def astuple(self) -> Tuple[np.ndarray, np.ndarray]:
         """The legacy ``(ids, dists)`` pair (for tuple-era call sites)."""
         return self.ids, self.dists
+
+    def explain(self) -> str:
+        """One-query execution report: the :class:`RouteReport` breakdown
+        (route decision, selectivity estimate, plan slots, per-shard /
+        per-segment rows, merge schedule, degraded status) followed by the
+        span tree when the request ran with ``trace=True``. Returns the
+        rendered text (also handy under ``print``)."""
+        lines = [f"SearchResult: {self.ids.shape[0]} queries x k={self.k}"]
+        r = self.report
+        if r is None:
+            lines.append("  (no route report attached)")
+        else:
+            routed = r.route if r.route == r.requested \
+                else f"{r.route} (requested {r.requested})"
+            lines.append(f"  route: {routed}")
+            sel = r.mean_selectivity
+            if sel is not None:
+                lines.append(f"  est_selectivity: mean={sel:.4f}")
+            if r.slot_count or r.variants:
+                lines.append(f"  plan: {r.slot_count} slots over "
+                             f"variants={list(r.variants)}")
+            if r.cache_hits or r.cache_misses:
+                lines.append(f"  selectivity cache: {r.cache_hits} hits / "
+                             f"{r.cache_misses} misses")
+            for s in r.shards:
+                status = "" if s.alive else "  [DEGRADED]"
+                lines.append(
+                    f"  shard[{s.shard}]: route={s.route} n={s.n} "
+                    f"k_fetched={s.k_fetched} "
+                    f"latency={s.latency_s * 1e3:.2f}ms{status}")
+            if r.missing_shards:
+                lines.append("  missing shards: "
+                             f"{list(r.missing_shards)} (degraded)")
+            for g in r.segments:
+                lines.append(f"  segment[{g.segment}]: route={g.route} "
+                             f"n={g.n} k_fetched={g.k_fetched} "
+                             f"tombstones={g.tombstones}")
+            if r.merge:
+                lines.append(f"  merge: {r.merge}")
+        if self.trace is not None:
+            lines.append("  trace:")
+            lines.extend("    " + ln
+                         for ln in self.trace.render().splitlines())
+        else:
+            lines.append("  trace: (none — pass SearchRequest(trace=True))")
+        return "\n".join(lines)
 
     def recall_vs(self, reference) -> float:
         """Recall@k against ``reference`` — a :class:`SearchResult` or a

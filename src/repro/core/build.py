@@ -38,14 +38,15 @@ BLAS matmul is the fast path, so that is what runs here.
 """
 from __future__ import annotations
 
-import logging
 from typing import List, Optional, Set
 
 import numpy as np
 
+from repro.obs.log import get_logger
+
 from .hnsw import LabeledLevelGraph
 
-logger = logging.getLogger(__name__)
+logger = get_logger(__name__)
 
 BUILDERS = ("bulk", "incremental")
 DEFAULT_BATCH = 128
@@ -226,5 +227,6 @@ def bulk_insert_levels(vectors: np.ndarray, order: np.ndarray,
             _reprune_vertices(g, overfull, int(sort_rank[int(batch[-1])]))
         done = end
         if progress and (done // progress) > ((done - batch.shape[0]) // progress):
-            logger.info("  [%s] bulk-inserted %d/%d", variant, done, n)
+            logger.progress("bulk_insert", variant=variant, done=done,
+                            total=n, final=(done == n))
     return levels

@@ -58,12 +58,15 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 import warnings
 from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 import jax.numpy as jnp
+
+from repro import obs
 
 from . import intervals as iv
 from .api import RouteReport, SearchRequest, SearchResult
@@ -169,6 +172,12 @@ class EngineConfig:
         bytes per query) instead of the dense ``(Q, n)`` bool reference
         array. Results are bit-identical; the dense path exists for property
         tests and as a fallback.
+    trace_sample : float
+        Fraction of requests to trace without the caller asking (0.0, the
+        default, traces only ``SearchRequest(trace=True)``). Sampling is
+        deterministic — every ``round(1/trace_sample)``-th request — so a
+        serving process gets a steady trickle of traces on
+        ``SearchResult.trace`` rather than a random burst.
     """
 
     use_kernel: bool = False
@@ -181,6 +190,7 @@ class EngineConfig:
     graph_fanout: Optional[int] = None
     graph_chunk: Union[int, str, None] = "auto"
     packed_visited: bool = True
+    trace_sample: float = 0.0
 
     def __post_init__(self):
         if self.route not in _ROUTES:
@@ -199,6 +209,9 @@ class EngineConfig:
             raise ValueError("selectivity_sample must be >= 1")
         if self.sel_cache_max < 1:
             raise ValueError("sel_cache_max must be >= 1")
+        if not (0.0 <= self.trace_sample <= 1.0):
+            raise ValueError("trace_sample must be in [0, 1], got "
+                             f"{self.trace_sample!r}")
 
     def replace(self, **overrides) -> "EngineConfig":
         """A copy with ``overrides`` applied (re-validated)."""
@@ -295,6 +308,32 @@ class QueryEngine:
         self.sel_cache_misses = 0
         self.sel_cache_evictions = 0
 
+        # deterministic trace sampling: every round(1/trace_sample)-th request
+        ts = float(config.trace_sample)
+        self._trace_every = int(round(1.0 / ts)) if ts > 0 else 0
+        self._trace_seq = 0
+        # labeled metric children resolved once here so the per-request cost
+        # is attribute updates, not name/label lookups
+        reg = obs.get_registry()
+        req_c = reg.counter("engine_requests_total",
+                            "Batch requests executed, by resolved route",
+                            labels=("route",))
+        qry_c = reg.counter("engine_queries_total",
+                            "Individual queries executed, by resolved route",
+                            labels=("route",))
+        lat_h = reg.histogram("engine_search_ms",
+                              "QueryEngine.execute wall time (ms), by route",
+                              labels=("route",))
+        self._route_metrics = {
+            r: (req_c.labels(route=r), qry_c.labels(route=r),
+                lat_h.labels(route=r))
+            for r in (ROUTE_GRAPH, ROUTE_PRUNED, ROUTE_FLAT)}
+        sel_c = reg.counter("engine_sel_cache_total",
+                            "Selectivity-memo lookups, by outcome",
+                            labels=("outcome",))
+        self._m_sel_hit = sel_c.labels(outcome="hit")
+        self._m_sel_miss = sel_c.labels(outcome="miss")
+
     # ---- device staging (lazy, cached per variant) ----
     def graph_dev(self, variant: str) -> DeviceVariant:
         if variant not in self._graph_dev:
@@ -372,6 +411,10 @@ class QueryEngine:
                 self.sel_cache_evictions += overflow
         self.sel_cache_hits += hits
         self.sel_cache_misses += len(miss)
+        if hits:
+            self._m_sel_hit.inc(hits)
+        if miss:
+            self._m_sel_miss.inc(len(miss))
         return out, hits, len(miss)
 
     def _auto_route(self, est: np.ndarray, ef: int = 64) -> str:
@@ -425,42 +468,86 @@ class QueryEngine:
         return self.execute(request)
 
     def execute(self, request: SearchRequest) -> SearchResult:
-        """Plan, route, and run one request; always returns a SearchResult."""
-        queries, qlo, qhi = request.vectors, request.qlo, request.qhi
-        mask, k = request.mask, request.k
-        Q = len(request)
+        """Plan, route, and run one request; always returns a SearchResult.
+
+        ``request.trace=True`` (or a hit of ``EngineConfig.trace_sample``)
+        records the request's span tree — plan, route decision, per-slot
+        execution — onto ``SearchResult.trace``. When this engine runs as a
+        shard of a :class:`repro.distributed.ShardedDeployment`, its spans
+        join the deployment's trace instead (inner layers never finish an
+        outer trace)."""
         requested = request.route or self.default_route
         if requested not in _ROUTES:
             raise ValueError(f"route must be one of {_ROUTES}, got {requested!r}")
+        wants_trace = request.trace
+        if not wants_trace and self._trace_every:
+            self._trace_seq += 1
+            wants_trace = (self._trace_seq % self._trace_every) == 0
+        tracer = obs.begin_request_trace() if wants_trace else None
+        t_exec = time.perf_counter()
+        try:
+            with obs.span("search") as root:
+                root.set("Q", len(request)).set("k", request.k)
+                root.set("mask", request.mask).set("requested", requested)
+                result = self._execute_routed(request, requested)
+        finally:
+            trace = obs.end_request_trace(tracer)
+        route = result.report.route if result.report is not None else requested
+        rm = self._route_metrics.get(route)
+        if rm is not None:
+            rm[0].inc()
+            rm[1].inc(float(len(request)))
+            rm[2].record((time.perf_counter() - t_exec) * 1e3)
+        if trace is not None:
+            result = dataclasses.replace(result, trace=trace)
+        return result
+
+    def _execute_routed(self, request: SearchRequest,
+                        requested: str) -> SearchResult:
+        queries, qlo, qhi = request.vectors, request.qlo, request.qhi
+        mask, k = request.mask, request.k
+        Q = len(request)
         est = None
         hits = misses = 0
         route = requested
         if requested == ROUTE_AUTO and Q:
-            est, hits, misses = self._estimate_cached(mask, qlo, qhi)
-            route = self._auto_route(est, request.ef)
+            with obs.span("route") as rsp:
+                est, hits, misses = self._estimate_cached(mask, qlo, qhi)
+                route = self._auto_route(est, request.ef)
+                if obs.tracing():
+                    rsp.set("chosen", route)
+                    rsp.set("est_mean", round(float(est.mean()), 6))
+                    rsp.set("cache_hits", hits).set("cache_misses", misses)
         if Q == 0:
             ids, d = _empty_result(0, k)
             return SearchResult(ids, d, RouteReport(
                 route=route, requested=requested, est_selectivity=est,
                 slot_count=0, variants=()))
         self.route_counts[route] = self.route_counts.get(route, 0) + 1
-        slots = (self.plan(mask, qlo, qhi) if route in (ROUTE_GRAPH,
-                                                        ROUTE_PRUNED) else [])
-        if route == ROUTE_FLAT:
-            ids, d = self._run_flat(queries, qlo, qhi, mask, k)
-        elif route == ROUTE_PRUNED:
-            ids, d = self._run_pruned(queries, qlo, qhi, mask, k, slots=slots)
-        elif route == ROUTE_GRAPH:
-            ids, d = self._run_graph(queries, qlo, qhi, mask, k, request.ef,
-                                     request.max_steps, request.fanout,
-                                     slots=slots, chunk=request.chunk)
-        else:
-            raise ValueError(f"unknown route {route!r}")
+        with obs.span("plan") as psp:
+            slots = (self.plan(mask, qlo, qhi) if route in (ROUTE_GRAPH,
+                                                            ROUTE_PRUNED)
+                     else [])
+            psp.set("slots", len(slots))
+        with obs.span(route):
+            if route == ROUTE_FLAT:
+                ids, d = self._run_flat(queries, qlo, qhi, mask, k)
+            elif route == ROUTE_PRUNED:
+                ids, d = self._run_pruned(queries, qlo, qhi, mask, k,
+                                          slots=slots)
+            elif route == ROUTE_GRAPH:
+                ids, d = self._run_graph(queries, qlo, qhi, mask, k,
+                                         request.ef, request.max_steps,
+                                         request.fanout, slots=slots,
+                                         chunk=request.chunk)
+            else:
+                raise ValueError(f"unknown route {route!r}")
+            ids, d = np.asarray(ids[:Q]), np.asarray(d[:Q])
         report = RouteReport(route=route, requested=requested,
                              est_selectivity=est, slot_count=len(slots),
                              variants=tuple(s.variant for s in slots),
                              cache_hits=hits, cache_misses=misses)
-        return SearchResult(np.asarray(ids[:Q]), np.asarray(d[:Q]), report)
+        return SearchResult(ids, d, report)
 
     # Convenience fixed-route entry points (legacy tuple returns).
     def search_graph(self, queries, qlo, qhi, mask, k=10, ef=64,
@@ -561,15 +648,18 @@ class QueryEngine:
             common = dict(k=k, ef=ef, max_steps=steps, Kpad=dv.meta.Kpad,
                           use_kernel=self.use_kernel, fanout=F,
                           packed=self.packed_visited)
-            if chunk and chunk < steps:
-                ids, d = mstg_graph_search_chunked(
-                    dv.tree(), qdev, s.version, s.key_lo, s.key_hi,
-                    chunk=int(chunk), **common)
-            else:
-                ids, d = mstg_graph_search(
-                    dv.tree(), qdev, jnp.asarray(s.version, jnp.int32),
-                    jnp.asarray(s.key_lo, jnp.int32),
-                    jnp.asarray(s.key_hi, jnp.int32), **common)
+            with obs.span("slot") as ssp:
+                ssp.set("variant", s.variant).set("ef", ef).set("fanout", F)
+                if chunk and chunk < steps:
+                    ssp.set("chunk", int(chunk))
+                    ids, d = mstg_graph_search_chunked(
+                        dv.tree(), qdev, s.version, s.key_lo, s.key_hi,
+                        chunk=int(chunk), **common)
+                else:
+                    ids, d = mstg_graph_search(
+                        dv.tree(), qdev, jnp.asarray(s.version, jnp.int32),
+                        jnp.asarray(s.key_lo, jnp.int32),
+                        jnp.asarray(s.key_hi, jnp.int32), **common)
             res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
         if res is None:
             return _empty_result(queries_p.shape[0], k)
@@ -602,12 +692,14 @@ class QueryEngine:
                 cap = min(n, _next_pow2(cap)) if cap else 0
             if cap == 0:
                 continue  # every query's task in this slot is empty
-            ids, d = _pruned_search_variant(
-                self.pruned_dev(s.variant), self.lo, self.hi, qdev,
-                qlo_j, qhi_j, jnp.asarray(s.version, jnp.int32),
-                jnp.asarray(s.key_lo, jnp.int32), jnp.asarray(s.key_hi, jnp.int32),
-                pred_mask_bits=mask, k=k, Kpad=fv.Kpad, block=block,
-                max_blocks=-(-cap // block))
+            with obs.span("slot") as ssp:
+                ssp.set("variant", s.variant).set("candidates", cap)
+                ids, d = _pruned_search_variant(
+                    self.pruned_dev(s.variant), self.lo, self.hi, qdev,
+                    qlo_j, qhi_j, jnp.asarray(s.version, jnp.int32),
+                    jnp.asarray(s.key_lo, jnp.int32), jnp.asarray(s.key_hi, jnp.int32),
+                    pred_mask_bits=mask, k=k, Kpad=fv.Kpad, block=block,
+                    max_blocks=-(-cap // block))
             res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
         if res is None:
             return _empty_result(queries_p.shape[0], k)

@@ -34,7 +34,6 @@ needs and plans queries via Theorem 4.1.
 from __future__ import annotations
 
 import dataclasses
-import logging
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -49,7 +48,9 @@ from .build import BUILDERS, bulk_insert_levels
 from .hnsw import OPEN, NO_EDGE, LabeledLevelGraph
 from .predicates import Predicate, as_mask
 
-logger = logging.getLogger(__name__)
+from repro.obs.log import get_logger
+
+logger = get_logger(__name__)
 
 # FrozenVariant array fields, in the order they are persisted.
 _FV_ARRAYS = ("sort_rank", "tkey", "nbr", "lab_b", "lab_e",
@@ -115,8 +116,9 @@ def _insert_incremental(vectors: np.ndarray, order: np.ndarray,
             node = key >> (Lv - 1 - lvl)
             levels[lvl].insert(u, node, ver)
         if progress and (i + 1) % progress == 0:
-            logger.info("  [%s] inserted %d/%d (%.1fs)", variant, i + 1, n,
-                        time.perf_counter() - t0)
+            logger.progress("insert", variant=variant, done=i + 1, total=n,
+                            elapsed_s=time.perf_counter() - t0,
+                            final=(i + 1 == n))
     return levels
 
 

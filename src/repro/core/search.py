@@ -41,6 +41,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from . import segment_tree as st
 from .hnsw import NO_EDGE
 from .mstg import FrozenVariant
@@ -436,13 +438,23 @@ def mstg_graph_search_chunked(arrays: dict, queries, version, key_lo, key_hi,
                                                  idx_dev)
             perm = perm[idx]
         limit = jnp.asarray(min(chunk, max_steps - total), jnp.int32)
-        state, active, ran = _graph_chunk(arrays, qs, ver, nodes, state,
-                                          limit, fanout=fanout, **kw)
-        ran = int(ran)
+        with obs.span("chunk") as csp:
+            state, active, ran = _graph_chunk(arrays, qs, ver, nodes, state,
+                                              limit, fanout=fanout, **kw)
+            ran = int(ran)
+            active_h = np.asarray(active)
+            if obs.tracing():
+                csp.set("rows", int(qs.shape[0])).set("live", int(live.size))
+                csp.set("steps", ran)
+                csp.set("evals_executed", int(qs.shape[0]) * ran * fanout * S)
         total += ran
         executed_row_steps += int(qs.shape[0]) * ran
-        active_h = np.asarray(active)
 
+    if obs.tracing():
+        u = int(conv_steps.sum())
+        obs.span("wavefront_totals").set("steps", total) \
+            .set("evals_executed", executed_row_steps * fanout * S) \
+            .set("evals_useful", u * fanout * S).stop()
     if not with_stats:
         return out_ids, out_d
     useful = int(conv_steps.sum())
@@ -727,36 +739,41 @@ class WavefrontStream:
         full ``ef``-wide beam (NO_EDGE / +inf padded), steps the row's
         convergence (or truncation) step count.
         """
-        if not self._compose():
-            return []
-        real = self._perm >= 0
-        live = real & self._active & (self._steps_run < self._budget)
-        remaining = self._budget[live] - self._steps_run[live]
-        limit = min(self.chunk, int(remaining.min())) if remaining.size \
-            else self.chunk
-        bucket = self._perm.shape[0]
-        self.occupancy_rows += int(live.sum())
-        self.occupancy_capacity += bucket
-        self._state, active, ran = _graph_chunk(
-            self.arrays, self._qs, self._ver, self._nodes, self._state,
-            jnp.asarray(limit, jnp.int32), fanout=self.fanout, **self._kw)
-        ran = int(ran)
-        self._active = np.asarray(active)
-        self._steps_run = self._steps_run + ran
-        self.chunks += 1
-        self.executed_row_steps += bucket * ran
-        # harvest: converged, or truncated at exactly their step budget
-        done = np.flatnonzero(real & (~self._active
-                                      | (self._steps_run >= self._budget)))
-        if done.size == 0:
-            return []
-        ids_h, d_h, steps_h = _harvest(self._state, done, self.ef)
-        out = [(int(self._perm[r]), ids_h[j], d_h[j], int(steps_h[j]))
-               for j, r in enumerate(done)]
-        self._perm[done] = -1
-        self.completed += done.size
-        self.useful_row_steps += int(steps_h.sum())
-        return out
+        with obs.span("chunk") as csp:
+            if not self._compose():
+                return []
+            real = self._perm >= 0
+            live = real & self._active & (self._steps_run < self._budget)
+            remaining = self._budget[live] - self._steps_run[live]
+            limit = min(self.chunk, int(remaining.min())) if remaining.size \
+                else self.chunk
+            bucket = self._perm.shape[0]
+            self.occupancy_rows += int(live.sum())
+            self.occupancy_capacity += bucket
+            self._state, active, ran = _graph_chunk(
+                self.arrays, self._qs, self._ver, self._nodes, self._state,
+                jnp.asarray(limit, jnp.int32), fanout=self.fanout, **self._kw)
+            ran = int(ran)
+            self._active = np.asarray(active)
+            self._steps_run = self._steps_run + ran
+            self.chunks += 1
+            self.executed_row_steps += bucket * ran
+            # harvest: converged, or truncated at exactly their step budget
+            done = np.flatnonzero(real & (~self._active
+                                          | (self._steps_run >= self._budget)))
+            if obs.tracing():
+                csp.set("live", int(live.sum())).set("bucket", bucket)
+                csp.set("steps", ran).set("harvested", int(done.size))
+                csp.set("occupancy", round(int(live.sum()) / bucket, 4))
+            if done.size == 0:
+                return []
+            ids_h, d_h, steps_h = _harvest(self._state, done, self.ef)
+            out = [(int(self._perm[r]), ids_h[j], d_h[j], int(steps_h[j]))
+                   for j, r in enumerate(done)]
+            self._perm[done] = -1
+            self.completed += done.size
+            self.useful_row_steps += int(steps_h.sum())
+            return out
 
     def drain(self):
         """Run :meth:`step` until idle; returns every harvested row."""

@@ -46,6 +46,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.api import (IndexSpec, RouteReport, SearchRequest,
                             SearchResult, ShardReport)
 from repro.core.engine import EngineConfig, QueryEngine
@@ -250,14 +251,36 @@ class ShardedDeployment:
 
     # ---- execution ----
     def execute(self, request: SearchRequest) -> SearchResult:
+        """Fan one request out over the shards and merge. With
+        ``request.trace=True`` the deployment owns the root trace — per-shard
+        engine spans nest under ``shard-i`` — and the finished
+        :class:`repro.obs.Trace` rides back on ``SearchResult.trace``."""
         if not isinstance(request, SearchRequest):
             raise TypeError("ShardedDeployment serves the declarative API "
                             "only; pass a repro.core.SearchRequest")
+        tracer = obs.begin_request_trace() if request.trace else None
+        try:
+            with obs.span("sharded_search") as root:
+                root.set("Q", len(request)).set("k", request.k)
+                root.set("shards", self.spec.n_shards)
+                result = self._execute_sharded(request)
+        finally:
+            trace = obs.end_request_trace(tracer)
+        if trace is not None:
+            result = dataclasses.replace(result, trace=trace)
+        return result
+
+    def _execute_sharded(self, request: SearchRequest) -> SearchResult:
         D, Q, k = self.spec.n_shards, len(request), request.k
-        k_loc = min(self.spec.per_shard_k, k) if self.spec.per_shard_k else k
-        merge = resolve_merge(self.spec.merge, D) \
-            if (self.mesh is not None and self.spec.merge != "host") else "host"
-        alive = self._alive()
+        with obs.span("plan") as psp:
+            k_loc = min(self.spec.per_shard_k, k) if self.spec.per_shard_k \
+                else k
+            merge = resolve_merge(self.spec.merge, D) \
+                if (self.mesh is not None and self.spec.merge != "host") \
+                else "host"
+            alive = self._alive()
+            psp.set("merge", merge).set("k_loc", k_loc)
+            psp.set("alive", int(alive.sum()))
         self._step += 1
         if self._flat is not None and merge != "host":
             return self._execute_flat_fused(request, k_loc, merge, alive)
@@ -275,15 +298,19 @@ class ShardedDeployment:
                 missing.append(i)
                 continue
             t0 = time.perf_counter()
+            ssp = obs.span(f"shard-{i}")
             try:
                 li, ld, rep = self._run_shard(shard, request, k_loc)
             except Exception:
                 # a shard raising mid-search is a lost shard, not a lost
                 # request: sentinel rows, flagged, never re-raised
+                ssp.set("alive", False).stop()
                 reports.append(ShardReport(shard=i, n=shard.n, route="error",
                                            alive=False, k_fetched=0))
                 missing.append(i)
                 continue
+            ssp.set("n", shard.n).set("route", rep.route if rep else "flat")
+            ssp.stop()
             ids[i], dists[i] = li, ld
             self.heartbeats.ping(shard.name, self._step)
             lat = time.perf_counter() - t0
@@ -294,12 +321,15 @@ class ShardedDeployment:
                 shard=i, n=shard.n,
                 route=rep.route if rep else "flat", k_fetched=k_loc,
                 latency_s=lat, slot_count=rep.slot_count if rep else 0))
-        if merge == "host":
-            gi, gd = _host_merge(ids, dists, k)
-        else:
-            gi, gd = sharded_topk_merge(self.mesh, ids, dists, k,
-                                        axis=self.spec.corpus_axis,
-                                        merge=merge, alive=alive)
+        with obs.span("merge") as msp:
+            msp.set("schedule", merge)
+            if merge == "host":
+                gi, gd = _host_merge(ids, dists, k)
+            else:
+                gi, gd = sharded_topk_merge(self.mesh, ids, dists, k,
+                                            axis=self.spec.corpus_axis,
+                                            merge=merge, alive=alive)
+            gi, gd = np.asarray(gi), np.asarray(gd)
         report = RouteReport(
             route="sharded", requested=request.route or "auto",
             est_selectivity=None, slot_count=slot_total,
@@ -345,15 +375,17 @@ class ShardedDeployment:
         and the collective merge fused into a single shard_map program."""
         corpus, lo, hi = self._flat
         t0 = time.perf_counter()
-        gi, gd = sharded_flat_topk(
-            self.mesh, corpus, lo, hi, request.vectors,
-            request.qlo.astype(np.float32), request.qhi.astype(np.float32),
-            mask=request.mask, k=request.k,
-            corpus_axis=self.spec.corpus_axis, merge=merge,
-            per_shard_k=k_loc if k_loc < request.k else 0, alive=alive,
-            use_kernel=self.spec.engine.use_kernel)
-        gi = np.asarray(gi, np.int64)
-        gd = np.asarray(gd, np.float32)
+        with obs.span("fused_scan") as fsp:
+            fsp.set("merge", merge).set("shards", len(self.shards))
+            gi, gd = sharded_flat_topk(
+                self.mesh, corpus, lo, hi, request.vectors,
+                request.qlo.astype(np.float32), request.qhi.astype(np.float32),
+                mask=request.mask, k=request.k,
+                corpus_axis=self.spec.corpus_axis, merge=merge,
+                per_shard_k=k_loc if k_loc < request.k else 0, alive=alive,
+                use_kernel=self.spec.engine.use_kernel)
+            gi = np.asarray(gi, np.int64)
+            gd = np.asarray(gd, np.float32)
         lat = time.perf_counter() - t0
         now = time.time()
         for i, s in enumerate(self.shards):

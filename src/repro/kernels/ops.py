@@ -4,13 +4,22 @@ On TPU the Pallas kernels run compiled; everywhere else (this CPU container)
 they run in ``interpret=True`` mode, which executes the kernel body in Python
 on CPU — bitwise the same program structure, used by tests/benchmarks to
 validate against the :mod:`repro.kernels.ref` oracles.
+
+When a request trace is active (``repro.obs``), each entry point records a
+``kernel:<name>`` span annotated with achieved memory bandwidth vs the TPU
+v5e HBM peak (:func:`repro.obs.profile.bandwidth_annotation`). The traced
+path blocks on the result so the span measures the kernel, not the dispatch;
+with tracing off the wrappers stay fully async and add no work.
 """
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
-import jax.numpy as jnp
+
+from repro import obs
+from repro.obs.profile import bandwidth_annotation
 
 from . import pairwise_l2 as _pw
 from . import gathered_l2 as _gl
@@ -22,18 +31,54 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _nbytes(*arrays) -> int:
+    """Total bytes the kernel must at least stream from memory (inputs)."""
+    total = 0
+    for a in arrays:
+        nb = getattr(a, "nbytes", None)
+        if nb is not None:
+            total += int(nb)
+    return total
+
+
+def _run_traced(name: str, inputs, thunk):
+    """Run ``thunk`` inside a ``kernel:<name>`` span with an achieved-vs-peak
+    bandwidth annotation. Only entered when a tracer is active — the traced
+    path blocks on the result so the measured wall time bounds the kernel."""
+    with obs.span(f"kernel:{name}") as sp:
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(thunk())
+        ann = bandwidth_annotation(_nbytes(*inputs), time.perf_counter() - t0)
+        for key, v in ann.items():
+            sp.set(key, v)
+    return out
+
+
 def pairwise_l2_masked(queries, corpus, lo, hi, ql, qh, mask: int,
                        bq: int = _pw.DEFAULT_BQ, bn: int = _pw.DEFAULT_BN):
-    return _pw.pairwise_l2_masked(queries, corpus, lo, hi, ql, qh, mask,
-                                  bq=bq, bn=bn, interpret=_interpret())
+    thunk = lambda: _pw.pairwise_l2_masked(  # noqa: E731
+        queries, corpus, lo, hi, ql, qh, mask, bq=bq, bn=bn,
+        interpret=_interpret())
+    if not obs.tracing():
+        return thunk()
+    return _run_traced("pairwise_l2_masked", (queries, corpus, lo, hi),
+                       thunk)
 
 
 def gathered_l2(queries, cand_vecs, bq: int = _gl.DEFAULT_BQ):
-    return _gl.gathered_l2(queries, cand_vecs, bq=bq, interpret=_interpret())
+    thunk = lambda: _gl.gathered_l2(  # noqa: E731
+        queries, cand_vecs, bq=bq, interpret=_interpret())
+    if not obs.tracing():
+        return thunk()
+    return _run_traced("gathered_l2", (queries, cand_vecs), thunk)
 
 
 def gathered_l2_dot(queries, cand_vecs, bq: int = _gl.DEFAULT_BQ):
-    return _gl.gathered_l2_dot(queries, cand_vecs, bq=bq, interpret=_interpret())
+    thunk = lambda: _gl.gathered_l2_dot(  # noqa: E731
+        queries, cand_vecs, bq=bq, interpret=_interpret())
+    if not obs.tracing():
+        return thunk()
+    return _run_traced("gathered_l2_dot", (queries, cand_vecs), thunk)
 
 
 def gathered_topk(queries, vectors, ids, avail, b, e, version,
@@ -41,9 +86,13 @@ def gathered_topk(queries, vectors, ids, avail, b, e, version,
     """Fused wavefront step: gather-by-id + L2 + label mask + beam merge
     (:mod:`repro.kernels.gathered_topk`) in one kernel call."""
     from . import gathered_topk as _gt
-    return _gt.gathered_topk(queries, vectors, ids, avail, b, e, version,
-                             pool_ids, pool_d, pool_exp,
-                             bq=bq or _gt.DEFAULT_BQ, interpret=_interpret())
+    thunk = lambda: _gt.gathered_topk(  # noqa: E731
+        queries, vectors, ids, avail, b, e, version, pool_ids, pool_d,
+        pool_exp, bq=bq or _gt.DEFAULT_BQ, interpret=_interpret())
+    if not obs.tracing():
+        return thunk()
+    return _run_traced("gathered_topk",
+                       (queries, ids, pool_ids, pool_d), thunk)
 
 
 # re-export oracles for convenience
@@ -55,5 +104,9 @@ gathered_topk_ref = ref.gathered_topk_ref
 def fused_topk_l2(queries, corpus, lo, hi, ql, qh, mask: int, k: int = 10,
                   bn: int = 1024):
     from . import fused_topk as _ft
-    return _ft.fused_topk_l2(queries, corpus, lo, hi, ql, qh, mask, k=k,
-                             bn=bn, interpret=_interpret())
+    thunk = lambda: _ft.fused_topk_l2(  # noqa: E731
+        queries, corpus, lo, hi, ql, qh, mask, k=k, bn=bn,
+        interpret=_interpret())
+    if not obs.tracing():
+        return thunk()
+    return _run_traced("fused_topk_l2", (queries, corpus, lo, hi), thunk)

@@ -33,9 +33,9 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import ArchRunner
 from repro.models.transformer import LM
 
-PEAK_FLOPS = 197e12     # bf16 per chip
-HBM_BW = 819e9          # bytes/s per chip
-LINK_BW = 50e9          # bytes/s per ICI link
+# chip constants live in repro.obs.profile so kernel trace spans and this
+# analytic model agree on the same peaks; re-exported here for callers.
+from repro.obs.profile import HBM_BW, LINK_BW, PEAK_FLOPS
 
 ROOF_DIR = os.environ.get("ROOFLINE_ARTIFACTS",
                           os.path.join(os.path.dirname(ARTIFACT_DIR), "roofline"))

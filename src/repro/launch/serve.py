@@ -55,10 +55,20 @@ def main():
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request deadline for --async traffic (late "
                          "queued requests are shed as Rejected)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve the process metrics registry over HTTP: "
+                         "Prometheus text at /metrics, the typed JSON "
+                         "snapshot at /metrics.json (0 = ephemeral port)")
     args = ap.parse_args()
     if args.shards and args.streaming:
         ap.error("--shards and --streaming are mutually exclusive (shard a "
                  "SegmentedIndex via ShardedDeployment.from_segmented)")
+
+    if args.metrics_port is not None:
+        from repro import obs
+        http = obs.start_metrics_server(args.metrics_port)
+        print(f"metrics: http://{http.server_address[0]}:"
+              f"{http.server_address[1]}/metrics (+ /metrics.json)")
 
     # 1) corpus + index (the paper's contribution)
     ds = make_range_dataset(n=args.n, d=args.dim, n_queries=args.requests,

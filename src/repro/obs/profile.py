@@ -1,0 +1,80 @@
+"""Profiling hooks: opt-in ``jax.profiler`` capture + roofline annotation.
+
+Two pieces:
+
+* :func:`profiler_capture` — a context manager around
+  ``jax.profiler.trace``: dumps a TensorBoard/XProf profile directory for
+  the enclosed block. Opt-in and failure-tolerant: if the installed jax
+  build lacks profiler support (or the capture races another one), the
+  block still runs and the context records ``.error`` instead of raising —
+  profiling must never take down a serving process.
+
+* roofline constants + :func:`bandwidth_annotation` — the hardware peaks
+  that ``repro.launch.roofline`` prices HLO costs against (TPU v5e: bf16
+  FLOPs, HBM and ICI link bandwidth) now live here so kernel-level spans
+  and the roofline driver agree on one set of numbers.
+  ``bandwidth_annotation(nbytes, seconds)`` turns a measured kernel span
+  into achieved GB/s and the fraction of peak — attached to kernel spans by
+  ``repro.kernels.ops`` when tracing is on, and usable standalone from
+  benchmark drivers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "LINK_BW", "bandwidth_annotation",
+           "profiler_capture"]
+
+# TPU v5e single-chip peaks (the roofline reference point; CPU interpret-mode
+# numbers annotated against these document *distance from target hardware*,
+# not CPU efficiency).
+PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
+HBM_BW = 819e9          # HBM bytes/s per chip
+LINK_BW = 50e9          # bytes/s per ICI link
+
+
+def bandwidth_annotation(nbytes: float, seconds: float,
+                         peak_bw: float = HBM_BW) -> Dict[str, float]:
+    """Achieved memory bandwidth of a measured region vs a peak.
+
+    Returns ``{"bytes", "gb_per_s", "frac_of_peak"}`` — the dict a kernel
+    span attaches via ``sp.set``. ``seconds <= 0`` reports 0 bandwidth
+    rather than dividing by zero (a clock can quantize to 0 on tiny
+    kernels)."""
+    gbs = (nbytes / seconds / 1e9) if seconds > 0 else 0.0
+    return {"bytes": float(nbytes), "gb_per_s": round(gbs, 3),
+            "frac_of_peak": round(gbs * 1e9 / peak_bw, 6)}
+
+
+class profiler_capture:
+    """``with obs.profiler_capture("/tmp/prof") as cap:`` — capture a
+    ``jax.profiler`` trace of the block into ``log_dir`` (view with
+    TensorBoard/XProf). ``cap.ok`` says whether the capture actually ran;
+    ``cap.error`` holds the reason when it did not."""
+
+    def __init__(self, log_dir: str, create_perfetto_link: bool = False):
+        self.log_dir = log_dir
+        self._perfetto = create_perfetto_link
+        self._active = False
+        self.ok = False
+        self.error: Optional[str] = None
+
+    def __enter__(self) -> "profiler_capture":
+        try:
+            import jax
+            jax.profiler.start_trace(
+                self.log_dir, create_perfetto_link=self._perfetto)
+            self._active = True
+        except Exception as e:  # noqa: BLE001 — profiling is best-effort
+            self.error = f"{type(e).__name__}: {e}"
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        if self._active:
+            try:
+                import jax
+                jax.profiler.stop_trace()
+                self.ok = True
+            except Exception as e:  # noqa: BLE001
+                self.error = f"{type(e).__name__}: {e}"
+        return False

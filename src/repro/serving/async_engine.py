@@ -38,6 +38,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core import QueryEngine, QueryHit, Rejected, SearchRequest, Served
 from repro.core import as_mask
 from repro.core.engine import _empty_result
@@ -211,22 +212,32 @@ class AsyncRetrievalServer:
         stats = {"dispatched": 0, "mutations": 0, "served": 0, "shed": 0,
                  "admitted_rows": 0, "harvested_rows": 0}
         resolved: Dict[int, Any] = {}
-        rows_inflight = sum(s.inflight + s.n_pending
-                            for s in self._streams.values())
-        want_dispatch = self.scheduler.due() or (
-            self.scheduler.depth > 0 and rows_inflight == 0)
-        if want_dispatch:
-            capacity = (self.max_inflight - rows_inflight
-                        if self._continuous else None)
-            rnd = self.scheduler.next_round(capacity=capacity)
-            self._run_round(rnd, resolved, stats)
-        # advance every stream one chunk; harvest completions
-        for variant, stream in self._streams.items():
-            if stream.idle:
-                continue
-            for tag, ids, dists, steps in stream.step():
-                stats["harvested_rows"] += 1
-                self._absorb_row(tag, ids, dists, resolved, stats)
+        with obs.span("round") as rsp:
+            rows_inflight = sum(s.inflight + s.n_pending
+                                for s in self._streams.values())
+            want_dispatch = self.scheduler.due() or (
+                self.scheduler.depth > 0 and rows_inflight == 0)
+            if want_dispatch:
+                capacity = (self.max_inflight - rows_inflight
+                            if self._continuous else None)
+                with obs.span("admission") as asp:
+                    rnd = self.scheduler.next_round(capacity=capacity)
+                    self._run_round(rnd, resolved, stats)
+                    asp.set("dispatched", stats["dispatched"])
+                    asp.set("mutations", stats["mutations"])
+                    asp.set("shed", stats["shed"])
+            # advance every stream one chunk; harvest completions (each
+            # stream.step() records its own "chunk" span: occupancy, refill,
+            # harvested rows)
+            for variant, stream in self._streams.items():
+                if stream.idle:
+                    continue
+                for tag, ids, dists, steps in stream.step():
+                    stats["harvested_rows"] += 1
+                    self._absorb_row(tag, ids, dists, resolved, stats)
+            if obs.tracing():
+                rsp.set("served", stats["served"])
+                rsp.set("harvested_rows", stats["harvested_rows"])
         self.metrics.steps += 1
         stats["queue_depth"] = self.scheduler.depth
         stats["inflight"] = self.inflight

@@ -12,8 +12,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.models.transformer import LM, Segment
 from repro.serving.ops import DeleteOp, QueryOp, UpsertOp
+from repro.serving.scheduler import ServerMetrics
 
 
 def _seed_leaf(prefill_leaf, target_sds, prompt_len: int):
@@ -132,9 +134,14 @@ class RetrievalServer:
         self.auto_compact = auto_compact
         # typed op queue (repro.serving.ops) in submit order
         self.queue: List[Any] = []
+        self._t_submit: List[float] = []  # perf_counter at submit, per op
         self._embed_batched: Optional[bool] = None  # decided on first tick
         self.tick_stats: Dict[str, Any] = self._zero_stats()  # last tick
         self.stats: Dict[str, Any] = self._zero_stats()       # cumulative
+        # the same cumulative metrics structure the async server records, so
+        # one snapshot() schema covers both front ends (queue-wait here is
+        # submit -> tick dispatch; e2e is submit -> answer materialized)
+        self.metrics = ServerMetrics()
 
     @staticmethod
     def _zero_stats() -> Dict[str, Any]:
@@ -164,6 +171,8 @@ class RetrievalServer:
         from repro.core import as_mask
         self.queue.append(QueryOp(item, float(qlo), float(qhi),
                                   as_mask(predicate)))
+        self._t_submit.append(time.perf_counter())
+        self.metrics.record_admitted()
 
     def submit_upsert(self, ext_id: int, item, lo: float, hi: float):
         """Queue a corpus upsert: ``item`` is embedded on the next tick (in
@@ -173,6 +182,8 @@ class RetrievalServer:
             raise TypeError("engine is a frozen index; upserts need a "
                             "repro.streaming.SegmentedIndex")
         self.queue.append(UpsertOp(int(ext_id), item, float(lo), float(hi)))
+        self._t_submit.append(time.perf_counter())
+        self.metrics.record_admitted()
 
     def submit_delete(self, ext_id: int):
         """Queue a corpus delete (tombstone) of ``ext_id``."""
@@ -180,6 +191,8 @@ class RetrievalServer:
             raise TypeError("engine is a frozen index; deletes need a "
                             "repro.streaming.SegmentedIndex")
         self.queue.append(DeleteOp(int(ext_id)))
+        self._t_submit.append(time.perf_counter())
+        self.metrics.record_admitted()
 
     def _embed(self, items: List[Any]) -> np.ndarray:
         """One stacked embedding call for the whole tick (per-item fallback).
@@ -220,64 +233,96 @@ class RetrievalServer:
         tick_stats = self._zero_stats()
         tick_stats["ticks"] = 1
         t_tick = time.perf_counter()
-        # one batched embed call for the whole tick: queries AND upsert items
-        embed_slots = [i for i, op in enumerate(self.queue)
-                       if isinstance(op, (QueryOp, UpsertOp))]
-        items = [self.queue[i].item for i in embed_slots]
-        vec_of = {}
-        if items:
+        t_dispatch = {i: t_tick - t for i, t in enumerate(self._t_submit)}
+        degraded_idx: set = set()
+        with obs.span("tick") as tsp:
+            tsp.set("ops", len(self.queue))
+            # one batched embed call for the whole tick: queries AND upserts
+            embed_slots = [i for i, op in enumerate(self.queue)
+                           if isinstance(op, (QueryOp, UpsertOp))]
+            items = [self.queue[i].item for i in embed_slots]
+            vec_of = {}
+            if items:
+                t0 = time.perf_counter()
+                with obs.span("embed") as esp:
+                    esp.set("items", len(items))
+                    vecs = self._embed(items)
+                tick_stats["embed_s"] = time.perf_counter() - t0
+                vec_of = {i: vecs[j] for j, i in enumerate(embed_slots)}
+            # 1) mutations, strictly in submit order
             t0 = time.perf_counter()
-            vecs = self._embed(items)
-            tick_stats["embed_s"] = time.perf_counter() - t0
-            vec_of = {i: vecs[j] for j, i in enumerate(embed_slots)}
-        # 1) mutations, strictly in submit order
-        t0 = time.perf_counter()
-        for i, op in enumerate(self.queue):
-            if isinstance(op, UpsertOp):
-                self.engine.add(np.array([op.ext_id], np.int64),
-                                vec_of[i][None, :], np.array([op.lo]),
-                                np.array([op.hi]))
-                tick_stats["upserts"] += 1
-            elif isinstance(op, DeleteOp):
-                self.engine.delete(np.array([op.ext_id], np.int64),
-                                   strict=False)
-                tick_stats["deletes"] += 1
-        # 1b) background compaction: after a mutating tick, let the engine's
-        # CompactionPolicy decide whether a segment tier is worth merging
-        # (compact() is a cheap no-op when the policy picks no victims)
-        if (self.auto_compact
-                and tick_stats["upserts"] + tick_stats["deletes"] > 0
-                and hasattr(self.engine, "compact")):
-            rep = self.engine.compact()
-            if rep.get("merged"):
-                tick_stats["compactions"] += 1
-                tick_stats["compacted_rows"] += rep.get("rows", 0)
-        tick_stats["mutate_s"] = time.perf_counter() - t0
-        # 2) queries, grouped by predicate mask
-        t0 = time.perf_counter()
-        results = {}
-        by_mask: Dict[int, List[int]] = {}
-        for i, op in enumerate(self.queue):
-            if isinstance(op, QueryOp):
-                by_mask.setdefault(op.mask, []).append(i)
-        for mask, idxs in by_mask.items():
-            qlo = np.array([self.queue[i].qlo for i in idxs])
-            qhi = np.array([self.queue[i].qhi for i in idxs])
-            qvecs = np.stack([vec_of[i] for i in idxs])
-            res = self.engine.execute(SearchRequest(
-                qvecs, (qlo, qhi), mask, k=self.k, ef=self.ef))
-            ids, d = res.ids, res.dists
-            if getattr(res, "degraded", False):
-                # sharded backend answered with shards missing — the answers
-                # are still served, but the operator should see the count
-                tick_stats["degraded_queries"] += len(idxs)
-            for j, i in enumerate(idxs):
-                results[i] = QueryHit(ids[j], d[j])
-        tick_stats["search_s"] = time.perf_counter() - t0
+            with obs.span("mutate") as msp:
+                for i, op in enumerate(self.queue):
+                    if isinstance(op, UpsertOp):
+                        self.engine.add(np.array([op.ext_id], np.int64),
+                                        vec_of[i][None, :], np.array([op.lo]),
+                                        np.array([op.hi]))
+                        tick_stats["upserts"] += 1
+                    elif isinstance(op, DeleteOp):
+                        self.engine.delete(np.array([op.ext_id], np.int64),
+                                           strict=False)
+                        tick_stats["deletes"] += 1
+                # 1b) background compaction: after a mutating tick, let the
+                # engine's CompactionPolicy decide whether a segment tier is
+                # worth merging (compact() no-ops when it picks no victims)
+                if (self.auto_compact
+                        and tick_stats["upserts"] + tick_stats["deletes"] > 0
+                        and hasattr(self.engine, "compact")):
+                    rep = self.engine.compact()
+                    if rep.get("merged"):
+                        tick_stats["compactions"] += 1
+                        tick_stats["compacted_rows"] += rep.get("rows", 0)
+                msp.set("upserts", tick_stats["upserts"])
+                msp.set("deletes", tick_stats["deletes"])
+            tick_stats["mutate_s"] = time.perf_counter() - t0
+            # 2) queries, grouped by predicate mask
+            t0 = time.perf_counter()
+            results = {}
+            by_mask: Dict[int, List[int]] = {}
+            for i, op in enumerate(self.queue):
+                if isinstance(op, QueryOp):
+                    by_mask.setdefault(op.mask, []).append(i)
+            with obs.span("search") as ssp:
+                ssp.set("groups", len(by_mask))
+                for mask, idxs in by_mask.items():
+                    qlo = np.array([self.queue[i].qlo for i in idxs])
+                    qhi = np.array([self.queue[i].qhi for i in idxs])
+                    qvecs = np.stack([vec_of[i] for i in idxs])
+                    res = self.engine.execute(SearchRequest(
+                        qvecs, (qlo, qhi), mask, k=self.k, ef=self.ef))
+                    ids, d = res.ids, res.dists
+                    if getattr(res, "degraded", False):
+                        # sharded backend answered with shards missing — the
+                        # answers are still served, but the operator should
+                        # see the count
+                        tick_stats["degraded_queries"] += len(idxs)
+                        degraded_idx.update(idxs)
+                    for j, i in enumerate(idxs):
+                        results[i] = QueryHit(ids[j], d[j])
+            tick_stats["search_s"] = time.perf_counter() - t0
         tick_stats["queries"] = len(results)
         tick_stats["tick_s"] = time.perf_counter() - t_tick
         self.tick_stats = tick_stats
         for k_, v in tick_stats.items():
             self.stats[k_] += v
+        # unified ServerMetrics accounting: one record per op, same meaning
+        # as the async server's (queue = submit -> dispatch, e2e = submit ->
+        # answer ready)
+        t_end = time.perf_counter()
+        for i, op in enumerate(self.queue):
+            wait_s = t_dispatch.get(i, 0.0)
+            e2e_s = wait_s + (t_end - t_tick)
+            self.metrics.record_served(wait_s * 1e3, e2e_s * 1e3,
+                                       degraded=i in degraded_idx,
+                                       mutation=not isinstance(op, QueryOp))
+        self.metrics.steps += 1
         self.queue.clear()
+        self._t_submit.clear()
         return results
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Operator metrics in the SAME schema as
+        :meth:`repro.serving.AsyncRetrievalServer.snapshot` (the sync server
+        has no WavefrontStreams, so the occupancy/refill keys are absent —
+        exactly as an idle async server's snapshot would render them)."""
+        return self.metrics.snapshot()

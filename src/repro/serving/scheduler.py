@@ -25,9 +25,9 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-import numpy as np
-
 from repro.core.api import Rejected
+from repro.obs.metrics import StreamingHistogram  # moved to repro.obs (PR 7);
+                                                  # re-exported for compat
 
 from .ops import DeleteOp, QueryOp, UpsertOp
 
@@ -65,41 +65,6 @@ class SLOPolicy:
             raise ValueError("max_batch must be >= 1")
         if self.max_wait_ms < 0:
             raise ValueError("max_wait_ms must be >= 0")
-
-
-class StreamingHistogram:
-    """Log-spaced latency histogram: percentile estimates in O(bins) memory,
-    no samples stored. Values are milliseconds; out-of-range values clamp to
-    the edge bins. ``percentile`` returns the upper edge of the bin holding
-    the target rank (conservative: never under-reports a latency SLO)."""
-
-    def __init__(self, lo_ms: float = 1e-3, hi_ms: float = 6e4,
-                 bins: int = 128):
-        self._edges = np.geomspace(lo_ms, hi_ms, bins - 1)
-        self._counts = np.zeros(bins, np.int64)
-        self.count = 0
-        self.total_ms = 0.0
-        self.max_ms = 0.0
-
-    def record(self, ms: float) -> None:
-        self._counts[int(np.searchsorted(self._edges, ms))] += 1
-        self.count += 1
-        self.total_ms += ms
-        self.max_ms = max(self.max_ms, ms)
-
-    def percentile(self, p: float) -> float:
-        """p in [0, 100]; 0.0 when empty."""
-        if not self.count:
-            return 0.0
-        target = max(1, int(np.ceil(p / 100.0 * self.count)))
-        idx = int(np.searchsorted(np.cumsum(self._counts), target))
-        if idx >= self._edges.size:
-            return self.max_ms
-        return float(min(self._edges[idx], self.max_ms))
-
-    @property
-    def mean(self) -> float:
-        return self.total_ms / self.count if self.count else 0.0
 
 
 _SHED_REASONS = ("queue_full", "deadline_expired", "shutdown", "not_mutable")

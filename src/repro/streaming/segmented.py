@@ -49,6 +49,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import index_io
 from repro.core.api import (IndexSpec, RouteReport, SearchRequest,
                             SearchResult, SegmentReport)
@@ -273,8 +274,11 @@ class SegmentedIndex:
         No-op (returns None) on an empty delta."""
         if len(self.delta) == 0:
             return None
-        ext, vecs, lo, hi = self.delta.live()
-        seg = self._freeze(ext, vecs, lo, hi)
+        with obs.span("flush") as fsp:
+            ext, vecs, lo, hi = self.delta.live()
+            fsp.set("rows", int(ext.shape[0]))
+            seg = self._freeze(ext, vecs, lo, hi)
+            fsp.set("segment", seg.seg_id)
         self.delta.clear()
         self.ops["flushes"] += 1
         return seg.seg_id
@@ -293,6 +297,8 @@ class SegmentedIndex:
                                                   for s in self.segments])]
         if not victims or (len(victims) == 1 and not victims[0].tombs):
             return {"merged": [], "new_segment": None, "rows": 0, "dropped": 0}
+        csp = obs.span("compact")
+        csp.set("victims", len(victims))
         parts = [s.live_rows() for s in victims]
         ext = np.concatenate([p[0] for p in parts])
         dropped = sum(len(s.tombs) for s in victims)
@@ -313,6 +319,7 @@ class SegmentedIndex:
             self.segments.insert(pos, seg)
             new_id = seg.seg_id
         self.ops["compactions"] += 1
+        csp.set("rows", int(ext.size)).set("dropped", dropped).stop()
         return {"merged": victim_ids, "new_segment": new_id,
                 "rows": int(ext.size), "dropped": dropped}
 
@@ -329,6 +336,19 @@ class SegmentedIndex:
         if not isinstance(request, SearchRequest):
             raise TypeError("SegmentedIndex serves the declarative API only; "
                             "pass a repro.core.SearchRequest")
+        tracer = obs.begin_request_trace() if request.trace else None
+        try:
+            with obs.span("segmented_search") as root:
+                root.set("Q", len(request)).set("k", request.k)
+                root.set("segments", len(self.segments))
+                result = self._execute_fanout(request)
+        finally:
+            trace = obs.end_request_trace(tracer)
+        if trace is not None:
+            result = dataclasses.replace(result, trace=trace)
+        return result
+
+    def _execute_fanout(self, request: SearchRequest) -> SearchResult:
         Q, k = len(request), request.k
         ids_list: List[np.ndarray] = []
         d_list: List[np.ndarray] = []
@@ -340,16 +360,20 @@ class SegmentedIndex:
             # the graph route's beam pool is ef wide — raise ef with k_eff or
             # the over-fetch would silently truncate to ef columns and
             # tombstone filtering could evict true neighbors after all
-            res = self._engine(seg).execute(dataclasses.replace(
-                request, k=k_eff, ef=max(request.ef, k_eff)))
-            ext = np.where(res.ids >= 0,
-                           seg.ext_ids[np.clip(res.ids, 0, None)],
-                           np.int64(NO_EDGE))
-            dists = np.asarray(res.dists, np.float32)
-            if seg.tombs:
-                dead = np.isin(ext, seg.tomb_array())
-                ext = np.where(dead, np.int64(NO_EDGE), ext)
-                dists = np.where(dead, np.float32(np.inf), dists)
+            with obs.span(f"segment-{seg.seg_id}") as ssp:
+                res = self._engine(seg).execute(dataclasses.replace(
+                    request, k=k_eff, ef=max(request.ef, k_eff)))
+                if obs.tracing():
+                    ssp.set("n", seg.n).set("route", res.report.route)
+                    ssp.set("tombstones", len(seg.tombs))
+                ext = np.where(res.ids >= 0,
+                               seg.ext_ids[np.clip(res.ids, 0, None)],
+                               np.int64(NO_EDGE))
+                dists = np.asarray(res.dists, np.float32)
+                if seg.tombs:
+                    dead = np.isin(ext, seg.tomb_array())
+                    ext = np.where(dead, np.int64(NO_EDGE), ext)
+                    dists = np.where(dead, np.float32(np.inf), dists)
             ids_list.append(ext)
             d_list.append(dists)
             rep = res.report
@@ -361,15 +385,18 @@ class SegmentedIndex:
                 segment=seg.seg_id, n=seg.n, route=rep.route, k_fetched=k_eff,
                 tombstones=len(seg.tombs), slot_count=rep.slot_count))
         if len(self.delta):
-            ext, dists = self.delta.search(
-                request.vectors, request.qlo, request.qhi, request.mask, k,
-                use_kernel=self.engine_config.use_kernel)
+            with obs.span("delta") as dsp:
+                dsp.set("n", len(self.delta))
+                ext, dists = self.delta.search(
+                    request.vectors, request.qlo, request.qhi, request.mask,
+                    k, use_kernel=self.engine_config.use_kernel)
             ids_list.append(ext)
             d_list.append(dists)
             seg_reports.append(SegmentReport(
                 segment=DELTA, n=len(self.delta), route=DELTA,
                 k_fetched=ext.shape[1]))
-        ids, dists = _merge_topk_host(ids_list, d_list, Q, k)
+        with obs.span("merge"):
+            ids, dists = _merge_topk_host(ids_list, d_list, Q, k)
         report = RouteReport(
             route="segmented", requested=request.route or "auto",
             est_selectivity=None, slot_count=slot_count,
