@@ -1,0 +1,276 @@
+"""Exp. 15 — quantized vector tier: compressed-scan QPS vs float32 at
+matched recall (tentpole of the int8 storage PR).
+
+Three lanes, one per engine route:
+
+* **flat** — the headline. A scan-dominated corpus (graph-free index,
+  ``variants=()``) served at every storage tier. The float32 route runs the
+  fused one-shot ``flat_search``; compressed tiers run the blocked
+  compressed scan (``compressed_flat_topr``: per-block dequant in cache,
+  running top-R) + exact float32 re-rank. The compressed scan streams
+  1 byte/component instead of 4 — on bandwidth-bound backends that is the
+  whole win; on this CPU box part of the measured speedup also comes from
+  the blocked scan never materializing the (Q, N) distance matrix the
+  fused path writes. Both effects only exist because the code tier fits
+  blocks in cache, so the ratio is reported as one honest number
+  (``flat_speedup``) with per-tier QPS alongside.
+* **pruned** — selectivity-pruned exact scan over a ``builder="scan"``
+  index (member structure without graphs, so the lane can afford a corpus
+  where scanning dominates): gathers code rows (1 B/component) instead of
+  float32 rows, then re-ranks.
+* **graph** — recall parity check at small n (real graph build): the beam
+  gathers + dequantizes code tiles; end recall must match float32 after
+  the re-rank.
+
+Every lane measures recall@k against the numpy brute-force oracle, so the
+speedups are *at matched recall*: the gate is ``recall(float32) -
+recall(tier) <= 0.01``. A ``rerank_k`` sweep documents how the exact
+re-rank closes the quantization gap (recall-delta curve).
+
+Writes ``BENCH_compression.json``; ``--history`` appends
+``compressed_scan_qps`` (gated by ``ci_gate``) + ``compressed_speedup`` +
+``compressed_recall_drop`` to the shared bench trajectory file. Exits
+non-zero if a recall gate fails (deterministic); speedup regressions are
+left to ``ci_gate`` vs history, which tolerates runner noise.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (ANY_OVERLAP, QUERY_CONTAINED, EngineConfig,
+                        MSTGIndex, QueryEngine, SearchRequest,
+                        maybe_quantize, intervals as iv)
+from repro.data import (brute_force_topk, make_queries, make_range_dataset,
+                        recall_at_k)
+
+from .common import emit, time_call
+
+TIERS = ("float32", "int8", "float16")
+RECALL_DROP_GATE = 0.01
+FLAT_SPEEDUP_GATE = 2.0
+
+
+def _engine(idx, tier, route, rerank_k=None, use_kernel=False):
+    return QueryEngine(idx, config=EngineConfig(
+        route=route, rerank_k=rerank_k, use_kernel=use_kernel,
+        storage_dtype=None if tier == "float32" else tier))
+
+
+def _qps(engine, req, repeats):
+    dt, _ = time_call(engine.execute, req, repeats=repeats, best=True)
+    return round(len(req) / dt, 2)
+
+
+def _bytes_per_vector(vectors, tier) -> float:
+    st = maybe_quantize(vectors, tier)
+    if st is None:
+        return float(4 * vectors.shape[1])
+    return round(st.bytes_breakdown()["total"] / vectors.shape[0], 2)
+
+
+def flat_lane(n, d, Q, k, repeats, seed=3) -> dict:
+    """Scan-dominated corpus: graph-free index, every tier, ANY_OVERLAP at
+    moderate selectivity (the flat route's home regime)."""
+    ds = make_range_dataset(n=n, d=d, n_queries=Q, quantize=64, seed=seed)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.5, seed=seed + 1)
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=())
+    true_ids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                   qlo, qhi, ANY_OVERLAP, k)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=k,
+                        route="flat")
+    rows = {}
+    for tier in TIERS:
+        eng = _engine(idx, tier, "flat")
+        res = eng.execute(req)
+        rows[tier] = {
+            "qps": _qps(eng, req, repeats),
+            "recall": round(float(recall_at_k(res.ids, true_ids)), 4),
+            "bytes_per_vector": _bytes_per_vector(ds.vectors, tier),
+        }
+        print(f"  flat {tier:8s}: qps={rows[tier]['qps']:>9} "
+              f"recall={rows[tier]['recall']} "
+              f"B/vec={rows[tier]['bytes_per_vector']}")
+    # rerank_k sweep on the int8 tier: the recall-delta curve the README
+    # tuning section points at
+    curve = []
+    for R in (k, 2 * k, 4 * k, 8 * k):
+        eng = _engine(idx, "int8", "flat", rerank_k=R)
+        res = eng.execute(req)
+        curve.append({"rerank_k": R,
+                      "recall": round(float(recall_at_k(res.ids, true_ids)),
+                                      4)})
+    return {"sizes": {"n": n, "d": d, "Q": Q, "k": k},
+            "tiers": rows,
+            "rerank_curve": curve,
+            "flat_speedup": round(rows["int8"]["qps"]
+                                  / max(rows["float32"]["qps"], 1e-9), 3),
+            "recall_drop": round(rows["float32"]["recall"]
+                                 - rows["int8"]["recall"], 4)}
+
+
+def pruned_lane(n, d, Q, k, repeats, seed=11) -> dict:
+    """Selectivity-pruned scan over a scan-only build (members, no graphs):
+    the compressed gather reads 1 B/component code rows."""
+    ds = make_range_dataset(n=n, d=d, n_queries=Q, quantize=32, seed=seed)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.15, seed=seed + 1)
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
+                    builder="scan")
+    true_ids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                   qlo, qhi, ANY_OVERLAP, k)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=k,
+                        route="pruned")
+    rows = {}
+    for tier in ("float32", "int8"):
+        eng = _engine(idx, tier, "pruned")
+        res = eng.execute(req)
+        rows[tier] = {
+            "qps": _qps(eng, req, repeats),
+            "recall": round(float(recall_at_k(res.ids, true_ids)), 4),
+        }
+        print(f"  pruned {tier:8s}: qps={rows[tier]['qps']:>9} "
+              f"recall={rows[tier]['recall']}")
+    return {"sizes": {"n": n, "d": d, "Q": Q, "k": k},
+            "tiers": rows,
+            "pruned_speedup": round(rows["int8"]["qps"]
+                                    / max(rows["float32"]["qps"], 1e-9), 3),
+            "recall_drop": round(rows["float32"]["recall"]
+                                 - rows["int8"]["recall"], 4)}
+
+
+def graph_lane(n, d, Q, k, repeats, seed=7) -> dict:
+    """Recall-parity check on the beam route (real graph build, small n):
+    the wavefront gathers + dequantizes int8 tiles mid-search and the
+    engine re-ranks the pool exactly."""
+    ds = make_range_dataset(n=n, d=d, n_queries=Q, quantize=64, seed=seed)
+    qlo, qhi = make_queries(ds, QUERY_CONTAINED, 0.3, seed=seed + 1)
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"), m=12,
+                    ef_con=64)
+    true_ids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                   qlo, qhi, QUERY_CONTAINED, k)
+    req = SearchRequest(ds.queries, (qlo, qhi), QUERY_CONTAINED, k=k,
+                        ef=96, route="graph")
+    rows = {}
+    for tier in TIERS:
+        eng = _engine(idx, tier, "graph")
+        res = eng.execute(req)
+        rows[tier] = {
+            "qps": _qps(eng, req, repeats),
+            "recall": round(float(recall_at_k(res.ids, true_ids)), 4),
+        }
+        print(f"  graph {tier:8s}: qps={rows[tier]['qps']:>9} "
+              f"recall={rows[tier]['recall']}")
+    return {"sizes": {"n": n, "d": d, "Q": Q, "k": k, "ef": 96},
+            "tiers": rows,
+            "recall_drop": round(rows["float32"]["recall"]
+                                 - rows["int8"]["recall"], 4)}
+
+
+def run_compression_bench(out_path="BENCH_compression.json", *,
+                          flat_n=200_000, pruned_n=60_000, graph_n=2500,
+                          d=64, Q=16, k=10, repeats=3,
+                          history_path=None) -> dict:
+    report = {"schema": 1, "unix_time": time.time(),
+              "platform": platform.platform(),
+              "gates": {"recall_drop_max": RECALL_DROP_GATE,
+                        "flat_speedup_min": FLAT_SPEEDUP_GATE}}
+    print(f"flat lane (n={flat_n}, d={d}) ...")
+    report["flat"] = flat_lane(flat_n, d, Q, k, repeats)
+    print(f"pruned lane (n={pruned_n}, d={d}) ...")
+    report["pruned"] = pruned_lane(pruned_n, d, Q, k, repeats)
+    print(f"graph lane (n={graph_n}, d={d}) ...")
+    report["graph"] = graph_lane(graph_n, d, Q, k, repeats)
+
+    ft = report["flat"]["tiers"]
+    report["headline"] = {
+        "compressed_scan_qps": ft["int8"]["qps"],
+        "float32_scan_qps": ft["float32"]["qps"],
+        "flat_speedup": report["flat"]["flat_speedup"],
+        "pruned_speedup": report["pruned"]["pruned_speedup"],
+        "bytes_per_vector": {t: ft[t]["bytes_per_vector"] for t in TIERS},
+        "compression_ratio": round(ft["float32"]["bytes_per_vector"]
+                                   / ft["int8"]["bytes_per_vector"], 2),
+        "recall_drop": {"flat": report["flat"]["recall_drop"],
+                        "pruned": report["pruned"]["recall_drop"],
+                        "graph": report["graph"]["recall_drop"]},
+    }
+    drops = report["headline"]["recall_drop"]
+    report["gates"]["recall_ok"] = bool(all(v <= RECALL_DROP_GATE
+                                            for v in drops.values()))
+    report["gates"]["flat_speedup_ok"] = bool(
+        report["flat"]["flat_speedup"] >= FLAT_SPEEDUP_GATE)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}")
+    print(json.dumps(report["headline"], indent=2))
+    if history_path:
+        record = {
+            "commit": os.environ.get("GITHUB_SHA", "local")[:12],
+            "unix_time": round(report["unix_time"], 1),
+            "platform": report["platform"],
+            "compressed_scan_qps": report["headline"]["compressed_scan_qps"],
+            "compressed_speedup": report["headline"]["flat_speedup"],
+            "compressed_recall_drop": max(drops.values()),
+        }
+        with open(history_path, "a") as f:
+            f.write(json.dumps(record, sort_keys=True) + "\n")
+        print(f"appended {history_path}: {json.dumps(record, sort_keys=True)}")
+    if not report["gates"]["recall_ok"]:
+        print(f"RECALL GATE FAILED: drops {drops} > {RECALL_DROP_GATE}",
+              file=sys.stderr)
+        sys.exit(1)
+    return report
+
+
+def run():
+    """CSV mode (benchmarks.run full lane): int8 vs float32 flat scan on the
+    shared bench corpus."""
+    from .common import bench_dataset, K
+    ds = bench_dataset()
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.5, seed=4)
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=())
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=K,
+                        route="flat")
+    for tier in TIERS:
+        eng = _engine(idx, tier, "flat")
+        dt, _ = time_call(eng.execute, req, repeats=3, best=True,
+                          name=f"exp15/flat_{tier}")
+        emit(f"exp15/flat_{tier}_us", dt * 1e6 / len(req),
+             f"n={ds.n};d={ds.d}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI sizes; writes BENCH_compression.json")
+    ap.add_argument("--out", default="BENCH_compression.json")
+    ap.add_argument("--history", default=None, metavar="PATH",
+                    help="append compressed_scan_qps JSON line")
+    ap.add_argument("--flat-n", type=int, default=None)
+    ap.add_argument("--pruned-n", type=int, default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        run_compression_bench(out_path=args.out,
+                              # n=200k keeps the float32 fused scan in its
+                              # bandwidth-bound regime (the corpus no longer
+                              # fits in LLC); smaller n understates the
+                              # compressed win and is not the paper's setting
+                              flat_n=args.flat_n or 200_000,
+                              pruned_n=args.pruned_n or 60_000,
+                              graph_n=2000, history_path=args.history)
+    else:
+        run_compression_bench(out_path=args.out,
+                              flat_n=args.flat_n or 200_000,
+                              pruned_n=args.pruned_n or 100_000,
+                              graph_n=4000, history_path=args.history)
+
+
+if __name__ == "__main__":
+    main()

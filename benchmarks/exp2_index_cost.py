@@ -29,6 +29,21 @@ def run():
     ac = AcornLike(ds.vectors, ds.lo, ds.hi, m=12, ef_con=64)
     emit("exp2/acorn_build", (time.perf_counter() - t0) * 1e6,
          f"bytes={ac.index_bytes()}")
+    # per-tier storage rows: same corpus quantized at build, reporting the
+    # scan-side bytes and compression ratio next to the f32 baseline (the
+    # f32 re-rank corpus is charged to every tier — it stays host-side)
+    for tier in ("float32", "int8", "float16"):
+        t0 = time.perf_counter()
+        tidx = (idx if tier == "float32" else
+                MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T",),
+                          m=12, ef_con=64, storage_dtype=tier))
+        dt = 0.0 if tier == "float32" else time.perf_counter() - t0
+        sb = tidx.storage_bytes()
+        emit(f"exp2/storage_{tier}", dt * 1e6,
+             f"scan_bytes={sb['scan_bytes']};codes={sb['codes']};"
+             f"scales={sb['scales']};sq_norm={sb['sq_norm']};"
+             f"compression_ratio={sb['compression_ratio']:.3f}")
+
     # labeled-compression effectiveness: edges vs naive multi-tree bound
     fv = idx.variants["T"]
     naive_edges = 0

@@ -1,11 +1,16 @@
-"""Kernel microbenchmarks: fused-predicate pairwise L2 (interpret mode on CPU
-— structural validation; wall-time roofline numbers come from the TPU
-dry-run artifacts, see EXPERIMENTS.md §Roofline)."""
+"""Kernel microbenchmarks: fused-predicate pairwise L2 and the int8
+compressed-scan variants (interpret mode on CPU — structural validation;
+wall-time roofline numbers come from the TPU dry-run artifacts, see
+EXPERIMENTS.md §Roofline). Each row reports the kernel's *modeled* byte
+stream (``ops.pairwise_stream_bytes`` / ``ops.gathered_stream_bytes`` at the
+table's storage itemsize) so the f32-vs-int8 comparison is apples-to-apples:
+the compressed rows move ~4x fewer table bytes for the same logical work."""
 import numpy as np
 
 import jax.numpy as jnp
 
 from repro.core import ANY_OVERLAP
+from repro.core.quant import QuantizedStore
 from repro.kernels import ops
 from repro.kernels.ref import pairwise_l2_masked_ref
 
@@ -28,8 +33,21 @@ def run():
     emit("kernel/pairwise_ref_jnp", dt * 1e6, f"gflops={flops/dt/1e9:.2f}")
     dt, _ = time_call(lambda: np.asarray(ops.pairwise_l2_masked(
         q, c, lo, hi, ql, qh, ANY_OVERLAP)))
+    sb32 = ops.pairwise_stream_bytes(Qn, Nn, d, 4)
     emit("kernel/pairwise_pallas_interpret", dt * 1e6,
-         "correctness-path; TPU perf in dry-run")
+         f"stream={sb32/1e6:.2f}MB; correctness-path; TPU perf in dry-run")
+
+    # int8 compressed scan: same logical work, ~4x fewer table bytes. The
+    # modeled stream uses itemsize=1 for the code table; achieved GB/s in
+    # interpret mode is meaningless, but the byte model IS the artifact the
+    # roofline dry-run multiplies through.
+    st = QuantizedStore.from_vectors(c, "int8")
+    dt8, _ = time_call(lambda: np.asarray(ops.pairwise_l2_int8(
+        q, st.codes, st.scale, st.offset, st.sq_norm,
+        lo, hi, ql, qh, ANY_OVERLAP)))
+    sb8 = ops.pairwise_stream_bytes(Qn, Nn, d, 1)
+    emit("kernel/pairwise_int8_interpret", dt8 * 1e6,
+         f"stream={sb8/1e6:.2f}MB ({sb32/sb8:.2f}x fewer bytes than f32)")
 
     # beam-candidate distances (graph-search inner step, gather left to XLA)
     S = 24
@@ -44,6 +62,16 @@ def run():
     dt, _ = time_call(lambda: np.asarray(ops.gathered_topk_ref(
         *(jnp.asarray(a) for a in wf))[1]))
     emit("kernel/gathered_topk_ref_jnp", dt * 1e6, "M=24;L=32")
+
+    # quantized wavefront step: gathers int8 rows + dequantizes in VMEM
+    q_, table, *rest = wf
+    tst = QuantizedStore.from_vectors(table, "int8")
+    gb32 = ops.gathered_stream_bytes(Qn, S, 32, d, 4)
+    gb8 = ops.gathered_stream_bytes(Qn, S, 32, d, 1)
+    dt, _ = time_call(lambda: np.asarray(ops.gathered_topk_quant(
+        q_, tst.codes, tst.scale, tst.offset, *rest)[1]))
+    emit("kernel/gathered_topk_int8_interpret", dt * 1e6,
+         f"M={S};L=32;stream={gb8/1e3:.1f}KB ({gb32/gb8:.2f}x fewer than f32)")
 
 
 def _wavefront_step_inputs(rng, Q, n, d, M, L):

@@ -76,11 +76,11 @@ def main() -> None:
                    exp5_tsann, exp6_scalability, exp7_selectivity,
                    exp8_distributions, exp9_oracle, exp10_params,
                    exp11_updates, exp12_wavefront, exp13_serving,
-                   exp14_obs, kernel_bench)
+                   exp14_obs, exp15_compression, kernel_bench)
     mods = [exp1_rrann, exp2_index_cost, exp3_rfann, exp4_ifann, exp5_tsann,
             exp6_scalability, exp7_selectivity, exp8_distributions,
             exp9_oracle, exp10_params, exp11_updates, exp12_wavefront,
-            exp13_serving, exp14_obs, kernel_bench]
+            exp13_serving, exp14_obs, exp15_compression, kernel_bench]
     print("name,us_per_call,derived")
     failed = 0
     for mod in mods:

@@ -125,6 +125,11 @@ def append_history(report: dict, history_path: str) -> dict:
         "wasted_eval_frac": report.get("wasted_eval_frac"),
         "update_recall": streaming.get("update_recall"),
         "update_ops_per_sec": streaming.get("update_ops_per_sec"),
+        "int8_recall_at_10": report.get("compression", {})
+                                   .get("int8", {}).get("recall_at_10_flat"),
+        "int8_compression_ratio": report.get("compression", {})
+                                        .get("int8", {})
+                                        .get("compression_ratio"),
     }
     if report.get("errors"):
         record["errors"] = sorted(report["errors"])
@@ -151,7 +156,7 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
               n_queries: int = 16, k: int = 10, mask: int = ANY_OVERLAP,
               history_path: str = None) -> dict:
     report: dict = {
-        "schema": 5,
+        "schema": 6,
         "unix_time": time.time(),
         "platform": platform.platform(),
         "mask": iv.mask_name(mask),
@@ -170,6 +175,10 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
                                "total": round(time.perf_counter() - t0, 4)}
     report["builder"] = idx.spec.builder
     report["index_bytes"] = idx.index_bytes()
+    # schema 6: per-tier storage accounting (codes/scales/sq_norm vs the
+    # float32 re-rank corpus) — compression_ratio is 1.0 on this f32 build;
+    # the quantized-tier ratio + recall parity land in sec_compression
+    report["storage_bytes"] = idx.storage_bytes()
 
     eng = QueryEngine(idx)
 
@@ -269,11 +278,35 @@ def run_smoke(out_path: str = "BENCH_smoke.json", n: int = 800, d: int = 32,
             "gathered_topk_interpret_us": round(dt_gtk * 1e6, 1),
             "gathered_topk_ref_us": round(dt_gtk_ref * 1e6, 1)}
 
+    def sec_compression():
+        # quantized tier at smoke scale: bytes-per-vector + recall parity vs
+        # the f32 engine on the same queries (QPS at n=800 is meaningless —
+        # the speedup headline lives in exp15 / BENCH_compression.json)
+        from repro.core import EngineConfig
+        qlo, qhi = make_queries(ds, mask, 0.10, seed=11)
+        tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                   qlo, qhi, mask, k)
+        comp = {}
+        for tier in ("int8", "float16"):
+            qidx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
+                             m=12, ef_con=64, storage_dtype=tier)
+            qeng = QueryEngine(qidx, config=EngineConfig())
+            sb = qidx.storage_bytes()
+            row = {"compression_ratio": round(sb["compression_ratio"], 3),
+                   "scan_bytes": sb["scan_bytes"]}
+            for route in ("flat", "graph"):
+                res = qeng.search(SearchRequest(ds.queries, (qlo, qhi), mask,
+                                                k=k, ef=64, route=route))
+                row[f"recall_at_10_{route}"] = round(res.recall_vs(tids), 4)
+            comp[tier] = row
+        report["compression"] = comp
+
     # each section is isolated: one failing experiment records an error and
     # the rest still produce their metrics (and the history line)
     for name, fn in (("exp1_rrann", sec_exp1), ("wavefront", sec_wavefront),
                      ("planner", sec_planner), ("streaming", sec_streaming),
-                     ("kernel", sec_kernel)):
+                     ("kernel", sec_kernel),
+                     ("compression", sec_compression)):
         _section(report, name, fn)
 
     with open(out_path, "w") as f:

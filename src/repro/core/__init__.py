@@ -28,6 +28,8 @@ from .predicates import (Predicate, LeftOverlap, RightOverlap, QueryContained,
 from .api import (IndexSpec, QueryHit, Rejected, RouteReport, SearchRequest,
                   SearchResult, SegmentReport, Served, ShardReport)
 from .mstg import MSTGIndex, FrozenVariant, build_variant
+from .quant import STORAGE_DTYPES, QuantizedStore, maybe_quantize
+from .compressed import compressed_flat_topr, exact_rerank
 from .search import (WavefrontStream, mstg_graph_search,
                      mstg_graph_search_chunked, merge_topk)
 from .flat import flat_search
@@ -46,6 +48,9 @@ __all__ = [
     "build_variant", "AttributeDomain", "mstg_graph_search",
     "mstg_graph_search_chunked", "WavefrontStream", "merge_topk",
     "flat_search",
+    # quantized storage tier
+    "STORAGE_DTYPES", "QuantizedStore", "maybe_quantize",
+    "compressed_flat_topr", "exact_rerank",
     # planner internals
     "SearchTask", "PlanSlot", "plan_searches", "plan_batch_ranked",
     "eval_predicate", "mask_name", "parse_mask", "SelectivityIndex",

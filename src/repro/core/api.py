@@ -418,8 +418,14 @@ class IndexSpec:
     the construction path — ``"bulk"`` (batched, the default) or
     ``"incremental"`` (the paper-exact reference oracle) — and
     ``batch_size`` tunes the bulk path's batch width (None = its default).
+    ``storage_dtype`` selects the vector storage tier ("float32" exact,
+    "float16"/"int8" scalar-quantized codes + exact re-rank at query time
+    — :mod:`repro.core.quant`); because it lives on the spec it travels
+    through persistence *and* through streaming flush/compact, so
+    segments quantize in the background automatically.
     The spec is stored on the index and persisted by ``save()``; artifacts
-    written before the ``builder`` field existed load as ``"bulk"``.
+    written before the ``builder`` / ``storage_dtype`` fields existed load
+    as ``"bulk"`` / ``"float32"``.
     """
 
     predicate: Predicate = None
@@ -430,6 +436,7 @@ class IndexSpec:
     n_entries: int = 4
     builder: str = "bulk"
     batch_size: Optional[int] = None
+    storage_dtype: str = "float32"
 
     def __post_init__(self):
         from . import intervals as iv
@@ -444,13 +451,17 @@ class IndexSpec:
         if self.batch_size is not None and self.batch_size < 1:
             raise ValueError("batch_size must be >= 1 (or None for the "
                              "builder default)")
+        from .quant import check_storage_dtype  # deferred, like BUILDERS
+        object.__setattr__(self, "storage_dtype",
+                           check_storage_dtype(self.storage_dtype))
 
     def to_dict(self) -> dict:
         return {"predicate": self.predicate.mask,
                 "variants": list(self.variants) if self.variants else None,
                 "m": self.m, "ef_con": self.ef_con, "m_max": self.m_max,
                 "n_entries": self.n_entries, "builder": self.builder,
-                "batch_size": self.batch_size}
+                "batch_size": self.batch_size,
+                "storage_dtype": self.storage_dtype}
 
     @classmethod
     def from_dict(cls, d: dict) -> "IndexSpec":
@@ -460,4 +471,5 @@ class IndexSpec:
                    m=d["m"], ef_con=d["ef_con"], m_max=d["m_max"],
                    n_entries=d["n_entries"],
                    builder=d.get("builder", "bulk"),
-                   batch_size=d.get("batch_size"))
+                   batch_size=d.get("batch_size"),
+                   storage_dtype=d.get("storage_dtype", "float32"))

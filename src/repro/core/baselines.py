@@ -54,6 +54,16 @@ class BaseIndex:
     def index_bytes(self) -> int:
         return 0
 
+    def storage_bytes(self) -> dict:
+        """Per-tier byte accounting, same schema as
+        :meth:`repro.core.mstg.MSTGIndex.storage_bytes`. Baselines store only
+        the exact float32 corpus (no compressed tier), so the scan stream is
+        the full corpus and the ratio is 1."""
+        full = int(self.vectors.nbytes)
+        return {"storage_dtype": "float32", "float32_rerank": full,
+                "graph": self.index_bytes(), "codes": 0, "scales": 0,
+                "sq_norm": 0, "scan_bytes": full, "compression_ratio": 1.0}
+
 
 class Prefiltering(BaseIndex):
     name = "prefilter"
@@ -162,6 +172,9 @@ class IRangeGraphLike(BaseIndex):
 
     def index_bytes(self) -> int:
         return self.idx.index_bytes()
+
+    def storage_bytes(self) -> dict:
+        return self.idx.storage_bytes()
 
     def search(self, queries, qlo, qhi, mask: int = iv.RFANN_MASK, k: int = 10,
                ef: int = 64, **kw):

@@ -48,7 +48,10 @@ from .hnsw import LabeledLevelGraph
 
 logger = get_logger(__name__)
 
-BUILDERS = ("bulk", "incremental")
+# "scan" builds only the segment-tree member structure (flat/pruned routes,
+# no graphs — see repro.core.mstg.build_scan_variant); the other two build
+# the full labeled level graphs.
+BUILDERS = ("bulk", "incremental", "scan")
 DEFAULT_BATCH = 128
 
 

@@ -70,9 +70,11 @@ from repro import obs
 
 from . import intervals as iv
 from .api import RouteReport, SearchRequest, SearchResult
+from .compressed import compressed_flat_topr, exact_rerank, topr_from_dists
 from .flat import _pruned_search_variant, flat_search
 from .hnsw import NO_EDGE
 from .mstg import MSTGIndex
+from .quant import QuantizedStore, check_storage_dtype, maybe_quantize
 from .predicates import as_mask
 from .search import (DeviceVariant, merge_topk, mstg_graph_search,
                      mstg_graph_search_chunked)
@@ -178,6 +180,24 @@ class EngineConfig:
         deterministic — every ``round(1/trace_sample)``-th request — so a
         serving process gets a steady trickle of traces on
         ``SearchResult.trace`` rather than a random burst.
+    storage_dtype : str, optional
+        Vector storage tier the engine *scans*: ``"float32"`` (exact, the
+        default), ``"float16"``, or ``"int8"`` (per-dimension affine codes,
+        4 bytes/dim -> 1). ``None`` inherits the index's own tier
+        (``IndexSpec.storage_dtype``); an explicit value overrides it,
+        re-quantizing on the fly when the index was built at a different
+        tier. Compressed tiers scan approximate distances over the code
+        table and then re-rank the top ``rerank_k`` candidates against the
+        exact float32 rows, so end recall is preserved (see README "Vector
+        compression"). With a compressed tier the float32 corpus is never
+        staged on device — it stays host-side for the re-rank gather.
+    rerank_k : int, optional
+        How many approximate candidates per query survive to the exact
+        float32 re-rank when the storage tier is compressed. ``None``
+        (default) uses ``max(4 * k, 32)``; always clamped to
+        ``[k, corpus size]`` (and to ``ef`` on the graph route, which can
+        never rank more than its pool). Larger values close the recall gap
+        at the cost of a wider re-rank gather.
     """
 
     use_kernel: bool = False
@@ -191,6 +211,8 @@ class EngineConfig:
     graph_chunk: Union[int, str, None] = "auto"
     packed_visited: bool = True
     trace_sample: float = 0.0
+    storage_dtype: Optional[str] = None
+    rerank_k: Optional[int] = None
 
     def __post_init__(self):
         if self.route not in _ROUTES:
@@ -212,6 +234,11 @@ class EngineConfig:
         if not (0.0 <= self.trace_sample <= 1.0):
             raise ValueError("trace_sample must be in [0, 1], got "
                              f"{self.trace_sample!r}")
+        if self.storage_dtype is not None:
+            check_storage_dtype(self.storage_dtype)
+        if self.rerank_k is not None and self.rerank_k < 1:
+            raise ValueError("rerank_k must be >= 1 (or None: max(4k, 32)), "
+                             f"got {self.rerank_k!r}")
 
     def replace(self, **overrides) -> "EngineConfig":
         """A copy with ``overrides`` applied (re-validated)."""
@@ -271,7 +298,25 @@ class QueryEngine:
         self.graph_chunk = config.graph_chunk
         self.packed_visited = bool(config.packed_visited)
 
-        self.corpus = jnp.asarray(index.vectors, jnp.float32)
+        # storage tier: explicit config value wins over the index's own tier.
+        # The float32 corpus device copy is lazy (``self.corpus`` property):
+        # compressed configurations scan the code table and keep the exact
+        # rows host-side for the re-rank gather, so they never stage it.
+        sd = check_storage_dtype(config.storage_dtype
+                                 or getattr(index.spec, "storage_dtype",
+                                            "float32"))
+        self.storage_dtype = sd
+        store = getattr(index, "storage", None)
+        if sd == "float32":
+            store = None
+        elif store is None or store.dtype != sd:
+            store = QuantizedStore.from_vectors(index.vectors, sd)
+        self._store: Optional[QuantizedStore] = store
+        self._store_dev: Optional[dict] = None
+        # router work model: scanning 1-byte codes streams 1/4 the bytes of
+        # a float32 scan, so scan work is weighed by the tier's itemsize
+        self._scan_cost_ratio = (store.itemsize / 4.0) if store else 1.0
+        self._corpus_dev = None
         self.lo = jnp.asarray(index.lo, jnp.float32)
         self.hi = jnp.asarray(index.hi, jnp.float32)
         # per-route device staging is lazy (first use) so graph-only callers
@@ -335,20 +380,52 @@ class QueryEngine:
         self._m_sel_miss = sel_c.labels(outcome="miss")
 
     # ---- device staging (lazy, cached per variant) ----
+    @property
+    def corpus(self) -> jnp.ndarray:
+        """Device-staged float32 corpus, uploaded on first use. Compressed
+        storage tiers never touch it — the exact rows stay host-side and are
+        gathered per-batch for the re-rank."""
+        if self._corpus_dev is None:
+            self._corpus_dev = jnp.asarray(self.index.vectors, jnp.float32)
+        return self._corpus_dev
+
+    def store_dev(self) -> dict:
+        """Device-staged quantized store (codes + affine params), lazy.
+        ``codes`` is the row-major (n, d) table the gather paths read;
+        ``codes_t`` is the contiguous (d, n) panel layout the blocked
+        compressed scan consumes (see :func:`compressed_flat_topr`)."""
+        if self._store_dev is None:
+            st = self._store
+            self._store_dev = dict(
+                codes=jnp.asarray(st.codes),
+                codes_t=jnp.asarray(np.ascontiguousarray(st.codes.T)),
+                scale=jnp.asarray(st.scale),
+                offset=jnp.asarray(st.offset),
+                sq_norm=jnp.asarray(st.sq_norm))
+        return self._store_dev
+
     def graph_dev(self, variant: str) -> DeviceVariant:
         if variant not in self._graph_dev:
-            self._graph_dev[variant] = DeviceVariant(
-                self.index.variants[variant], self.corpus)
+            fv = self.index.variants[variant]
+            self._graph_dev[variant] = (
+                DeviceVariant(fv, None, store=self._store)
+                if self._store is not None else DeviceVariant(fv, self.corpus))
         return self._graph_dev[variant]
 
     def pruned_dev(self, variant: str) -> dict:
         if variant not in self._pruned_dev:
             fv = self.index.variants[variant]
-            self._pruned_dev[variant] = dict(
-                vectors=self.corpus,
-                members=jnp.asarray(fv.members),
-                member_ver=jnp.asarray(fv.member_ver),
-                node_off=jnp.asarray(fv.node_off))
+            dev = dict(members=jnp.asarray(fv.members),
+                       member_ver=jnp.asarray(fv.member_ver),
+                       node_off=jnp.asarray(fv.node_off))
+            if self._store is not None:
+                sd = self.store_dev()
+                dev.update(codes=sd["codes"], code_scale=sd["scale"],
+                           code_offset=sd["offset"],
+                           code_sq_norm=sd["sq_norm"])
+            else:
+                dev["vectors"] = self.corpus
+            self._pruned_dev[variant] = dev
         return self._pruned_dev[variant]
 
     def _sorted_sort_rank(self, variant: str) -> np.ndarray:
@@ -427,11 +504,15 @@ class QueryEngine:
         scan whenever its estimated work is below ``route_work_ratio`` times
         the beam's — at small corpora the scan wins far beyond any fixed 5%
         selectivity cutoff, and at millions of rows the crossover drops to
-        fractions of a percent, exactly as it should."""
+        fractions of a percent, exactly as it should. Scan work is weighed
+        by the storage tier's bytes-per-component (int8 codes stream 1/4 the
+        bytes of float32, so the bandwidth-bound scan stays competitive to
+        4x the selectivity); the beam gathers the same tier either way."""
         if self.flat_threshold is not None:
             return (ROUTE_PRUNED if float(est.mean()) <= self.flat_threshold
                     else ROUTE_GRAPH)
-        scan_work = float(est.mean()) * self.index.vectors.shape[0]
+        scan_work = (float(est.mean()) * self.index.vectors.shape[0]
+                     * self._scan_cost_ratio)
         beam_work = float(ef) * self._max_slots
         return (ROUTE_PRUNED if scan_work <= self.route_work_ratio * beam_work
                 else ROUTE_GRAPH)
@@ -624,6 +705,28 @@ class QueryEngine:
             return max(1, min(8, ef // 16))
         return 1
 
+    def _rerank_width(self, k: int, upper: Optional[int] = None) -> int:
+        """Approximate candidates per query surviving to the exact re-rank:
+        ``rerank_k`` (default ``max(4k, 32)``) clamped to [k, n] and to
+        ``upper`` (the graph pool width ``ef``) when given."""
+        n = self.index.vectors.shape[0]
+        R = self.config.rerank_k or max(4 * k, 32)
+        if upper is not None:
+            R = min(R, upper)
+        return max(k, min(R, n))
+
+    def _rerank_exact(self, qdev, cand_ids, k: int):
+        """Exact float32 re-rank of approximate top-R candidate ids: gather
+        the exact rows host-side (the f32 corpus is never device-staged on a
+        compressed tier) and re-rank on device."""
+        cand = np.asarray(cand_ids)
+        rows = self.index.vectors[np.clip(cand, 0, None)]
+        with obs.span("rerank") as rsp:
+            if obs.tracing():
+                rsp.set("R", int(cand.shape[1]))
+            return exact_rerank(qdev, jnp.asarray(rows), jnp.asarray(cand),
+                                k=k)
+
     def _run_graph(self, queries, qlo, qhi, mask, k, ef, max_steps, fanout,
                    slots: Optional[List[iv.PlanSlot]] = None,
                    chunk: Optional[int] = None):
@@ -637,6 +740,10 @@ class QueryEngine:
         slots = self._padded_slots(slots, queries_p.shape[0])
         steps = max_steps or ((4 * ef + 64) // F + 8)
         qdev = jnp.asarray(queries_p)
+        # compressed tier: the beam ranks approximate (dequantized-gather)
+        # distances, so carry top-R of the pool through the merge and
+        # re-rank exactly at the end. R can't exceed the pool width ef.
+        kq = k if self._store is None else self._rerank_width(k, upper=ef)
         res = None
         for s in slots:
             # skip slots where every query's task is empty before any device
@@ -645,7 +752,7 @@ class QueryEngine:
             if not np.any((s.version >= 0) & (s.key_lo <= s.key_hi)):
                 continue
             dv = self.graph_dev(s.variant)
-            common = dict(k=k, ef=ef, max_steps=steps, Kpad=dv.meta.Kpad,
+            common = dict(k=kq, ef=ef, max_steps=steps, Kpad=dv.meta.Kpad,
                           use_kernel=self.use_kernel, fanout=F,
                           packed=self.packed_visited)
             with obs.span("slot") as ssp:
@@ -660,9 +767,12 @@ class QueryEngine:
                         dv.tree(), qdev, jnp.asarray(s.version, jnp.int32),
                         jnp.asarray(s.key_lo, jnp.int32),
                         jnp.asarray(s.key_hi, jnp.int32), **common)
-            res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
+            res = (ids, d) if res is None else merge_topk(res[0], res[1], ids,
+                                                          d, kq)
         if res is None:
             return _empty_result(queries_p.shape[0], k)
+        if self._store is not None:
+            return self._rerank_exact(qdev, res[0], k)
         return res
 
     def _run_pruned(self, queries, qlo, qhi, mask, k, block: int = 256,
@@ -676,6 +786,9 @@ class QueryEngine:
         qdev = jnp.asarray(queries_p)
         qlo_j = jnp.asarray(qlo_p, jnp.float32)
         qhi_j = jnp.asarray(qhi_p, jnp.float32)
+        # compressed tier: scan distances are approximate, so keep top-R per
+        # slot and through the merge, then re-rank exactly once at the end
+        kq = k if self._store is None else self._rerank_width(k)
         res = None
         for s in slots:
             fv = self.index.variants[s.variant]
@@ -698,16 +811,42 @@ class QueryEngine:
                     self.pruned_dev(s.variant), self.lo, self.hi, qdev,
                     qlo_j, qhi_j, jnp.asarray(s.version, jnp.int32),
                     jnp.asarray(s.key_lo, jnp.int32), jnp.asarray(s.key_hi, jnp.int32),
-                    pred_mask_bits=mask, k=k, Kpad=fv.Kpad, block=block,
+                    pred_mask_bits=mask, k=kq, Kpad=fv.Kpad, block=block,
                     max_blocks=-(-cap // block))
-            res = (ids, d) if res is None else merge_topk(res[0], res[1], ids, d, k)
+            res = (ids, d) if res is None else merge_topk(res[0], res[1], ids,
+                                                          d, kq)
         if res is None:
             return _empty_result(queries_p.shape[0], k)
+        if self._store is not None:
+            return self._rerank_exact(qdev, res[0], k)
         return res
 
     def _run_flat(self, queries, qlo, qhi, mask, k):
         queries_p, qlo_p, qhi_p = self._padded(queries, qlo, qhi)
-        return flat_search(self.corpus, self.lo, self.hi, jnp.asarray(queries_p),
-                           jnp.asarray(qlo_p, jnp.float32),
-                           jnp.asarray(qhi_p, jnp.float32),
-                           mask=mask, k=k, use_kernel=self.use_kernel)
+        qdev = jnp.asarray(queries_p)
+        qlo_j = jnp.asarray(qlo_p, jnp.float32)
+        qhi_j = jnp.asarray(qhi_p, jnp.float32)
+        if self._store is None:
+            return flat_search(self.corpus, self.lo, self.hi, qdev,
+                               qlo_j, qhi_j,
+                               mask=mask, k=k, use_kernel=self.use_kernel)
+        sd = self.store_dev()
+        R = self._rerank_width(k)
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+            if self._store.dtype == "int8":
+                approx = kops.pairwise_l2_int8(
+                    qdev, sd["codes"], sd["scale"], sd["offset"],
+                    sd["sq_norm"], self.lo, self.hi, qlo_j, qhi_j, mask)
+            else:
+                # float16 codes are affine-trivial (scale 1, offset 0): the
+                # float32 kernel's in-VMEM upcast of the streamed tile is
+                # exactly the dequantization
+                approx = kops.pairwise_l2_masked(qdev, sd["codes"], self.lo,
+                                                 self.hi, qlo_j, qhi_j, mask)
+            cand_ids, _ = topr_from_dists(approx, rerank=R)
+        else:
+            cand_ids, _ = compressed_flat_topr(
+                sd["codes_t"], sd["scale"], sd["offset"], sd["sq_norm"],
+                self.lo, self.hi, qdev, qlo_j, qhi_j, mask=mask, rerank=R)
+        return self._rerank_exact(qdev, cand_ids, k)

@@ -108,7 +108,19 @@ def _pruned_search_variant(arrays: dict, lo_attr, hi_attr, queries, ql, qh,
     fused distance + running top-k. ``pred_mask_bits`` re-checks the exact
     predicate on gathered candidates (cheap; guards rank-boundary ties and
     lets one variant serve any sub-mask of its plan)."""
-    vectors = arrays["vectors"]
+    # quantized layouts carry "codes" (+ affine params) instead of a float32
+    # "vectors" table; dict keys are static under jit, so this picks the
+    # gather source at trace time with no runtime branch
+    quantized = "codes" in arrays
+    vectors = None if quantized else arrays["vectors"]
+    if quantized:
+        # fold the affine dequant into the query side once (same identity as
+        # the compressed flat scan): dist = cq - 2 (q*scale).code + sq_norm.
+        # The gathered code tile is then consumed with a single cast +
+        # contraction — no per-element scale/offset pass, no diff tensor.
+        wq = queries * arrays["code_scale"][None, :]                  # (Q, d)
+        cq = (jnp.sum(queries * queries, axis=1)
+              - 2.0 * (queries @ arrays["code_offset"]))             # (Q,)
     members, member_ver = arrays["members"], arrays["member_ver"]
     node_off = arrays["node_off"]
     Q, d = queries.shape
@@ -162,8 +174,16 @@ def _pruned_search_variant(arrays: dict, lo_attr, hi_attr, queries, ql, qh,
         # exact predicate re-check on raw endpoints
         sel = iv.eval_predicate(pred_mask_bits, lo_attr[cand_safe], hi_attr[cand_safe],
                                 ql[:, None], qh[:, None]) & ok
-        diff = vectors[cand_safe] - queries[:, None, :]
-        dist = jnp.einsum("qbd,qbd->qb", diff, diff)
+        if quantized:
+            # gather code rows (1-2 bytes/component); distances are
+            # approximate and the engine re-ranks the merged top-R
+            cb = arrays["codes"][cand_safe].astype(jnp.float32)
+            dist = (cq[:, None]
+                    - 2.0 * jnp.einsum("qd,qbd->qb", wq, cb)
+                    + arrays["code_sq_norm"][cand_safe])
+        else:
+            diff = vectors[cand_safe] - queries[:, None, :]
+            dist = jnp.einsum("qbd,qbd->qb", diff, diff)
         dist = jnp.where(sel, dist, INF)
         cat_d = jnp.concatenate([top_d, dist], axis=1)
         cat_i = jnp.concatenate([top_i, jnp.where(sel, cand, NO_EDGE)], axis=1)

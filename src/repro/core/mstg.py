@@ -47,6 +47,7 @@ from .api import IndexSpec
 from .build import BUILDERS, bulk_insert_levels
 from .hnsw import OPEN, NO_EDGE, LabeledLevelGraph
 from .predicates import Predicate, as_mask
+from .quant import QuantizedStore, check_storage_dtype, maybe_quantize
 
 from repro.obs.log import get_logger
 
@@ -122,6 +123,57 @@ def _insert_incremental(vectors: np.ndarray, order: np.ndarray,
     return levels
 
 
+def build_scan_variant(rl: np.ndarray, rr: np.ndarray, K: int, variant: str,
+                       n_entries: int = 4) -> FrozenVariant:
+    """Scan-only MSTG construction (``builder="scan"``): the segment-tree
+    member structure — members grouped per node in ascending version order,
+    node offsets, entry seeds — without building any level graphs.
+
+    The pruned route only touches ``members``/``member_ver``/``node_off``/
+    ``sort_rank`` (plus the planner's domain), so this is everything it
+    needs, built in O(Lv * n log n) numpy instead of the superlinear graph
+    insertion pipeline — which makes pruned scans at n >= 100k feasible
+    (the full build is ~108 s at n=20k). Adjacency freezes as a single
+    all-``NO_EDGE`` slot: the *graph* route degrades to ranking the entry
+    seeds and is not meaningfully served by a scan-built variant.
+    """
+    n = int(rl.shape[0])
+    Kpad = st.padded_domain(K)
+    Lv = st.num_levels(Kpad)
+    E = n_entries
+    sort_rank, tkey = _variant_ranks(variant, rl, rr, K)
+    order = np.argsort(sort_rank, kind="stable")
+    nbr = np.full((Lv, n, 1), NO_EDGE, np.int32)
+    lab_b = np.zeros((Lv, n, 1), np.int32)
+    lab_e = np.zeros((Lv, n, 1), np.int32)
+    entry_ids = np.full((Lv, Kpad, E), NO_EDGE, np.int32)
+    entry_ver = np.full((Lv, Kpad, E), OPEN, np.int32)
+    members = np.zeros((Lv, n), np.int32)
+    member_ver = np.full((Lv, n), OPEN, np.int32)
+    node_off = np.zeros((Lv, Kpad + 1), np.int32)
+    tk = tkey.astype(np.int64)
+    for lvl in range(Lv):
+        node = tk >> (Lv - 1 - lvl)
+        # stable sort of the version-ordered rows by node keeps each node's
+        # slice in ascending version order — the prefix invariant the
+        # pruned scan's binary search relies on
+        mem = order[np.argsort(node[order], kind="stable")]
+        members[lvl] = mem
+        member_ver[lvl] = sort_rank[mem]
+        counts = np.bincount(node, minlength=Kpad)[:Kpad]
+        node_off[lvl, 1:] = np.cumsum(counts).astype(np.int32)
+        starts = node_off[lvl, :Kpad].astype(np.int64)
+        for e_i in range(E):
+            hasm = counts > e_i
+            entry_ids[lvl, hasm, e_i] = members[lvl][starts[hasm] + e_i]
+            entry_ver[lvl, hasm, e_i] = member_ver[lvl][starts[hasm] + e_i]
+    return FrozenVariant(variant=variant, K=K, Kpad=Kpad, Lv=Lv, n=n,
+                         sort_rank=sort_rank, tkey=tkey, nbr=nbr, lab_b=lab_b,
+                         lab_e=lab_e, entry_ids=entry_ids, entry_ver=entry_ver,
+                         members=members, member_ver=member_ver,
+                         node_off=node_off)
+
+
 def build_variant(vectors: np.ndarray, rl: np.ndarray, rr: np.ndarray, K: int,
                   variant: str, m: int = 16, ef_con: int = 100,
                   m_max: Optional[int] = None, n_entries: int = 4,
@@ -133,6 +185,8 @@ def build_variant(vectors: np.ndarray, rl: np.ndarray, rr: np.ndarray, K: int,
     (:mod:`repro.core.build`); ``builder="incremental"`` is the paper-exact
     per-object reference path. Both freeze to the identical array schema.
     """
+    if builder == "scan":
+        return build_scan_variant(rl, rr, K, variant, n_entries=n_entries)
     n = vectors.shape[0]
     Kpad = st.padded_domain(K)
     Lv = st.num_levels(Kpad)
@@ -200,7 +254,8 @@ class MSTGIndex:
                  m: int = 16, ef_con: int = 100, m_max: Optional[int] = None,
                  n_entries: int = 4, domain: Optional[iv.AttributeDomain] = None,
                  progress: Optional[int] = None, builder: str = "bulk",
-                 batch_size: Optional[int] = None):
+                 batch_size: Optional[int] = None,
+                 storage_dtype: str = "float32"):
         vectors = np.ascontiguousarray(vectors, dtype=np.float32)
         lo = np.asarray(lo, dtype=np.float64)
         hi = np.asarray(hi, dtype=np.float64)
@@ -212,14 +267,19 @@ class MSTGIndex:
         self.domain = domain or iv.AttributeDomain.from_ranges(lo, hi)
         self.rl = self.domain.rank(lo)
         self.rr = self.domain.rank(hi)
+        storage_dtype = check_storage_dtype(storage_dtype)
         self.params = dict(m=m, ef_con=ef_con, m_max=m_max, n_entries=n_entries,
                            builder=builder, batch_size=batch_size)
+        # quantize at build time (per index / per streaming segment — the
+        # scales fit THIS corpus); None for float32
+        self.storage = maybe_quantize(vectors, storage_dtype)
         if variants is None:
             variants = iv.variants_required(mask if mask else iv.ANY_OVERLAP)
         self.spec = IndexSpec(predicate=Predicate(mask), variants=tuple(variants),
                               m=m, ef_con=ef_con, m_max=m_max,
                               n_entries=n_entries, builder=builder,
-                              batch_size=batch_size)
+                              batch_size=batch_size,
+                              storage_dtype=storage_dtype)
         self.build_seconds: Dict[str, float] = {}
         self.variants: Dict[str, FrozenVariant] = {}
         for v in variants:
@@ -242,7 +302,8 @@ class MSTGIndex:
                    variants=spec.variants, m=spec.m, ef_con=spec.ef_con,
                    m_max=spec.m_max, n_entries=spec.n_entries,
                    domain=domain, progress=progress, builder=spec.builder,
-                   batch_size=spec.batch_size)
+                   batch_size=spec.batch_size,
+                   storage_dtype=spec.storage_dtype)
 
     def to_payload(self) -> Tuple[Dict[str, np.ndarray], dict]:
         """The persisted form: (arrays, meta). Embedders (e.g. the streaming
@@ -251,7 +312,10 @@ class MSTGIndex:
         arrays = {"vectors": self.vectors,
                   "lo": self.lo, "hi": self.hi,
                   "domain_values": self.domain.values}
+        if self.storage is not None:
+            arrays.update(self.storage.to_arrays())
         meta = {"format": _INDEX_FORMAT, "format_version": _INDEX_FORMAT_VERSION,
+                "storage_dtype": self.spec.storage_dtype,
                 "spec": self.spec.to_dict(), "params": self.params,
                 "build_seconds": {k: float(v) for k, v in
                                   self.build_seconds.items()},
@@ -281,6 +345,17 @@ class MSTGIndex:
         self.rr = self.domain.rank(self.hi)
         self.params = dict(meta["params"])
         self.spec = IndexSpec.from_dict(meta["spec"])
+        # pre-storage-tier artifacts have neither the spec field nor the code
+        # arrays -> spec defaults to "float32" and storage stays None (old
+        # files keep loading, served exactly). A quantized spec whose code
+        # arrays are missing is re-quantized deterministically from the
+        # float32 corpus (same min/max -> same codes).
+        self.storage = None
+        if self.spec.storage_dtype != "float32":
+            self.storage = (QuantizedStore.from_arrays(self.spec.storage_dtype,
+                                                       arrays)
+                            or maybe_quantize(self.vectors,
+                                              self.spec.storage_dtype))
         self.build_seconds = dict(meta.get("build_seconds", {}))
         self.variants = {}
         for name, scal in meta["variants"].items():
@@ -337,6 +412,29 @@ class MSTGIndex:
 
     def index_bytes(self) -> int:
         return sum(v.nbytes() for v in self.variants.values())
+
+    def storage_bytes(self) -> dict:
+        """Per-tier byte accounting of the vector storage.
+
+        ``codes``/``scales``/``sq_norm`` are what a compressed scan streams;
+        ``float32_rerank`` is the exact corpus retained (host-side) for the
+        re-rank step; ``graph`` is the variant structure
+        (:meth:`index_bytes`). ``compression_ratio`` is the *scan-stream*
+        ratio — float32 corpus bytes over the bytes the scan actually reads
+        per pass — i.e. the bandwidth lever, not a total-RSS ratio.
+        """
+        full = int(self.vectors.nbytes)
+        out = {"storage_dtype": self.spec.storage_dtype,
+               "float32_rerank": full, "graph": self.index_bytes()}
+        if self.storage is None:
+            out.update(codes=0, scales=0, sq_norm=0,
+                       scan_bytes=full, compression_ratio=1.0)
+        else:
+            bb = self.storage.bytes_breakdown()
+            out.update(codes=bb["codes"], scales=bb["scales"],
+                       sq_norm=bb["sq_norm"], scan_bytes=bb["total"],
+                       compression_ratio=full / max(bb["total"], 1))
+        return out
 
     def predicate_select(self, mask: int, ql: float, qh: float) -> np.ndarray:
         return np.asarray(iv.eval_predicate(mask, self.lo, self.hi,

@@ -51,11 +51,24 @@ INF = jnp.inf
 
 
 class DeviceVariant:
-    """FrozenVariant arrays staged on device."""
+    """FrozenVariant arrays staged on device.
 
-    def __init__(self, fv: FrozenVariant, vectors: np.ndarray):
+    With ``store`` (a :class:`repro.core.quant.QuantizedStore`) the staged
+    vector table is the int8/float16 *code* matrix plus its (d,) affine
+    dequant params — the float32 corpus never reaches the device; the
+    wavefront dequantizes gathered candidate rows on the fly and the engine
+    re-ranks the final beam against the host-side float32 rows."""
+
+    def __init__(self, fv: FrozenVariant, vectors: np.ndarray, store=None):
         self.meta = fv
-        self.vectors = jnp.asarray(vectors, jnp.float32)
+        if store is not None:
+            self.vectors = jnp.asarray(store.codes)
+            self.vec_scale = jnp.asarray(store.scale, jnp.float32)
+            self.vec_offset = jnp.asarray(store.offset, jnp.float32)
+        else:
+            self.vectors = jnp.asarray(vectors, jnp.float32)
+            self.vec_scale = None
+            self.vec_offset = None
         self.sort_rank = jnp.asarray(fv.sort_rank)
         self.tkey = jnp.asarray(fv.tkey)
         self.nbr = jnp.asarray(fv.nbr)
@@ -68,11 +81,37 @@ class DeviceVariant:
         self.node_off = jnp.asarray(fv.node_off)
 
     def tree(self):
-        return dict(vectors=self.vectors, sort_rank=self.sort_rank,
-                    tkey=self.tkey, nbr=self.nbr, lab_b=self.lab_b,
-                    lab_e=self.lab_e, entry_ids=self.entry_ids,
-                    entry_ver=self.entry_ver, members=self.members,
-                    member_ver=self.member_ver, node_off=self.node_off)
+        t = dict(vectors=self.vectors, sort_rank=self.sort_rank,
+                 tkey=self.tkey, nbr=self.nbr, lab_b=self.lab_b,
+                 lab_e=self.lab_e, entry_ids=self.entry_ids,
+                 entry_ver=self.entry_ver, members=self.members,
+                 member_ver=self.member_ver, node_off=self.node_off)
+        # quant keys only exist on quantized layouts: their presence is
+        # static per jit trace, so float32 programs are unchanged
+        if self.vec_scale is not None:
+            t["vec_scale"] = self.vec_scale
+            t["vec_offset"] = self.vec_offset
+        return t
+
+
+def _tree_quant(arrays: dict):
+    """(scale, offset) when ``arrays`` is a quantized layout, else None.
+    Dict-key presence is resolved at trace time."""
+    if "vec_scale" in arrays:
+        return arrays["vec_scale"], arrays["vec_offset"]
+    return None
+
+
+def _gather_dequant(vectors, idx, quant):
+    """Gather rows by index and, on quantized tables, apply the affine
+    dequant to the gathered tile only (the full table stays compressed)."""
+    cand = vectors[idx]
+    if quant is None:
+        return cand
+    scale, offset = quant
+    shape = (1,) * (cand.ndim - 1) + (-1,)
+    return (cand.astype(jnp.float32) * scale.reshape(shape)
+            + offset.reshape(shape))
 
 
 def _batched_l2(queries: jnp.ndarray, cand_vecs: jnp.ndarray) -> jnp.ndarray:
@@ -150,7 +189,8 @@ def _plan_nodes(key_lo, key_hi, Kpad: int):
 
 
 def _init_state(vectors, entry_ids, entry_ver, queries, version,
-                levels, idxs, valid, *, L: int, dist_fn, packed: bool):
+                levels, idxs, valid, *, L: int, dist_fn, packed: bool,
+                quant=None):
     """Initial pool from per-node entry points + visited marking."""
     Q = queries.shape[0]
     n = vectors.shape[0]
@@ -159,7 +199,7 @@ def _init_state(vectors, entry_ids, entry_ver, queries, version,
     ent_ok = valid[:, :, None] & (ent != NO_EDGE) & (ever <= version[:, None, None])
     ent = jnp.where(ent_ok, ent, 0).reshape(Q, -1)
     ent_ok = ent_ok.reshape(Q, -1)
-    ed = dist_fn(queries, vectors[ent])
+    ed = dist_fn(queries, _gather_dequant(vectors, ent, quant))
     ed = jnp.where(ent_ok, ed, INF)
     ent = jnp.where(ent_ok, ent, NO_EDGE)
 
@@ -188,7 +228,7 @@ def _init_state(vectors, entry_ids, entry_ver, queries, version,
 
 def _make_body(vectors, tkey, nbr, lab_b, lab_e, queries, version,
                levels, idxs, valid, start, end, *, L: int, F: int,
-               dist_fn, packed: bool, use_kernel: bool):
+               dist_fn, packed: bool, use_kernel: bool, quant=None):
     """The per-step wavefront body, shared by the single-shot and chunked
     drivers. State: (pool_ids, pool_d, expanded, visited, alive_steps, step)."""
     Q = queries.shape[0]
@@ -234,11 +274,16 @@ def _make_body(vectors, tkey, nbr, lab_b, lab_e, queries, version,
 
         if use_kernel:
             from repro.kernels import ops as kops
-            pool_ids, pool_d, expanded = kops.gathered_topk(
-                queries, vectors, tg, new, b, e, version,
-                pool_ids, pool_d, expanded)
+            if quant is not None:
+                pool_ids, pool_d, expanded = kops.gathered_topk_quant(
+                    queries, vectors, quant[0], quant[1], tg, new, b, e,
+                    version, pool_ids, pool_d, expanded)
+            else:
+                pool_ids, pool_d, expanded = kops.gathered_topk(
+                    queries, vectors, tg, new, b, e, version,
+                    pool_ids, pool_d, expanded)
         else:
-            nd = dist_fn(queries, vectors[tg_safe])
+            nd = dist_fn(queries, _gather_dequant(vectors, tg_safe, quant))
             nd = jnp.where(new, nd, INF)
             cat_ids = jnp.concatenate(
                 [pool_ids, jnp.where(new, tg, NO_EDGE)], axis=1)
@@ -279,18 +324,19 @@ def mstg_graph_search(arrays: dict, queries: jnp.ndarray, version: jnp.ndarray,
     returns  : ids (Q, k) int32 (NO_EDGE pad), dists (Q, k) float32 (+inf pad)
     """
     vectors = arrays["vectors"]
+    quant = _tree_quant(arrays)
     version = version.astype(jnp.int32)
     L = ef
     dist_fn = _dist_fn(use_kernel)
     levels, idxs, valid, start, end = _plan_nodes(key_lo, key_hi, Kpad)
     pool_ids, pool_d, expanded, visited, alive_steps = _init_state(
         vectors, arrays["entry_ids"], arrays["entry_ver"], queries, version,
-        levels, idxs, valid, L=L, dist_fn=dist_fn, packed=packed)
+        levels, idxs, valid, L=L, dist_fn=dist_fn, packed=packed, quant=quant)
 
     body = _make_body(vectors, arrays["tkey"], arrays["nbr"], arrays["lab_b"],
                       arrays["lab_e"], queries, version, levels, idxs, valid,
                       start, end, L=L, F=fanout, dist_fn=dist_fn,
-                      packed=packed, use_kernel=use_kernel)
+                      packed=packed, use_kernel=use_kernel, quant=quant)
 
     def cond(state):
         pool_ids, pool_d, expanded, visited, alive_steps, step = state
@@ -316,7 +362,8 @@ def _graph_init(arrays, queries, version, key_lo, key_hi, *, ef, Kpad,
     levels, idxs, valid, start, end = _plan_nodes(key_lo, key_hi, Kpad)
     pool_ids, pool_d, expanded, visited, alive_steps = _init_state(
         arrays["vectors"], arrays["entry_ids"], arrays["entry_ver"], queries,
-        version, levels, idxs, valid, L=ef, dist_fn=dist_fn, packed=packed)
+        version, levels, idxs, valid, L=ef, dist_fn=dist_fn, packed=packed,
+        quant=_tree_quant(arrays))
     nodes = (levels, idxs, valid, start, end)
     state = (pool_ids, pool_d, expanded, visited, alive_steps,
              jnp.array(0, jnp.int32))
@@ -335,7 +382,8 @@ def _graph_chunk(arrays, queries, version, nodes, state, limit, *, ef, Kpad,
     body = _make_body(arrays["vectors"], arrays["tkey"], arrays["nbr"],
                       arrays["lab_b"], arrays["lab_e"], queries, version,
                       levels, idxs, valid, start, end, L=ef, F=fanout,
-                      dist_fn=dist_fn, packed=packed, use_kernel=use_kernel)
+                      dist_fn=dist_fn, packed=packed, use_kernel=use_kernel,
+                      quant=_tree_quant(arrays))
     step0 = state[-1]
     bound = step0 + limit.astype(jnp.int32)
 

@@ -81,7 +81,13 @@ class DeploymentSpec:
         exact relative to single-device; smaller trades recall for merge
         bytes.
     engine : EngineConfig
-        Config for every per-shard :class:`repro.core.QueryEngine`.
+        Config for every per-shard :class:`repro.core.QueryEngine`. This
+        includes the quantized storage tier: ``EngineConfig(
+        storage_dtype="int8", ...)`` gives every shard its own compressed
+        code layout (each shard quantizes its corpus slice with its own
+        per-dimension scales) plus the exact per-shard re-rank; the fused
+        :meth:`ShardedDeployment.flat` layout is separate and always
+        float32.
     index : IndexSpec, optional
         Build spec for :meth:`ShardedDeployment.build` shards (default
         ``IndexSpec()``).

@@ -10,6 +10,14 @@ When a request trace is active (``repro.obs``), each entry point records a
 v5e HBM peak (:func:`repro.obs.profile.bandwidth_annotation`). The traced
 path blocks on the result so the span measures the kernel, not the dispatch;
 with tracing off the wrappers stay fully async and add no work.
+
+Bandwidth is annotated against *per-kernel byte models*, not a naive sum of
+input array sizes: the gathered kernels read ``Q*M`` candidate rows out of
+the table (not the whole table), and the compressed-scan kernels stream the
+int8/float16 code bytes (not a float32-equivalent) — so the achieved-GB/s
+roofline numbers stay honest across storage tiers. The models are exported
+(:func:`pairwise_stream_bytes`, :func:`gathered_stream_bytes`) for
+benchmarks that report side-by-side float32/int8 bandwidth.
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ from repro import obs
 from repro.obs.profile import bandwidth_annotation
 
 from . import pairwise_l2 as _pw
+from . import pairwise_l2_int8 as _pw8
 from . import gathered_l2 as _gl
 from . import ref
 
@@ -32,7 +41,8 @@ def _interpret() -> bool:
 
 
 def _nbytes(*arrays) -> int:
-    """Total bytes the kernel must at least stream from memory (inputs)."""
+    """Sum of input array bytes — the byte model for kernels that stream
+    every input exactly once (the pairwise family)."""
     total = 0
     for a in arrays:
         nb = getattr(a, "nbytes", None)
@@ -41,14 +51,35 @@ def _nbytes(*arrays) -> int:
     return total
 
 
-def _run_traced(name: str, inputs, thunk):
+def pairwise_stream_bytes(Q: int, N: int, d: int, itemsize: int) -> int:
+    """Byte model of a full-table masked scan: the (N, d) table at its
+    storage itemsize, float32 queries, per-row endpoints, per-query bounds.
+    ``itemsize`` is the table's bytes per component (4 float32, 2 float16,
+    1 int8) — the lever the compressed tier pulls."""
+    return N * d * itemsize + Q * d * 4 + 2 * N * 4 + 2 * Q * 4
+
+
+def gathered_stream_bytes(Q: int, M: int, L: int, d: int,
+                          itemsize: int) -> int:
+    """Byte model of one wavefront step: the gather touches ``Q*M``
+    candidate rows of ``d*itemsize`` bytes each — NOT the whole (n, d)
+    table — plus the per-candidate id/avail/label arrays and the (Q, L)
+    beam state in and out."""
+    return (Q * d * 4                   # queries
+            + Q * M * d * itemsize      # gathered candidate rows
+            + Q * M * (4 * 4)           # ids, avail, lab_b, lab_e (int32)
+            + Q * 4                     # versions
+            + 2 * Q * L * (4 + 4 + 4))  # beam pool in + out (ids, d, exp)
+
+
+def _run_traced(name: str, nbytes: int, thunk):
     """Run ``thunk`` inside a ``kernel:<name>`` span with an achieved-vs-peak
     bandwidth annotation. Only entered when a tracer is active — the traced
     path blocks on the result so the measured wall time bounds the kernel."""
     with obs.span(f"kernel:{name}") as sp:
         t0 = time.perf_counter()
         out = jax.block_until_ready(thunk())
-        ann = bandwidth_annotation(_nbytes(*inputs), time.perf_counter() - t0)
+        ann = bandwidth_annotation(nbytes, time.perf_counter() - t0)
         for key, v in ann.items():
             sp.set(key, v)
     return out
@@ -61,8 +92,30 @@ def pairwise_l2_masked(queries, corpus, lo, hi, ql, qh, mask: int,
         interpret=_interpret())
     if not obs.tracing():
         return thunk()
-    return _run_traced("pairwise_l2_masked", (queries, corpus, lo, hi),
-                       thunk)
+    Q, d = queries.shape
+    N = corpus.shape[0]
+    return _run_traced(
+        "pairwise_l2_masked",
+        pairwise_stream_bytes(Q, N, d, corpus.dtype.itemsize), thunk)
+
+
+def pairwise_l2_int8(queries, codes, scale, offset, sq_norm, lo, hi, ql, qh,
+                     mask: int, bq: int = _pw8.DEFAULT_BQ,
+                     bn: int = _pw8.DEFAULT_BN):
+    """Compressed masked scan over int8 codes (integer MXU dot products +
+    dequantized correction; :mod:`repro.kernels.pairwise_l2_int8`). The
+    bandwidth annotation counts the *compressed* byte stream."""
+    thunk = lambda: _pw8.pairwise_l2_int8(  # noqa: E731
+        queries, codes, scale, offset, sq_norm, lo, hi, ql, qh, mask,
+        bq=bq, bn=bn, interpret=_interpret())
+    if not obs.tracing():
+        return thunk()
+    Q, d = queries.shape
+    N = codes.shape[0]
+    nbytes = (pairwise_stream_bytes(Q, N, d, 1)
+              + N * 4                   # sq_norm
+              + 2 * d * 4)              # scale + offset
+    return _run_traced("pairwise_l2_int8", nbytes, thunk)
 
 
 def gathered_l2(queries, cand_vecs, bq: int = _gl.DEFAULT_BQ):
@@ -70,7 +123,7 @@ def gathered_l2(queries, cand_vecs, bq: int = _gl.DEFAULT_BQ):
         queries, cand_vecs, bq=bq, interpret=_interpret())
     if not obs.tracing():
         return thunk()
-    return _run_traced("gathered_l2", (queries, cand_vecs), thunk)
+    return _run_traced("gathered_l2", _nbytes(queries, cand_vecs), thunk)
 
 
 def gathered_l2_dot(queries, cand_vecs, bq: int = _gl.DEFAULT_BQ):
@@ -78,7 +131,7 @@ def gathered_l2_dot(queries, cand_vecs, bq: int = _gl.DEFAULT_BQ):
         queries, cand_vecs, bq=bq, interpret=_interpret())
     if not obs.tracing():
         return thunk()
-    return _run_traced("gathered_l2_dot", (queries, cand_vecs), thunk)
+    return _run_traced("gathered_l2_dot", _nbytes(queries, cand_vecs), thunk)
 
 
 def gathered_topk(queries, vectors, ids, avail, b, e, version,
@@ -91,14 +144,36 @@ def gathered_topk(queries, vectors, ids, avail, b, e, version,
         pool_exp, bq=bq or _gt.DEFAULT_BQ, interpret=_interpret())
     if not obs.tracing():
         return thunk()
-    return _run_traced("gathered_topk",
-                       (queries, ids, pool_ids, pool_d), thunk)
+    Q, d = queries.shape
+    nbytes = gathered_stream_bytes(Q, ids.shape[1], pool_d.shape[1], d,
+                                   vectors.dtype.itemsize)
+    return _run_traced("gathered_topk", nbytes, thunk)
+
+
+def gathered_topk_quant(queries, codes, scale, offset, ids, avail, b, e,
+                        version, pool_ids, pool_d, pool_exp, bq: int = None):
+    """Wavefront step over a quantized code table: the gather streams
+    int8/float16 rows and dequantizes in VMEM
+    (:func:`repro.kernels.gathered_topk.gathered_topk_quant`)."""
+    from . import gathered_topk as _gt
+    thunk = lambda: _gt.gathered_topk_quant(  # noqa: E731
+        queries, codes, scale, offset, ids, avail, b, e, version, pool_ids,
+        pool_d, pool_exp, bq=bq or _gt.DEFAULT_BQ, interpret=_interpret())
+    if not obs.tracing():
+        return thunk()
+    Q, d = queries.shape
+    nbytes = (gathered_stream_bytes(Q, ids.shape[1], pool_d.shape[1], d,
+                                    codes.dtype.itemsize)
+              + 2 * d * 4)              # scale + offset
+    return _run_traced("gathered_topk_quant", nbytes, thunk)
 
 
 # re-export oracles for convenience
 pairwise_l2_masked_ref = ref.pairwise_l2_masked_ref
+pairwise_l2_int8_ref = ref.pairwise_l2_int8_ref
 gathered_l2_ref = ref.gathered_l2_ref
 gathered_topk_ref = ref.gathered_topk_ref
+gathered_topk_quant_ref = ref.gathered_topk_quant_ref
 
 
 def fused_topk_l2(queries, corpus, lo, hi, ql, qh, mask: int, k: int = 10,
@@ -109,4 +184,8 @@ def fused_topk_l2(queries, corpus, lo, hi, ql, qh, mask: int, k: int = 10,
         interpret=_interpret())
     if not obs.tracing():
         return thunk()
-    return _run_traced("fused_topk_l2", (queries, corpus, lo, hi), thunk)
+    Q, d = queries.shape
+    N = corpus.shape[0]
+    return _run_traced(
+        "fused_topk_l2",
+        pairwise_stream_bytes(Q, N, d, corpus.dtype.itemsize), thunk)

@@ -55,6 +55,50 @@ def gathered_topk_ref(queries, vectors, ids, avail, b, e, version,
             jnp.take_along_axis(cat_e, order, 1))
 
 
+def quantize_query_weights_ref(queries, scale, offset):
+    """Shared prologue of the int8 scan: fold the per-dimension dequant
+    scale into the query (``w = q * scale``), symmetric-quantize ``w`` to
+    int8 with a per-query step ``alpha``, and precompute the query-side
+    constant ``cq = ||q||^2 - 2 q.offset``. Returns (wq int8, alpha, cq)."""
+    q = queries.astype(jnp.float32)
+    w = q * scale[None, :]
+    amax = jnp.max(jnp.abs(w), axis=1)
+    alpha = jnp.where(amax > 0, amax / 127.0, 1.0)
+    wq = jnp.clip(jnp.round(w / alpha[:, None]), -127, 127).astype(jnp.int8)
+    cq = jnp.sum(q * q, axis=1) - 2.0 * (q @ offset)
+    return wq, alpha, cq
+
+
+def pairwise_l2_int8_ref(queries, codes, scale, offset, sq_norm,
+                         lo, hi, ql, qh, mask: int):
+    """Oracle for the int8 compressed scan: integer dot products between
+    the symmetric-quantized query weights and the stored codes, followed by
+    the dequantized correction
+
+        dist ~= (||q||^2 - 2 q.offset) - 2 alpha * (wq . code) + sq_norm
+
+    which is ``||q - x_hat||^2`` up to the query-side rounding of ``w/alpha``
+    (absorbed by the exact float32 re-rank). +inf where the predicate fails.
+    """
+    wq, alpha, cq = quantize_query_weights_ref(queries, scale, offset)
+    acc = (wq.astype(jnp.int32) @ codes.astype(jnp.int32).T)
+    d = (cq[:, None] - 2.0 * alpha[:, None] * acc.astype(jnp.float32)
+         + sq_norm.astype(jnp.float32)[None, :])
+    sel = iv.eval_predicate(mask, lo[None, :], hi[None, :],
+                            ql[:, None], qh[:, None])
+    return jnp.where(sel, d, jnp.inf)
+
+
+def gathered_topk_quant_ref(queries, codes, scale, offset, ids, avail, b, e,
+                            version, pool_ids, pool_d, pool_exp):
+    """Oracle for the quantized-table wavefront step: identical to
+    :func:`gathered_topk_ref` against the affinely dequantized table
+    ``codes * scale + offset`` (int8 or float16 codes)."""
+    deq = (codes.astype(jnp.float32) * scale[None, :] + offset[None, :])
+    return gathered_topk_ref(queries, deq, ids, avail, b, e, version,
+                             pool_ids, pool_d, pool_exp)
+
+
 def topk_mask_ref(dists, k: int):
     """(Q, N) -> bool mask of the k smallest per row (ties broken by index)."""
     idx = jnp.argsort(dists, axis=1)[:, :k]

@@ -420,6 +420,14 @@ class AsyncRetrievalServer:
 
     # ---- continuous-path plumbing ----
     def _stream(self, variant: str, fanout: int) -> WavefrontStream:
+        """NOTE (quantized engines): the continuous path harvests beam rows
+        straight from the wavefront and merges them in ``_finish_query``
+        without the engine's exact float32 re-rank, so with
+        ``storage_dtype`` of "int8"/"float16" both the streamed per-step
+        distances AND the served top-k distances are the approximate
+        quantized ones (ordering is re-rank-free). The sync
+        :class:`repro.core.QueryEngine` path re-ranks; route quantized
+        traffic there when exact distances matter."""
         if variant not in self._streams:
             eng = self.engine
             dv = eng.graph_dev(variant)

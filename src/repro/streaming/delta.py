@@ -55,6 +55,15 @@ class DeltaBuffer:
         return (self._vecs.nbytes + self._lo.nbytes + self._hi.nbytes
                 + self._ext.nbytes)
 
+    def bytes_breakdown(self) -> dict:
+        """Per-tier byte accounting (MSTGIndex.storage_bytes schema subset).
+        The delta buffer is always exact float32 — quantization happens at
+        segment freeze — so codes/scales are structurally zero."""
+        full = 0 if self._vecs is None else int(self._vecs.nbytes)
+        return {"storage_dtype": "float32", "float32_rerank": full,
+                "codes": 0, "scales": 0, "sq_norm": 0, "scan_bytes": full,
+                "compression_ratio": 1.0}
+
     def __contains__(self, ext_id: int) -> bool:
         return int(ext_id) in self._row_of_ext
 

@@ -192,15 +192,33 @@ class SegmentedIndex:
         raise KeyError(seg_id)
 
     def stats(self) -> dict:
+        # per-tier bytes: frozen segments quantize at freeze time (they
+        # inherit spec.storage_dtype); the delta buffer stays exact float32
+        # until its rows reach a segment, so it reports codes=0
+        seg_sb = [s.index.storage_bytes() for s in self.segments]
+        delta_sb = self.delta.bytes_breakdown()
+        scan = delta_sb["scan_bytes"] + sum(b["scan_bytes"] for b in seg_sb)
+        full = delta_sb["float32_rerank"] + sum(b["float32_rerank"]
+                                                for b in seg_sb)
         return {
             "n_live": len(self),
             "delta": len(self.delta),
             "delta_dead": self.delta.n_dead,
             "tombstones": sum(len(s.tombs) for s in self.segments),
             "segments": [{"id": s.seg_id, "n": s.n, "live": s.n_live,
-                          "tombstones": len(s.tombs)}
-                         for s in self.segments],
+                          "tombstones": len(s.tombs),
+                          "storage_bytes": sb}
+                         for s, sb in zip(self.segments, seg_sb)],
             "ops": dict(self.ops),
+            "storage_dtype": self.spec.storage_dtype,
+            "storage_bytes": {
+                "codes": sum(b["codes"] for b in seg_sb),
+                "scales": sum(b["scales"] for b in seg_sb),
+                "sq_norm": sum(b["sq_norm"] for b in seg_sb),
+                "float32_rerank": full,
+                "scan_bytes": scan,
+                "compression_ratio": full / max(scan, 1),
+            },
         }
 
     # ---- mutation ----

@@ -1,0 +1,499 @@
+"""Quantized vector tier: QuantizedStore round-trip bounds, int8 kernel vs
+oracle, compressed scan + exact re-rank exactness, quantized-vs-float32
+recall parity over an 8-mask x 3-route grid (drop <= 0.01), save/load
+bit-identity, pre-knob artifact compatibility, quantized streaming
+compaction vs a static quantized build, tier-aware routing, and the
+per-kernel byte models."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (ANY_OVERLAP, EngineConfig, IndexSpec, MSTGIndex,
+                        QueryEngine, SearchRequest, intervals as iv)
+from repro.core.compressed import (NO_EDGE, compressed_flat_topr,
+                                   exact_rerank, topr_from_dists)
+from repro.core.quant import (STORAGE_DTYPES, QuantizedStore,
+                              check_storage_dtype, maybe_quantize)
+from repro.data import (brute_force_topk, make_queries, make_range_dataset,
+                        recall_at_k)
+from repro.kernels import ops
+from repro.kernels.ref import (gathered_topk_quant_ref, gathered_topk_ref,
+                               pairwise_l2_int8_ref, pairwise_l2_masked_ref)
+
+# same 8-mask acceptance grid as the streaming equivalence suite: every
+# atomic RR case, disjunctions, and the containment masks
+MASKS8 = (1, 2, 4, 8, 15, 16, 32, 48)
+ROUTES = ("graph", "pruned", "flat")
+RECALL_DROP_MAX = 0.01
+
+
+# ---- QuantizedStore -------------------------------------------------------
+
+def test_check_storage_dtype():
+    assert check_storage_dtype(None) == "float32"
+    for d in STORAGE_DTYPES:
+        assert check_storage_dtype(d) == d
+    with pytest.raises(ValueError, match="storage_dtype"):
+        check_storage_dtype("int4")
+
+
+def test_int8_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    v = rng.normal(0, 3, (400, 24)).astype(np.float32)
+    v[:, 3] = 7.5  # constant dimension must reconstruct exactly
+    st = QuantizedStore.from_vectors(v, "int8")
+    assert st.codes.dtype == np.int8 and st.itemsize == 1
+    err = np.abs(st.dequantize() - v)
+    # affine min/max quantization: per-dim error is at most half a step
+    assert np.all(err <= st.scale[None, :] * 0.5 + 1e-5)
+    np.testing.assert_allclose(st.dequantize()[:, 3], 7.5, atol=1e-5)
+    # sq_norm is the norm of the *reconstruction* (what the scan adds back)
+    deq = st.dequantize()
+    np.testing.assert_allclose(st.sq_norm, np.einsum("nd,nd->n", deq, deq),
+                               rtol=1e-5)
+
+
+def test_float16_tier_identity_affine():
+    rng = np.random.default_rng(1)
+    v = rng.normal(0, 1, (100, 8)).astype(np.float32)
+    st = QuantizedStore.from_vectors(v, "float16")
+    assert st.codes.dtype == np.float16 and st.itemsize == 2
+    np.testing.assert_array_equal(st.scale, np.ones(8, np.float32))
+    np.testing.assert_array_equal(st.offset, np.zeros(8, np.float32))
+    np.testing.assert_allclose(st.dequantize(), v, atol=2e-3)
+
+
+def test_maybe_quantize_float32_is_none():
+    v = np.zeros((4, 4), np.float32)
+    assert maybe_quantize(v, "float32") is None
+    assert maybe_quantize(v, None) is None
+    assert maybe_quantize(v, "int8") is not None
+
+
+# ---- byte models ----------------------------------------------------------
+
+def test_pairwise_stream_bytes_model():
+    Q, N, d = 8, 1000, 64
+    for itemsize in (1, 2, 4):
+        got = ops.pairwise_stream_bytes(Q, N, d, itemsize)
+        want = N * d * itemsize + Q * d * 4 + 2 * N * 4 + 2 * Q * 4
+        assert got == want
+    # the compression lever: table bytes shrink 4x, the rest is unchanged
+    f32 = ops.pairwise_stream_bytes(Q, N, d, 4)
+    i8 = ops.pairwise_stream_bytes(Q, N, d, 1)
+    assert f32 - i8 == N * d * 3
+
+
+def test_gathered_stream_bytes_model():
+    Q, M, L, d = 8, 24, 32, 64
+    got = ops.gathered_stream_bytes(Q, M, L, d, 1)
+    want = (Q * d * 4 + Q * M * d * 1 + Q * M * 16 + Q * 4
+            + 2 * Q * L * 12)
+    assert got == want
+    # gathers touch Q*M candidate rows, never the whole table
+    assert ops.gathered_stream_bytes(Q, M, L, d, 4) - got == Q * M * d * 3
+
+
+def test_storage_bytes_accounting():
+    rng = np.random.default_rng(2)
+    v = rng.normal(0, 1, (300, 16)).astype(np.float32)
+    lo = rng.uniform(0, 50, 300)
+    hi = lo + rng.uniform(0, 10, 300)
+    idx = MSTGIndex(v, lo, hi, variants=("T",), m=8, ef_con=32,
+                    storage_dtype="int8")
+    sb = idx.storage_bytes()
+    assert sb["storage_dtype"] == "int8"
+    assert sb["scan_bytes"] == sb["codes"] + sb["scales"] + sb["sq_norm"]
+    assert sb["codes"] == 300 * 16  # 1 byte/component
+    assert sb["float32_rerank"] == v.nbytes
+    np.testing.assert_allclose(sb["compression_ratio"],
+                               v.nbytes / sb["scan_bytes"])
+    f32 = MSTGIndex(v, lo, hi, variants=("T",), m=8, ef_con=32)
+    sbf = f32.storage_bytes()
+    assert sbf["codes"] == 0 and sbf["compression_ratio"] == 1.0
+    assert sbf["scan_bytes"] == v.nbytes
+
+
+# ---- EngineConfig validation ----------------------------------------------
+
+def test_engine_config_validation():
+    EngineConfig(storage_dtype="int8", rerank_k=32)  # valid
+    with pytest.raises(ValueError, match="storage_dtype"):
+        EngineConfig(storage_dtype="bf16")
+    with pytest.raises(ValueError, match="rerank_k"):
+        EngineConfig(rerank_k=0)
+
+
+# ---- kernels vs oracles ---------------------------------------------------
+
+@pytest.mark.parametrize("mask", (1, 15, 48))
+@pytest.mark.parametrize("Q,N,d", [(4, 96, 16), (5, 130, 24), (8, 256, 32)])
+def test_pairwise_l2_int8_matches_ref(mask, Q, N, d):
+    """Pallas int8 kernel (interpret mode) == jnp oracle, including on
+    unaligned shapes the kernel must pad internally."""
+    rng = np.random.default_rng(mask * 100 + N)
+    q = rng.normal(0, 1, (Q, d)).astype(np.float32)
+    v = rng.normal(0, 2, (N, d)).astype(np.float32)
+    st = QuantizedStore.from_vectors(v, "int8")
+    lo = rng.uniform(0, 100, N).astype(np.float32)
+    hi = lo + rng.uniform(0, 30, N).astype(np.float32)
+    ql = rng.uniform(0, 80, Q).astype(np.float32)
+    qh = ql + rng.uniform(0, 40, Q).astype(np.float32)
+    got = np.asarray(ops.pairwise_l2_int8(q, st.codes, st.scale, st.offset,
+                                          st.sq_norm, lo, hi, ql, qh, mask))
+    want = np.asarray(pairwise_l2_int8_ref(
+        jnp.asarray(q), jnp.asarray(st.codes), jnp.asarray(st.scale),
+        jnp.asarray(st.offset), jnp.asarray(st.sq_norm), jnp.asarray(lo),
+        jnp.asarray(hi), jnp.asarray(ql), jnp.asarray(qh), mask))
+    fin = np.isfinite(want)
+    np.testing.assert_array_equal(np.isfinite(got), fin)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-4, atol=1e-3)
+
+
+def test_pairwise_l2_int8_close_to_exact():
+    """Quantized distances track the exact float32 distances to within the
+    quantization error budget (loose bound; the engine's re-rank removes
+    the residual)."""
+    rng = np.random.default_rng(7)
+    Q, N, d = 4, 128, 16
+    q = rng.normal(0, 1, (Q, d)).astype(np.float32)
+    v = rng.normal(0, 1, (N, d)).astype(np.float32)
+    st = QuantizedStore.from_vectors(v, "int8")
+    lo = np.zeros(N, np.float32)
+    hi = np.ones(N, np.float32)
+    ql = np.zeros(Q, np.float32)
+    qh = np.ones(Q, np.float32)
+    approx = np.asarray(pairwise_l2_int8_ref(
+        jnp.asarray(q), jnp.asarray(st.codes), jnp.asarray(st.scale),
+        jnp.asarray(st.offset), jnp.asarray(st.sq_norm), jnp.asarray(lo),
+        jnp.asarray(hi), jnp.asarray(ql), jnp.asarray(qh), ANY_OVERLAP))
+    exact = np.asarray(pairwise_l2_masked_ref(
+        jnp.asarray(q), jnp.asarray(v), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(ql), jnp.asarray(qh), ANY_OVERLAP))
+    assert np.max(np.abs(approx - exact)) < 0.5
+
+
+@pytest.mark.parametrize("dtype", ("int8", "float16"))
+def test_gathered_topk_quant_matches_ref(dtype):
+    rng = np.random.default_rng(3)
+    Q, n, d, M, L = 4, 200, 16, 12, 16
+    q = rng.normal(0, 1, (Q, d)).astype(np.float32)
+    table = rng.normal(0, 1, (n, d)).astype(np.float32)
+    st = QuantizedStore.from_vectors(table, dtype)
+    ids = rng.integers(0, n, (Q, M)).astype(np.int32)
+    avail = (rng.random((Q, M)) < 0.8).astype(np.int32)
+    b = np.zeros((Q, M), np.int32)
+    e = np.full((Q, M), 10 ** 6, np.int32)
+    ver = np.zeros(Q, np.int32)
+    pool_d = np.sort(rng.random((Q, L)).astype(np.float32), axis=1)
+    pool_ids = rng.integers(0, n, (Q, L)).astype(np.int32)
+    pool_exp = np.zeros((Q, L), bool)
+    got = ops.gathered_topk_quant(q, st.codes, st.scale, st.offset, ids,
+                                  avail, b, e, ver, pool_ids, pool_d,
+                                  pool_exp)
+    want = gathered_topk_quant_ref(
+        jnp.asarray(q), jnp.asarray(st.codes), jnp.asarray(st.scale),
+        jnp.asarray(st.offset), jnp.asarray(ids), jnp.asarray(avail),
+        jnp.asarray(b), jnp.asarray(e), jnp.asarray(ver),
+        jnp.asarray(pool_ids), jnp.asarray(pool_d), jnp.asarray(pool_exp))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_gathered_topk_quant_ref_is_dequantized_f32_step():
+    """The quant oracle is *defined* as the float32 oracle over the
+    dequantized table — pin that equivalence."""
+    rng = np.random.default_rng(4)
+    Q, n, d, M, L = 2, 64, 8, 6, 8
+    table = rng.normal(0, 1, (n, d)).astype(np.float32)
+    st = QuantizedStore.from_vectors(table, "int8")
+    q = rng.normal(0, 1, (Q, d)).astype(np.float32)
+    ids = rng.integers(0, n, (Q, M)).astype(np.int32)
+    avail = np.ones((Q, M), np.int32)
+    b = np.zeros((Q, M), np.int32)
+    e = np.full((Q, M), 10 ** 6, np.int32)
+    ver = np.zeros(Q, np.int32)
+    pool_d = np.full((Q, L), np.inf, np.float32)
+    pool_ids = np.full((Q, L), NO_EDGE, np.int32)
+    pool_exp = np.zeros((Q, L), bool)
+    args = (jnp.asarray(ids), jnp.asarray(avail), jnp.asarray(b),
+            jnp.asarray(e), jnp.asarray(ver), jnp.asarray(pool_ids),
+            jnp.asarray(pool_d), jnp.asarray(pool_exp))
+    got = gathered_topk_quant_ref(jnp.asarray(q), jnp.asarray(st.codes),
+                                  jnp.asarray(st.scale),
+                                  jnp.asarray(st.offset), *args)
+    want = gathered_topk_ref(jnp.asarray(q), jnp.asarray(st.dequantize()),
+                             *args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5,
+                                   atol=1e-5)
+
+
+# ---- compressed scan + exact re-rank --------------------------------------
+
+def test_compressed_topr_plus_rerank_is_exact():
+    """With R = n the candidate list trivially contains the true neighbors,
+    so the re-ranked result must equal the float32 brute force bit for bit
+    (ids and distances)."""
+    rng = np.random.default_rng(5)
+    n, d, Q, k = 300, 16, 6, 5
+    ds = make_range_dataset(n=n, d=d, n_queries=Q, quantize=16, seed=5)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.3, seed=6)
+    st = QuantizedStore.from_vectors(ds.vectors, "int8")
+    codes_t = np.ascontiguousarray(st.codes.T)
+    ids, dists = compressed_flat_topr(
+        jnp.asarray(codes_t), jnp.asarray(st.scale), jnp.asarray(st.offset),
+        jnp.asarray(st.sq_norm), jnp.asarray(ds.lo, jnp.float32),
+        jnp.asarray(ds.hi, jnp.float32), jnp.asarray(ds.queries),
+        jnp.asarray(qlo, jnp.float32), jnp.asarray(qhi, jnp.float32),
+        mask=ANY_OVERLAP, rerank=n, block=128)
+    ids = np.asarray(ids)
+    rows = ds.vectors[np.clip(ids, 0, None)]
+    rid, rd = exact_rerank(jnp.asarray(ds.queries), jnp.asarray(rows),
+                           jnp.asarray(ids), k=k)
+    tids, tdists = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                                    qlo, qhi, ANY_OVERLAP, k)
+    np.testing.assert_array_equal(np.asarray(rid), tids)
+    np.testing.assert_allclose(np.asarray(rd)[tids >= 0],
+                               tdists[tids >= 0], rtol=1e-4, atol=1e-4)
+
+
+def test_topr_from_dists_padding():
+    d = jnp.asarray([[0.5, jnp.inf, 0.1, jnp.inf]])
+    ids, dd = topr_from_dists(d, rerank=3)
+    assert np.asarray(ids)[0, 0] == 2 and np.asarray(ids)[0, 1] == 0
+    assert np.asarray(ids)[0, 2] == NO_EDGE
+    assert not np.isfinite(np.asarray(dd)[0, 2])
+
+
+# ---- recall parity grid (acceptance: drop <= 0.01, 8 masks x 3 routes) ----
+
+@pytest.fixture(scope="module")
+def parity_ds():
+    return make_range_dataset(n=900, d=16, n_queries=10, quantize=32, seed=9)
+
+
+@pytest.fixture(scope="module")
+def parity_engines(parity_ds):
+    ds = parity_ds
+    out = {}
+    for tier in ("float32", "int8", "float16"):
+        idx = MSTGIndex(ds.vectors, ds.lo, ds.hi,
+                        variants=("T", "Tp", "Tpp"), m=8, ef_con=40,
+                        storage_dtype=tier)
+        out[tier] = QueryEngine(idx, config=EngineConfig())
+    return out
+
+
+@pytest.mark.parametrize("route", ROUTES)
+@pytest.mark.parametrize("mask", MASKS8)
+def test_quantized_recall_parity(parity_ds, parity_engines, mask, route):
+    ds = parity_ds
+    qlo, qhi = make_queries(ds, mask, 0.2, seed=mask)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                               qlo, qhi, mask, 5)
+    req = SearchRequest(ds.queries, (qlo, qhi), mask, k=5, ef=48, route=route)
+    base = recall_at_k(np.asarray(parity_engines["float32"].search(req).ids),
+                       tids)
+    for tier in ("int8", "float16"):
+        r = recall_at_k(np.asarray(parity_engines[tier].search(req).ids),
+                        tids)
+        assert base - r <= RECALL_DROP_MAX, \
+            f"{tier}/{iv.mask_name(mask)}/{route}: {base} -> {r}"
+
+
+def test_exact_routes_stay_exact_under_quantization(parity_ds,
+                                                    parity_engines):
+    """flat and pruned are exhaustive over qualifying rows; with the exact
+    re-rank the quantized tiers must return recall-1.0-equivalent ids, not
+    merely within the drop budget."""
+    ds = parity_ds
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.25, seed=77)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                               qlo, qhi, ANY_OVERLAP, 5)
+    for route in ("flat", "pruned"):
+        req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=5,
+                            route=route)
+        for tier in ("int8", "float16"):
+            got = np.asarray(parity_engines[tier].search(req).ids)
+            assert recall_at_k(got, tids) == 1.0, f"{tier}/{route}"
+
+
+# ---- tier-aware routing ----------------------------------------------------
+
+def test_router_scan_cost_ratio(parity_engines):
+    assert parity_engines["float32"]._scan_cost_ratio == 1.0
+    assert parity_engines["int8"]._scan_cost_ratio == 0.25
+    assert parity_engines["float16"]._scan_cost_ratio == 0.5
+
+
+def test_auto_route_works_quantized(parity_ds, parity_engines):
+    ds = parity_ds
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.3, seed=13)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                               qlo, qhi, ANY_OVERLAP, 5)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=5, ef=48)
+    res = parity_engines["int8"].search(req)
+    assert res.report.route in ROUTES
+    assert recall_at_k(np.asarray(res.ids), tids) >= 0.95
+
+
+def test_rerank_k_knob(parity_ds):
+    """rerank_k=k degenerates to trusting the approximate order; a wider
+    budget can only help. Both must stay within the drop budget on flat."""
+    ds = parity_ds
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.25, seed=21)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                               qlo, qhi, ANY_OVERLAP, 5)
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=(),
+                    storage_dtype="int8")
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=5,
+                        route="flat")
+    r_narrow = recall_at_k(np.asarray(QueryEngine(
+        idx, config=EngineConfig(rerank_k=5)).search(req).ids), tids)
+    r_wide = recall_at_k(np.asarray(QueryEngine(
+        idx, config=EngineConfig(rerank_k=64)).search(req).ids), tids)
+    assert r_wide >= r_narrow
+    assert r_wide >= 1.0 - RECALL_DROP_MAX
+
+
+# ---- persistence -----------------------------------------------------------
+
+def test_save_load_bit_identity(tmp_path, parity_ds):
+    ds = parity_ds
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"), m=8,
+                    ef_con=40, storage_dtype="int8")
+    path = idx.save(str(tmp_path / "quant.npz"))
+    loaded = MSTGIndex.load(path)
+    assert loaded.spec.storage_dtype == "int8"
+    np.testing.assert_array_equal(loaded.storage.codes, idx.storage.codes)
+    np.testing.assert_array_equal(loaded.storage.scale, idx.storage.scale)
+    np.testing.assert_array_equal(loaded.storage.offset, idx.storage.offset)
+    np.testing.assert_array_equal(loaded.storage.sq_norm,
+                                  idx.storage.sq_norm)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=31)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=5,
+                        route="flat")
+    a = QueryEngine(idx).search(req)
+    b = QueryEngine(loaded).search(req)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    np.testing.assert_array_equal(np.asarray(a.dists), np.asarray(b.dists))
+
+
+def test_pre_knob_artifact_loads_as_float32(parity_ds):
+    """Artifacts written before the storage tier existed carry neither the
+    spec field nor code arrays — they must load (as float32) and serve."""
+    ds = parity_ds
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T",), m=8,
+                    ef_con=40)
+    arrays, meta = idx.to_payload()
+    spec_d = dict(meta["spec"])
+    spec_d.pop("storage_dtype")
+    old = MSTGIndex.from_payload(dict(arrays), {**meta, "spec": spec_d})
+    assert old.spec.storage_dtype == "float32"
+    assert old.storage is None
+    eng = QueryEngine(old)
+    assert eng.storage_dtype == "float32"
+
+
+def test_quantized_spec_without_code_arrays_requantizes(parity_ds):
+    """A quantized spec whose payload lost the code arrays re-quantizes
+    deterministically from the float32 corpus (same min/max, same codes)."""
+    ds = parity_ds
+    idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T",), m=8,
+                    ef_con=40, storage_dtype="int8")
+    arrays, meta = idx.to_payload()
+    for key in ("codes", "code_scale", "code_offset", "code_sq_norm"):
+        arrays.pop(key)
+    re = MSTGIndex.from_payload(dict(arrays), meta)
+    np.testing.assert_array_equal(re.storage.codes, idx.storage.codes)
+    np.testing.assert_array_equal(re.storage.scale, idx.storage.scale)
+
+
+# ---- streaming: quantized compaction == static quantized build ------------
+
+def test_compacted_quantized_equals_static_quantized_build():
+    from repro.streaming import SegmentedIndex
+    ds = make_range_dataset(n=260, d=16, n_queries=8, quantize=32, seed=15)
+    spec = IndexSpec(variants=("T", "Tp", "Tpp"), m=8, ef_con=40,
+                     storage_dtype="int8")
+    rng = np.random.default_rng(16)
+    s = SegmentedIndex(spec)
+    ids = np.arange(260)
+    s.add(ids[:150], ds.vectors[:150], ds.lo[:150], ds.hi[:150])
+    assert s.flush() is not None
+    s.add(ids[150:], ds.vectors[150:], ds.lo[150:], ds.hi[150:])
+    dead = rng.choice(260, 20, replace=False)
+    s.delete(dead)
+    assert s.flush() is not None
+    rep = s.compact(full=True)
+    assert rep["new_segment"] is not None
+    # the surviving segment quantized against the post-churn corpus; a
+    # static quantized build over the identical live rows must agree on
+    # every route (the re-rank is exact, so ids AND dists match)
+    live = np.setdiff1d(ids, dead)
+    static = QueryEngine(MSTGIndex.build(spec, ds.vectors[live],
+                                         ds.lo[live], ds.hi[live]))
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.25, seed=17)
+    for route in ROUTES:
+        req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=5, ef=48,
+                            route=route)
+        got = s.search(req)
+        want = static.search(req)
+        want_ext = np.where(np.asarray(want.ids) >= 0,
+                            live[np.clip(np.asarray(want.ids), 0, None)],
+                            np.asarray(want.ids, np.int64))
+        np.testing.assert_array_equal(np.asarray(got.ids), want_ext,
+                                      err_msg=route)
+        np.testing.assert_allclose(np.asarray(got.dists),
+                                   np.asarray(want.dists), rtol=1e-5,
+                                   atol=1e-5, err_msg=route)
+    # and the stats roll-up reports the quantized tier
+    st = s.stats()
+    assert st["storage_dtype"] == "int8"
+    assert st["storage_bytes"]["compression_ratio"] > 2.0
+
+
+# ---- scan builder ----------------------------------------------------------
+
+def test_scan_builder_pruned_equals_bulk(parity_ds):
+    """builder="scan" materializes members/entries only (no graphs); its
+    pruned route must match the bulk build exactly (both are exhaustive
+    over qualifying rows)."""
+    ds = parity_ds
+    bulk = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"), m=8,
+                     ef_con=40)
+    scan = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
+                     builder="scan")
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=19)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=5,
+                        route="pruned")
+    a = QueryEngine(bulk).search(req)
+    b = QueryEngine(scan).search(req)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
+# ---- sharded deployment ----------------------------------------------------
+
+def test_sharded_deployment_int8(parity_ds):
+    from repro.distributed import DeploymentSpec, ShardedDeployment
+    ds = parity_ds
+    tids = None
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.25, seed=23)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                               qlo, qhi, ANY_OVERLAP, 5)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=5, ef=48,
+                        route="flat")
+    results = {}
+    for tier in (None, "int8"):
+        spec = DeploymentSpec(
+            n_shards=2, engine=EngineConfig(storage_dtype=tier),
+            index=IndexSpec(variants=("T",), m=8, ef_con=40))
+        dep = ShardedDeployment.build(ds.vectors, ds.lo, ds.hi, spec=spec)
+        res = dep.execute(req)
+        assert res.report.route == "sharded"
+        results[tier] = recall_at_k(np.asarray(res.ids), tids)
+    # per-shard quantization + exact per-shard re-rank: parity with f32
+    assert results[None] - results["int8"] <= RECALL_DROP_MAX
