@@ -71,3 +71,22 @@ def run():
              f"speedup={inc_s / max(bulk_s, 1e-9):.1f};"
              f"bulk_bytes={bulk_b};incremental_bytes={inc_b};"
              f"bytes_ratio={bulk_b / max(inc_b, 1):.3f}")
+
+    # candidate-stage sweep: exact all-pairs vs coarse quantizer on the
+    # bulk path (threshold lowered so the quantizer engages at bench
+    # scale; at the default threshold these sizes are bit-identical)
+    for n in (400, 800) if QUICK else (512, 1024, 2048):
+        sweep_ds = bench_dataset(n=n, seed=2)
+        row = {}
+        for stage in ("exact", "coarse"):
+            t0 = time.perf_counter()
+            swept = MSTGIndex(sweep_ds.vectors, sweep_ds.lo, sweep_ds.hi,
+                              variants=("T",), m=12, ef_con=64,
+                              candidate_stage=stage,
+                              coarse_threshold=n // 4)
+            row[stage] = (time.perf_counter() - t0, swept.index_bytes())
+        (ex_s, ex_b), (co_s, co_b) = row["exact"], row["coarse"]
+        emit(f"exp2/candidate_sweep_n{n}", co_s * 1e6,
+             f"exact_s={ex_s:.3f};coarse_s={co_s:.3f};"
+             f"speedup={ex_s / max(co_s, 1e-9):.2f};"
+             f"exact_bytes={ex_b};coarse_bytes={co_b}")

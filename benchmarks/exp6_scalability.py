@@ -1,4 +1,11 @@
-"""Exp. 6 (Fig. 10): scalability in n (build cost + search latency)."""
+"""Exp. 6 (Fig. 10): scalability in n (build cost + search latency).
+
+Each size row carries the builder's wall-clock stage breakdown
+(``cand``/``prune``/``insert``/``freeze`` seconds, from
+``MSTGIndex.build_stats``) so the n-scaling of the candidate stage —
+quadratic under ``candidate_stage="exact"``, sub-quadratic under
+``"coarse"`` — is visible per row, and a candidate-vs-exact pair is
+emitted at the largest size."""
 import numpy as np
 
 from repro.core import MSTGIndex, Overlaps, QueryEngine
@@ -7,9 +14,19 @@ from repro.data import make_queries, brute_force_topk
 from .common import Q, K, QUICK, bench_dataset, emit, request, time_call
 
 
+def _stage_breakdown(idx: MSTGIndex) -> str:
+    """candidate/prune/insert/freeze seconds summed over built variants."""
+    fields = (("cand", "candidate_s"), ("prune", "prune_s"),
+              ("insert", "insert_s"), ("freeze", "freeze_s"))
+    tot = {short: sum(s.get(key, 0.0) for s in idx.build_stats.values())
+           for short, key in fields}
+    return ";".join(f"{short}_s={v:.2f}" for short, v in tot.items())
+
+
 def run():
     pred = Overlaps()
-    for n in ((800, 1600) if QUICK else (1000, 2000, 4000)):
+    sizes = (800, 1600) if QUICK else (1000, 2000, 4000)
+    for n in sizes:
         ds = bench_dataset(n=n, seed=5)
         idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T", "Tp"),
                         m=12, ef_con=64)
@@ -22,4 +39,20 @@ def run():
         emit(f"exp6/n{n}", dt / Q * 1e6,
              f"recall@10={res.recall_vs(tids):.3f};"
              f"build_s={sum(idx.build_seconds.values()):.1f};"
-             f"bytes={idx.index_bytes()}")
+             f"bytes={idx.index_bytes()};{_stage_breakdown(idx)}")
+    # candidate-stage pair at the largest size: same corpus/params, exact
+    # vs coarse candidate generation (threshold lowered so the quantizer
+    # actually engages at bench scale)
+    n = sizes[-1]
+    ds = bench_dataset(n=n, seed=5)
+    row = {}
+    for stage in ("exact", "coarse"):
+        idx = MSTGIndex(ds.vectors, ds.lo, ds.hi, variants=("T",),
+                        m=12, ef_con=64, candidate_stage=stage,
+                        coarse_threshold=n // 4)
+        row[stage] = (sum(idx.build_seconds.values()), idx)
+    ex_s, co_s = row["exact"][0], row["coarse"][0]
+    emit(f"exp6/candidate_stage_n{n}", co_s * 1e6,
+         f"exact_s={ex_s:.2f};coarse_s={co_s:.2f};"
+         f"speedup={ex_s / max(co_s, 1e-9):.2f};"
+         f"{_stage_breakdown(row['coarse'][1])}")

@@ -28,6 +28,18 @@ def main() -> None:
                          "BENCH_smoke.json / BENCH_scale.json)")
     ap.add_argument("--scale-n", type=int, default=200_000,
                     help="--scale corpus size (default 200000)")
+    ap.add_argument("--graph-n", type=int, default=0,
+                    help="--scale graph-lane corpus size (0 = lane off; "
+                         "the scheduled CI lane runs 1000000)")
+    ap.add_argument("--graph-shards", default="8",
+                    help="--scale graph-lane comma-separated shard counts "
+                         "(default 8)")
+    ap.add_argument("--graph-efs", default="48,96",
+                    help="--scale graph-lane comma-separated ef values "
+                         "(default 48,96)")
+    ap.add_argument("--build-workers", type=int, default=0,
+                    help="process-pool width for --scale graph-lane shard "
+                         "builds (0 = serial)")
     ap.add_argument("--shards", default="1,2,4,8",
                     help="--scale comma-separated shard counts "
                          "(default 1,2,4,8)")
@@ -69,7 +81,12 @@ def main() -> None:
         run_scale(out_path=args.out or "BENCH_scale.json", n=args.scale_n,
                   mask=parse_mask(args.mask),
                   shard_counts=tuple(int(s) for s in args.shards.split(",")),
-                  history_path=args.history)
+                  history_path=args.history, graph_n=args.graph_n,
+                  graph_shards=tuple(int(s)
+                                     for s in args.graph_shards.split(",")),
+                  graph_efs=tuple(int(e)
+                                  for e in args.graph_efs.split(",")),
+                  build_workers=args.build_workers)
         return
 
     from . import (exp1_rrann, exp2_index_cost, exp3_rfann, exp4_ifann,

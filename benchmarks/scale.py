@@ -24,6 +24,19 @@ Ground truth is sampled: exact single-device flat top-k over the (Q-sized)
 query sample, not the full query distribution. The headline ``sharded_qps``
 (largest shard count at full fan-in, i.e. recall-exact) feeds
 ``benchmarks.ci_gate`` through the shared BENCH_history.jsonl.
+
+**Graph lane** (``graph_n > 0``): the coarse-quantizer candidate stage
+(``IndexSpec(candidate_stage="coarse")``) plus shard-parallel builds make
+MSTG construction sub-quadratic, so the *graph* route is now buildable at
+n=1M — each shard builds an independent coarse-stage MSTG over its slice
+and requests fan out exactly as above. The lane builds one deployment per
+shard count, records the build cost (wall seconds, per-shard worker
+seconds, pool size, ``rows/sec``), and sweeps ``ef`` for the recall-QPS
+trade. Headlines ``graph_build_rows_per_sec`` (gate direction: max) and
+``scale_graph_qps`` feed ``benchmarks.ci_gate`` through the shared
+history. QUERY_CONTAINED single-variant (``("T",)``) keeps the per-shard
+index one graph per tree level — the 1M scale config from the paper's
+containment experiments.
 """
 from __future__ import annotations
 
@@ -36,7 +49,7 @@ import numpy as np
 
 import jax
 
-from repro.core import ANY_OVERLAP, SearchRequest, intervals as iv
+from repro.core import ANY_OVERLAP, IndexSpec, SearchRequest, intervals as iv
 from repro.data import make_range_dataset, make_queries, recall_at_k
 from repro.distributed import DeploymentSpec, ShardedDeployment
 from repro.launch.mesh import make_mesh
@@ -55,18 +68,88 @@ def _pareto_point(dep: ShardedDeployment, req: SearchRequest, tids,
             "merge": res.report.merge}
 
 
+def _graph_spec(workers: int) -> "DeploymentSpec":
+    """Per-shard build spec for the graph lane: QUERY_CONTAINED
+    single-variant MSTG with the sub-quadratic coarse candidate stage —
+    the configuration that makes the n=1M graph build tractable."""
+    ispec = IndexSpec(predicate=iv.QUERY_CONTAINED, variants=("T",),
+                      m=8, ef_con=48, batch_size=512,
+                      candidate_stage="coarse")
+    return DeploymentSpec(index=ispec, merge="host",
+                          build_workers=workers)
+
+
+def run_graph_lane(report: dict, *, graph_n: int, d: int, n_queries: int,
+                   k: int, shard_counts=(8,), efs=(48, 96),
+                   build_workers: int = 0) -> None:
+    """Graph-route section of the scale lane (see module docstring): build
+    one coarse-stage sharded MSTG deployment per shard count, record build
+    cost, sweep ``ef``. Mutates ``report`` in place — adds ``graph`` (full
+    sweep) plus the ``graph_build_rows_per_sec`` / ``scale_graph_qps`` /
+    ``graph_recall_at_10`` headlines (largest shard count; best-recall ef
+    for the recall headline, best qps for the qps one)."""
+    mask = iv.QUERY_CONTAINED
+    t0 = time.perf_counter()
+    ds = make_range_dataset(n=graph_n, d=d, n_queries=n_queries,
+                            quantize=256, dist="uniform", seed=0)
+    qlo, qhi = make_queries(ds, mask, 0.05, seed=11)
+    gt = ShardedDeployment.flat(ds.vectors, ds.lo, ds.hi,
+                                spec=DeploymentSpec(n_shards=1, merge="host"))
+    req0 = SearchRequest(ds.queries, (qlo, qhi), mask, k=k)
+    tids = gt.execute(req0).ids
+    graph: dict = {"n": graph_n, "mask": iv.mask_name(mask),
+                   "dataset_seconds": round(time.perf_counter() - t0, 2),
+                   "builds": [], "sweep": []}
+    for D in shard_counts:
+        t0 = time.perf_counter()
+        dep = ShardedDeployment.build(ds.vectors, ds.lo, ds.hi,
+                                      spec=_graph_spec(build_workers)
+                                      .replace(n_shards=D))
+        br = dep.build_report
+        graph["builds"].append({
+            "shards": D,
+            "pool_size": br["pool_size"],
+            "build_seconds": round(br["wall_s"], 2),
+            "shard_seconds": [round(s, 2) for s in br["shard_seconds"]],
+            "rows_per_sec": round(br["rows_per_sec"], 1),
+        })
+        print(f"  graph build shards={D} pool={br['pool_size']} "
+              f"{br['wall_s']:.1f}s ({br['rows_per_sec']:.0f} rows/s)")
+        for ef in efs:
+            req = SearchRequest(ds.queries, (qlo, qhi), mask, k=k, ef=ef,
+                                route="graph")
+            point = _pareto_point(dep, req, tids)
+            point.update({"shards": D, "ef": ef})
+            graph["sweep"].append(point)
+            print(f"  graph shards={D} ef={ef} "
+                  f"recall@10={point['recall_at_10']:.3f} "
+                  f"qps={point['qps']:.0f}")
+    report["graph"] = graph
+    big = max(s for s in shard_counts)
+    build = next(b for b in graph["builds"] if b["shards"] == big)
+    pts = [p for p in graph["sweep"] if p["shards"] == big]
+    report["graph_build_rows_per_sec"] = build["rows_per_sec"]
+    report["scale_graph_qps"] = max(p["qps"] for p in pts)
+    report["graph_recall_at_10"] = max(p["recall_at_10"] for p in pts)
+
+
 def run_scale(out_path: str = "BENCH_scale.json", n: int = 200_000,
               d: int = 32, n_queries: int = 32, k: int = 10,
               mask: int = ANY_OVERLAP, shard_counts=(1, 2, 4, 8),
-              fan_ins=(1, 2, 4, 0), history_path: str = None) -> dict:
+              fan_ins=(1, 2, 4, 0), history_path: str = None,
+              graph_n: int = 0, graph_shards=(8,), graph_efs=(48, 96),
+              build_workers: int = 0) -> dict:
     """Sweep shard count x per-shard fan-in; write BENCH_scale.json.
 
     ``fan_ins`` entries are ``per_shard_k`` values (0 = full k). Shard
     counts beyond the device count fall back to the host merge path (still
-    measured, flagged ``merge: "host"``)."""
+    measured, flagged ``merge: "host"``). ``graph_n > 0`` additionally runs
+    the graph lane (:func:`run_graph_lane`): sharded coarse-stage MSTG
+    builds + an ef sweep at that corpus size, with ``build_workers`` wide
+    process pools for the per-shard builds."""
     n_dev = len(jax.devices())
     report: dict = {
-        "schema": 1,
+        "schema": 2,
         "unix_time": time.time(),
         "platform": platform.platform(),
         "mask": iv.mask_name(mask),
@@ -111,6 +194,11 @@ def run_scale(out_path: str = "BENCH_scale.json", n: int = 200_000,
                                       if headline else None)
     report["sharded_shards"] = headline["shards"] if headline else None
 
+    if graph_n:
+        run_graph_lane(report, graph_n=graph_n, d=d, n_queries=n_queries,
+                       k=k, shard_counts=graph_shards, efs=graph_efs,
+                       build_workers=build_workers)
+
     with open(out_path, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -128,6 +216,15 @@ def run_scale(out_path: str = "BENCH_scale.json", n: int = 200_000,
             "sharded_shards": report["sharded_shards"],
             "pareto": pareto,
         }
+        if graph_n:
+            record.update({
+                "graph_n": graph_n,
+                "graph_build_rows_per_sec":
+                    report["graph_build_rows_per_sec"],
+                "scale_graph_qps": report["scale_graph_qps"],
+                "graph_recall_at_10": report["graph_recall_at_10"],
+                "graph_builds": report["graph"]["builds"],
+            })
         with open(history_path, "a") as f:
             f.write(json.dumps(record, sort_keys=True) + "\n")
         print(f"appended {history_path}: sharded_qps="

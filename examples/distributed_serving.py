@@ -54,12 +54,24 @@ def main():
     print(f"  per_shard_k=4: recall@10={recall_at_k(r4.ids, tids):.3f} "
           f"(fan-in 4/10 per shard)")
 
-    # per-shard MSTG graph engines + shard loss: answers degrade, never raise
+    # per-shard MSTG graph engines + shard loss: answers degrade, never raise.
+    # Shards build through the coarse-quantizer candidate stage in a process
+    # pool (the same configuration the scheduled scale lane runs at n=1M —
+    # here the corpus is demo-sized, so the threshold is lowered to engage
+    # the quantizer); build_report attributes wall clock per worker
     dep = ShardedDeployment.build(
         ds.vectors, ds.lo, ds.hi, mesh=mesh,
         spec=DeploymentSpec(n_shards=8,
                             engine=EngineConfig(route="graph"),
-                            index=IndexSpec(predicate=pred, m=12, ef_con=64)))
+                            index=IndexSpec(predicate=pred, m=12, ef_con=64,
+                                            candidate_stage="coarse",
+                                            coarse_threshold=256),
+                            build_workers=2))
+    rep = dep.build_report
+    print(f"  graph shard build: pool_size={rep['pool_size']} "
+          f"wall={rep['wall_s']:.2f}s "
+          f"rows/s={rep['rows_per_sec']:.0f} "
+          f"slowest shard={max(rep['shard_seconds']):.2f}s")
     dep.fail(3)
     res = dep.execute(req)
     print(f"  graph shards, shard 3 down: degraded={res.degraded} "

@@ -423,9 +423,20 @@ class IndexSpec:
     — :mod:`repro.core.quant`); because it lives on the spec it travels
     through persistence *and* through streaming flush/compact, so
     segments quantize in the background automatically.
+
+    ``candidate_stage`` picks the bulk builder's candidate generator:
+    ``"exact"`` (all-pairs matmul per batch, O(n^2) total) or ``"coarse"``
+    (IVF-style k-means quantizer — candidates from the ``n_probe`` nearest
+    of ``n_clusters`` centroids' buckets, sub-quadratic; see
+    :mod:`repro.core.build`). ``n_clusters=None`` sizes the quantizer
+    automatically (~``16*sqrt(n)``); ``coarse_threshold`` is the inserted-
+    prefix size below which batches keep the exact path bit-identically
+    (None = the builder default, 4096). Like ``storage_dtype``, these ride
+    the spec through persistence and streaming flush/compact.
     The spec is stored on the index and persisted by ``save()``; artifacts
-    written before the ``builder`` / ``storage_dtype`` fields existed load
-    as ``"bulk"`` / ``"float32"``.
+    written before the ``builder`` / ``storage_dtype`` /
+    ``candidate_stage`` fields existed load as ``"bulk"`` / ``"float32"``
+    / ``"exact"``.
     """
 
     predicate: Predicate = None
@@ -437,6 +448,10 @@ class IndexSpec:
     builder: str = "bulk"
     batch_size: Optional[int] = None
     storage_dtype: str = "float32"
+    candidate_stage: str = "exact"
+    n_clusters: Optional[int] = None
+    n_probe: int = 8
+    coarse_threshold: Optional[int] = None
 
     def __post_init__(self):
         from . import intervals as iv
@@ -444,13 +459,25 @@ class IndexSpec:
         object.__setattr__(self, "predicate", as_predicate(pred))
         if self.variants is not None:
             object.__setattr__(self, "variants", tuple(self.variants))
-        from .build import BUILDERS  # deferred: keep api.py import-light
+        from .build import BUILDERS, CANDIDATE_STAGES  # deferred: import-light
         if self.builder not in BUILDERS:
             raise ValueError(f"unknown builder {self.builder!r}; expected "
                              f"one of {BUILDERS}")
         if self.batch_size is not None and self.batch_size < 1:
             raise ValueError("batch_size must be >= 1 (or None for the "
                              "builder default)")
+        if self.candidate_stage not in CANDIDATE_STAGES:
+            raise ValueError(f"unknown candidate_stage "
+                             f"{self.candidate_stage!r}; expected one of "
+                             f"{CANDIDATE_STAGES}")
+        if self.n_clusters is not None and self.n_clusters < 1:
+            raise ValueError("n_clusters must be >= 1 (or None for the "
+                             "automatic size)")
+        if self.n_probe < 1:
+            raise ValueError("n_probe must be >= 1")
+        if self.coarse_threshold is not None and self.coarse_threshold < 1:
+            raise ValueError("coarse_threshold must be >= 1 (or None for "
+                             "the builder default)")
         from .quant import check_storage_dtype  # deferred, like BUILDERS
         object.__setattr__(self, "storage_dtype",
                            check_storage_dtype(self.storage_dtype))
@@ -461,7 +488,10 @@ class IndexSpec:
                 "m": self.m, "ef_con": self.ef_con, "m_max": self.m_max,
                 "n_entries": self.n_entries, "builder": self.builder,
                 "batch_size": self.batch_size,
-                "storage_dtype": self.storage_dtype}
+                "storage_dtype": self.storage_dtype,
+                "candidate_stage": self.candidate_stage,
+                "n_clusters": self.n_clusters, "n_probe": self.n_probe,
+                "coarse_threshold": self.coarse_threshold}
 
     @classmethod
     def from_dict(cls, d: dict) -> "IndexSpec":
@@ -472,4 +502,8 @@ class IndexSpec:
                    n_entries=d["n_entries"],
                    builder=d.get("builder", "bulk"),
                    batch_size=d.get("batch_size"),
-                   storage_dtype=d.get("storage_dtype", "float32"))
+                   storage_dtype=d.get("storage_dtype", "float32"),
+                   candidate_stage=d.get("candidate_stage", "exact"),
+                   n_clusters=d.get("n_clusters"),
+                   n_probe=d.get("n_probe", 8),
+                   coarse_threshold=d.get("coarse_threshold"))

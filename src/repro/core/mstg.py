@@ -45,6 +45,7 @@ from . import intervals as iv
 from . import segment_tree as st
 from .api import IndexSpec
 from .build import BUILDERS, bulk_insert_levels
+from .parallel import pool_size, run_build_pool
 from .hnsw import OPEN, NO_EDGE, LabeledLevelGraph
 from .predicates import Predicate, as_mask
 from .quant import QuantizedStore, check_storage_dtype, maybe_quantize
@@ -178,12 +179,19 @@ def build_variant(vectors: np.ndarray, rl: np.ndarray, rr: np.ndarray, K: int,
                   variant: str, m: int = 16, ef_con: int = 100,
                   m_max: Optional[int] = None, n_entries: int = 4,
                   progress: Optional[int] = None, builder: str = "bulk",
-                  batch_size: Optional[int] = None) -> FrozenVariant:
+                  batch_size: Optional[int] = None,
+                  candidate_stage: str = "exact",
+                  n_clusters: Optional[int] = None, n_probe: int = 8,
+                  coarse_threshold: Optional[int] = None,
+                  stats: Optional[dict] = None) -> FrozenVariant:
     """Algorithms 1+2: MSTG construction for one variant.
 
     ``builder="bulk"`` (default) batches candidate generation and pruning
     (:mod:`repro.core.build`); ``builder="incremental"`` is the paper-exact
     per-object reference path. Both freeze to the identical array schema.
+    ``candidate_stage``/``n_clusters``/``n_probe``/``coarse_threshold``
+    tune the bulk path's candidate generator (exact all-pairs vs coarse
+    quantizer); ``stats`` (a dict) collects its wall-clock stage breakdown.
     """
     if builder == "scan":
         return build_scan_variant(rl, rr, K, variant, n_entries=n_entries)
@@ -197,7 +205,11 @@ def build_variant(vectors: np.ndarray, rl: np.ndarray, rr: np.ndarray, K: int,
         levels = bulk_insert_levels(vectors, order, sort_rank, tkey, Lv, m=m,
                                     ef_con=ef_con, m_max=m_max,
                                     n_entries=n_entries, batch_size=batch_size,
-                                    progress=progress, variant=variant)
+                                    progress=progress, variant=variant,
+                                    candidate_stage=candidate_stage,
+                                    n_clusters=n_clusters, n_probe=n_probe,
+                                    coarse_threshold=coarse_threshold,
+                                    stats=stats)
     elif builder == "incremental":
         levels = _insert_incremental(vectors, order, sort_rank, tkey, Lv, m=m,
                                      ef_con=ef_con, m_max=m_max,
@@ -208,14 +220,19 @@ def build_variant(vectors: np.ndarray, rl: np.ndarray, rr: np.ndarray, K: int,
                          f"{BUILDERS}")
 
     # freeze adjacency with a uniform slot count across levels
+    t0 = time.perf_counter()
     S = max(max(g.max_slots(n) for g in levels), 1)
-    nbr = np.full((Lv, n, S), NO_EDGE, dtype=np.int32)
-    lab_b = np.zeros((Lv, n, S), dtype=np.int32)
-    lab_e = np.zeros((Lv, n, S), dtype=np.int32)
+    nbr = np.empty((Lv, n, S), dtype=np.int32)
+    lab_b = np.empty((Lv, n, S), dtype=np.int32)
+    lab_e = np.empty((Lv, n, S), dtype=np.int32)
     for lvl, g in enumerate(levels):
-        t, b, e = g.freeze(n, slots=S)
-        nbr[lvl], lab_b[lvl], lab_e[lvl] = t, b, e
+        g.freeze(n, slots=S, out=(nbr[lvl], lab_b[lvl], lab_e[lvl]))
+    if stats is not None:
+        stats["freeze_s"] = (stats.get("freeze_s", 0.0)
+                             + time.perf_counter() - t0)
+        stats["slots"] = S
 
+    t0 = time.perf_counter()
     E = n_entries
     entry_ids = np.full((Lv, Kpad, E), NO_EDGE, dtype=np.int32)
     entry_ver = np.full((Lv, Kpad, E), OPEN, dtype=np.int32)
@@ -237,10 +254,23 @@ def build_variant(vectors: np.ndarray, rl: np.ndarray, rr: np.ndarray, K: int,
                 entry_ids[lvl, node, :len(ent)] = ent
                 entry_ver[lvl, node, :len(ent)] = vers[:len(ent)]
         node_off[lvl, 1:] = np.cumsum(counts[:-1])[:Kpad]
+    if stats is not None:
+        stats["pack_s"] = (stats.get("pack_s", 0.0)
+                           + time.perf_counter() - t0)
     return FrozenVariant(variant=variant, K=K, Kpad=Kpad, Lv=Lv, n=n,
                          sort_rank=sort_rank, tkey=tkey, nbr=nbr, lab_b=lab_b,
                          lab_e=lab_e, entry_ids=entry_ids, entry_ver=entry_ver,
                          members=members, member_ver=member_ver, node_off=node_off)
+
+
+def _variant_build_task(args):
+    """Module-level worker body for parallel variant builds (spawn-context
+    process pools need a picklable, importable callable)."""
+    vectors, rl, rr, K, v, kwargs = args
+    stats: dict = {}
+    t0 = time.perf_counter()
+    fv = build_variant(vectors, rl, rr, K, v, stats=stats, **kwargs)
+    return v, fv, stats, time.perf_counter() - t0
 
 
 class MSTGIndex:
@@ -255,7 +285,10 @@ class MSTGIndex:
                  n_entries: int = 4, domain: Optional[iv.AttributeDomain] = None,
                  progress: Optional[int] = None, builder: str = "bulk",
                  batch_size: Optional[int] = None,
-                 storage_dtype: str = "float32"):
+                 storage_dtype: str = "float32",
+                 candidate_stage: str = "exact",
+                 n_clusters: Optional[int] = None, n_probe: int = 8,
+                 coarse_threshold: Optional[int] = None, workers: int = 0):
         vectors = np.ascontiguousarray(vectors, dtype=np.float32)
         lo = np.asarray(lo, dtype=np.float64)
         hi = np.asarray(hi, dtype=np.float64)
@@ -269,7 +302,10 @@ class MSTGIndex:
         self.rr = self.domain.rank(hi)
         storage_dtype = check_storage_dtype(storage_dtype)
         self.params = dict(m=m, ef_con=ef_con, m_max=m_max, n_entries=n_entries,
-                           builder=builder, batch_size=batch_size)
+                           builder=builder, batch_size=batch_size,
+                           candidate_stage=candidate_stage,
+                           n_clusters=n_clusters, n_probe=n_probe,
+                           coarse_threshold=coarse_threshold)
         # quantize at build time (per index / per streaming segment — the
         # scales fit THIS corpus); None for float32
         self.storage = maybe_quantize(vectors, storage_dtype)
@@ -279,31 +315,61 @@ class MSTGIndex:
                               m=m, ef_con=ef_con, m_max=m_max,
                               n_entries=n_entries, builder=builder,
                               batch_size=batch_size,
-                              storage_dtype=storage_dtype)
+                              storage_dtype=storage_dtype,
+                              candidate_stage=candidate_stage,
+                              n_clusters=n_clusters, n_probe=n_probe,
+                              coarse_threshold=coarse_threshold)
         self.build_seconds: Dict[str, float] = {}
+        self.build_stats: Dict[str, dict] = {}
+        self.build_workers = 0
         self.variants: Dict[str, FrozenVariant] = {}
-        for v in variants:
-            t0 = time.perf_counter()
-            self.variants[v] = build_variant(
-                vectors, self.rl, self.rr, self.domain.K, v, m=m, ef_con=ef_con,
-                m_max=m_max, n_entries=n_entries, progress=progress,
-                builder=builder, batch_size=batch_size)
-            self.build_seconds[v] = time.perf_counter() - t0
+        bv_kwargs = dict(m=m, ef_con=ef_con, m_max=m_max, n_entries=n_entries,
+                         progress=progress, builder=builder,
+                         batch_size=batch_size,
+                         candidate_stage=candidate_stage,
+                         n_clusters=n_clusters, n_probe=n_probe,
+                         coarse_threshold=coarse_threshold)
+        vlist = list(variants)
+        results = run_build_pool(
+            _variant_build_task,
+            [(vectors, self.rl, self.rr, self.domain.K, v, bv_kwargs)
+             for v in vlist],
+            workers=int(workers or 0), label="variant")
+        if results is not None:
+            self.build_workers = pool_size(int(workers), len(vlist))
+            for v, fv, stats, secs in results:
+                self.variants[v] = fv
+                self.build_stats[v] = stats
+                self.build_seconds[v] = secs
+        else:
+            for v in vlist:
+                stats: dict = {}
+                t0 = time.perf_counter()
+                self.variants[v] = build_variant(
+                    vectors, self.rl, self.rr, self.domain.K, v, stats=stats,
+                    **bv_kwargs)
+                self.build_seconds[v] = time.perf_counter() - t0
+                self.build_stats[v] = stats
 
     # ---- lifecycle ----
     @classmethod
     def build(cls, spec: IndexSpec, vectors: np.ndarray, lo: np.ndarray,
               hi: np.ndarray, domain: Optional[iv.AttributeDomain] = None,
-              progress: Optional[int] = None) -> "MSTGIndex":
+              progress: Optional[int] = None, workers: int = 0) -> "MSTGIndex":
         """Declarative construction from an :class:`repro.core.api.IndexSpec`:
         the spec's predicate decides which variants are built (unless pinned),
-        and the spec travels with the index through ``save()``/``load()``."""
+        and the spec travels with the index through ``save()``/``load()``.
+        ``workers > 1`` builds independent variants in a spawn process pool
+        (an execution resource, so it is an argument here — not spec state)."""
         return cls(vectors, lo, hi, mask=spec.predicate.mask,
                    variants=spec.variants, m=spec.m, ef_con=spec.ef_con,
                    m_max=spec.m_max, n_entries=spec.n_entries,
                    domain=domain, progress=progress, builder=spec.builder,
                    batch_size=spec.batch_size,
-                   storage_dtype=spec.storage_dtype)
+                   storage_dtype=spec.storage_dtype,
+                   candidate_stage=spec.candidate_stage,
+                   n_clusters=spec.n_clusters, n_probe=spec.n_probe,
+                   coarse_threshold=spec.coarse_threshold, workers=workers)
 
     def to_payload(self) -> Tuple[Dict[str, np.ndarray], dict]:
         """The persisted form: (arrays, meta). Embedders (e.g. the streaming
@@ -319,6 +385,10 @@ class MSTGIndex:
                 "spec": self.spec.to_dict(), "params": self.params,
                 "build_seconds": {k: float(v) for k, v in
                                   self.build_seconds.items()},
+                "build_stats": {k: {f: (float(x) if isinstance(x, float)
+                                        else int(x))
+                                    for f, x in v.items()}
+                                for k, v in self.build_stats.items()},
                 "variants": {}}
         for name, fv in self.variants.items():
             meta["variants"][name] = {"K": fv.K, "Kpad": fv.Kpad,
@@ -357,6 +427,9 @@ class MSTGIndex:
                             or maybe_quantize(self.vectors,
                                               self.spec.storage_dtype))
         self.build_seconds = dict(meta.get("build_seconds", {}))
+        self.build_stats = {k: dict(v) for k, v in
+                            meta.get("build_stats", {}).items()}
+        self.build_workers = 0
         self.variants = {}
         for name, scal in meta["variants"].items():
             self.variants[name] = FrozenVariant(

@@ -53,6 +53,7 @@ from repro.core.engine import EngineConfig, QueryEngine
 from repro.core.flat import flat_search
 from repro.core.hnsw import NO_EDGE
 from repro.core.mstg import MSTGIndex
+from repro.core.parallel import pool_size, run_build_pool
 
 from .fault import HeartbeatRegistry
 from .topk import resolve_merge, sharded_flat_topk, sharded_topk_merge
@@ -91,6 +92,15 @@ class DeploymentSpec:
     index : IndexSpec, optional
         Build spec for :meth:`ShardedDeployment.build` shards (default
         ``IndexSpec()``).
+    build_workers : int
+        Process-pool width for :meth:`ShardedDeployment.build` — shard
+        builds are independent, so ``build_workers > 1`` constructs them
+        concurrently in spawn workers (each streams its own rate-limited
+        build progress; the parent aggregates one pool line per finished
+        shard). ``0``/``1`` = serial. An execution resource, not index
+        state: it never changes the built shards, only the wall clock, and
+        the pool degrades to the serial loop on platforms without process
+        support.
     shard_timeout_s : float
         Heartbeat staleness beyond which a shard counts as lost.
     """
@@ -101,11 +111,14 @@ class DeploymentSpec:
     per_shard_k: int = 0
     engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
     index: Optional[IndexSpec] = None
+    build_workers: int = 0
     shard_timeout_s: float = 30.0
 
     def __post_init__(self):
         if self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
+        if self.build_workers < 0:
+            raise ValueError("build_workers must be >= 0 (0 = serial)")
         if self.merge not in _MERGES:
             raise ValueError(f"merge must be one of {_MERGES}, got "
                              f"{self.merge!r}")
@@ -127,6 +140,19 @@ class _Shard:
     n: int
     id_offset: Optional[int]       # local row -> global id shift; None = the
     #                                engine already returns external ids
+
+
+def _shard_build_task(args):
+    """Module-level worker body for parallel shard builds (spawn-context
+    pools need a picklable top-level callable). Ships the finished index
+    back as its save payload — plain numpy arrays + a meta dict — rather
+    than the live object, and reports the in-worker build seconds so the
+    parent can attribute wall clock per shard."""
+    i, ispec, vectors, lo, hi = args
+    t0 = time.perf_counter()
+    idx = MSTGIndex.build(ispec, vectors, lo, hi)
+    arrays, meta = idx.to_payload()
+    return i, arrays, meta, time.perf_counter() - t0
 
 
 def _host_merge(ids: np.ndarray, dists: np.ndarray, k: int
@@ -170,6 +196,7 @@ class ShardedDeployment:
         self.mesh = mesh
         self._flat = _flat_arrays      # (corpus, lo, hi) for the fused path
         self._failed: set = set()
+        self.build_report: Optional[dict] = None
         self.heartbeats = HeartbeatRegistry(timeout_s=spec.shard_timeout_s)
         now = time.time()
         for s in self.shards:
@@ -181,22 +208,52 @@ class ShardedDeployment:
     def build(cls, vectors, lo, hi, *, spec: Optional[DeploymentSpec] = None,
               mesh=None) -> "ShardedDeployment":
         """Partition rows into ``n_shards`` contiguous slices and build one
-        MSTG index + engine per slice. Result ids are global row indices."""
+        MSTG index + engine per slice. Result ids are global row indices.
+
+        ``spec.build_workers > 1`` builds the shards in a spawn process
+        pool (shard builds share nothing); the pool degrades to the serial
+        loop when process pools are unavailable. Either way the deployment
+        carries a ``build_report`` dict — pool size, wall seconds, per-shard
+        build seconds, rows/sec — for bench attribution."""
         spec = spec or DeploymentSpec()
         vectors = np.ascontiguousarray(vectors, np.float32)
         lo = np.asarray(lo, np.float64)
         hi = np.asarray(hi, np.float64)
         ispec = spec.index or IndexSpec()
-        bounds = np.linspace(0, vectors.shape[0], spec.n_shards + 1,
-                             dtype=np.int64)
-        shards = []
-        for i in range(spec.n_shards):
-            a, b = int(bounds[i]), int(bounds[i + 1])
-            idx = MSTGIndex.build(ispec, vectors[a:b], lo[a:b], hi[a:b])
-            shards.append(_Shard(f"shard-{i}",
-                                 QueryEngine(idx, config=spec.engine),
-                                 b - a, a))
-        return cls(shards, spec, mesh)
+        n = vectors.shape[0]
+        bounds = np.linspace(0, n, spec.n_shards + 1, dtype=np.int64)
+        slices = [(int(bounds[i]), int(bounds[i + 1]))
+                  for i in range(spec.n_shards)]
+        t_wall = time.perf_counter()
+        shard_secs: List[float] = []
+        indexes: List[MSTGIndex] = []
+        results = run_build_pool(
+            _shard_build_task,
+            [(i, ispec, vectors[a:b], lo[a:b], hi[a:b])
+             for i, (a, b) in enumerate(slices)],
+            workers=spec.build_workers, label="shard")
+        if results is not None:
+            for _i, arrays, meta, secs in results:
+                indexes.append(MSTGIndex.from_payload(arrays, meta))
+                shard_secs.append(float(secs))
+        else:
+            for a, b in slices:
+                t0 = time.perf_counter()
+                indexes.append(
+                    MSTGIndex.build(ispec, vectors[a:b], lo[a:b], hi[a:b]))
+                shard_secs.append(time.perf_counter() - t0)
+        shards = [_Shard(f"shard-{i}",
+                         QueryEngine(idx, config=spec.engine), b - a, a)
+                  for i, (idx, (a, b)) in enumerate(zip(indexes, slices))]
+        wall = time.perf_counter() - t_wall
+        self = cls(shards, spec, mesh)
+        self.build_report = {
+            "pool_size": pool_size(spec.build_workers, spec.n_shards),
+            "wall_s": wall,
+            "shard_seconds": shard_secs,
+            "rows_per_sec": n / wall if wall > 0 else 0.0,
+        }
+        return self
 
     @classmethod
     def from_segmented(cls, segmented, *,

@@ -156,16 +156,23 @@ class SegmentedIndex:
         Legacy spelling of ``engine_config`` — converted through
         ``EngineConfig(**engine_kwargs)`` (and applied on top of
         ``engine_config`` when both are given).
+    build_workers : int
+        Process-pool width for segment freezes (:meth:`flush` /
+        :meth:`compact` — a freeze builds the spec's variants, which are
+        independent). ``0``/``1`` = serial. An execution resource, not
+        index state: it never changes the frozen segment.
     """
 
     def __init__(self, spec: Optional[IndexSpec] = None, *,
                  policy: Optional[CompactionPolicy] = None,
                  flush_threshold: Optional[int] = None,
                  engine_config: Optional[EngineConfig] = None,
-                 engine_kwargs: Optional[dict] = None):
+                 engine_kwargs: Optional[dict] = None,
+                 build_workers: int = 0):
         self.spec = spec if spec is not None else IndexSpec()
         self.policy = policy or CompactionPolicy()
         self.flush_threshold = flush_threshold
+        self.build_workers = int(build_workers)
         cfg = engine_config if engine_config is not None else EngineConfig()
         if engine_kwargs:
             cfg = cfg.replace(**engine_kwargs)
@@ -280,7 +287,7 @@ class SegmentedIndex:
         order = np.argsort(ext, kind="stable")
         seg = Segment(self._next_seg_id(),
                       MSTGIndex.build(self.spec, vecs[order], lo[order],
-                                      hi[order]),
+                                      hi[order], workers=self.build_workers),
                       np.ascontiguousarray(ext[order], np.int64))
         self.segments.append(seg)
         for e in seg.ext_ids:

@@ -148,6 +148,91 @@ def test_batch_size_only_perturbs_adjacency(ds):
         assert res.recall_vs(tids) == 1.0
 
 
+# ---- coarse candidate stage (sub-quadratic builds) ----
+
+COARSE_KW = dict(variants=("T", "Tp", "Tpp"), m=8, ef_con=48,
+                 candidate_stage="coarse", coarse_threshold=100)
+
+
+@pytest.fixture(scope="module")
+def coarse_idx(ds):
+    """Coarse-stage build with the threshold lowered so the quantizer
+    actually engages at test scale (default threshold > n here)."""
+    return MSTGIndex(ds.vectors, ds.lo, ds.hi, **COARSE_KW)
+
+
+@pytest.mark.parametrize("mask", MASKS, ids=iv.mask_name)
+def test_coarse_recall_parity_all_masks_all_routes(ds, coarse_idx, mask):
+    """The coarse candidate stage keeps full recall on the same 8-mask x
+    3-route grid the exact stage is held to."""
+    qlo, qhi = make_queries(ds, mask, 0.15, seed=5)
+    tids, _ = brute_force_topk(ds.vectors, ds.lo, ds.hi, ds.queries,
+                               qlo, qhi, mask, 10)
+    eng = QueryEngine(coarse_idx)
+    for route in ROUTES:
+        res = eng.search(SearchRequest(ds.queries, (qlo, qhi), mask, k=10,
+                                       ef=96, route=route))
+        assert res.recall_vs(tids) == 1.0, (iv.mask_name(mask), route)
+
+
+def test_coarse_build_is_deterministic(ds):
+    a = MSTGIndex(ds.vectors, ds.lo, ds.hi, **COARSE_KW)
+    b = MSTGIndex(ds.vectors, ds.lo, ds.hi, **COARSE_KW)
+    for name in a.variants:
+        fa, fb = a.variants[name], b.variants[name]
+        for field in _EXACT_FIELDS + _ADJ_FIELDS:
+            np.testing.assert_array_equal(getattr(fa, field),
+                                          getattr(fb, field),
+                                          err_msg=f"{name}.{field}")
+
+
+def test_coarse_threshold_fallback_bit_identical(ds):
+    """Batches below ``coarse_threshold`` run the literal exact code path,
+    so a threshold at or above n makes candidate_stage="coarse" produce a
+    bit-identical index to the exact stage."""
+    kw = dict(variants=("T",), m=8, ef_con=40)
+    exact = MSTGIndex(ds.vectors, ds.lo, ds.hi, candidate_stage="exact",
+                      **kw)
+    gated = MSTGIndex(ds.vectors, ds.lo, ds.hi, candidate_stage="coarse",
+                      coarse_threshold=ds.vectors.shape[0], **kw)
+    for field in _EXACT_FIELDS + _ADJ_FIELDS:
+        np.testing.assert_array_equal(getattr(exact.variants["T"], field),
+                                      getattr(gated.variants["T"], field),
+                                      err_msg=field)
+
+
+def test_candidate_stage_spec_round_trip(ds, coarse_idx, tmp_path):
+    """The candidate-stage knobs ride IndexSpec through to_dict/from_dict
+    and save/load; artifacts from before the knobs existed load as the
+    exact stage."""
+    spec = coarse_idx.spec
+    assert spec.candidate_stage == "coarse"
+    assert spec.coarse_threshold == 100
+    assert IndexSpec.from_dict(spec.to_dict()) == spec
+    legacy = {k: v for k, v in spec.to_dict().items()
+              if k not in ("candidate_stage", "n_clusters", "n_probe",
+                           "coarse_threshold")}
+    pre = IndexSpec.from_dict(legacy)
+    assert pre.candidate_stage == "exact" and pre.n_clusters is None
+    path = str(tmp_path / "coarse.npz")
+    coarse_idx.save(path)
+    loaded = MSTGIndex.load(path)
+    assert loaded.spec == spec
+    for name, fv in coarse_idx.variants.items():
+        for field in _EXACT_FIELDS + _ADJ_FIELDS:
+            np.testing.assert_array_equal(getattr(fv, field),
+                                          getattr(loaded.variants[name],
+                                                  field))
+    with pytest.raises(ValueError):
+        IndexSpec(candidate_stage="nope")
+    with pytest.raises(ValueError):
+        IndexSpec(n_clusters=0)
+    with pytest.raises(ValueError):
+        IndexSpec(n_probe=0)
+    with pytest.raises(ValueError):
+        IndexSpec(coarse_threshold=0)
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.integers(0, 2 ** 32 - 1), st.integers(2, 40), st.integers(1, 12))
 def test_rng_prune_batch_matches_sequential(seed, n_cand, m):

@@ -171,10 +171,37 @@ def test_from_segmented_matches_direct_search(small_ds):
     assert b.recall_vs(a) == 1.0
 
 
+def test_parallel_build_matches_serial(small_ds):
+    """build_workers is an execution resource: pooled and serial builds
+    produce deployments that answer identically, and both carry a
+    build_report (pool size, wall seconds, per-shard seconds, rows/sec).
+    On platforms where the spawn pool is unavailable the pooled spec
+    degrades to the serial path — the assertions hold either way."""
+    ds = small_ds
+    ispec = IndexSpec(variants=("T",), m=8, ef_con=32)
+    qlo, qhi = make_queries(ds, ANY_OVERLAP, 0.2, seed=7)
+    req = SearchRequest(ds.queries, (qlo, qhi), ANY_OVERLAP, k=10)
+    deps = {}
+    for w in (0, 2):
+        spec = DeploymentSpec(n_shards=4, index=ispec, build_workers=w)
+        deps[w] = ShardedDeployment.build(ds.vectors, ds.lo, ds.hi,
+                                          spec=spec)
+        br = deps[w].build_report
+        assert set(br) == {"pool_size", "wall_s", "shard_seconds",
+                           "rows_per_sec"}
+        assert len(br["shard_seconds"]) == 4
+        assert br["rows_per_sec"] > 0
+    assert deps[0].build_report["pool_size"] == 0
+    a, b = deps[0].execute(req), deps[2].execute(req)
+    np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+
+
 def test_deployment_spec_validation(small_ds):
     ds = small_ds
     with pytest.raises(ValueError):
         DeploymentSpec(n_shards=0)
+    with pytest.raises(ValueError):
+        DeploymentSpec(build_workers=-1)
     with pytest.raises(ValueError):
         DeploymentSpec(merge="bogus")
     with pytest.raises(ValueError):
